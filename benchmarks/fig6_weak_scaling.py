@@ -1,0 +1,92 @@
+"""Fig. 6 — weak scaling of distributed-mode insertion with runtime
+breakdown (partition / exchange / insert) and efficiency.
+
+The paper scales 1..8 GPUs on a DGX-1 with 2 GB per GPU; we scale 1..8 host
+devices with a fixed per-shard batch (weak scaling), reporting the same
+phase breakdown.  Runs in a subprocess so only this benchmark sees 8
+devices.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_WORKER = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import distributed as dist
+from repro.core import single_value as sv
+
+def bench(num_shards, per_shard):
+    mesh = jax.make_mesh((num_shards,), ('x',),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    table = dist.create_sharded(mesh, 'x', per_shard * 2, window=32)
+    n = num_shards * per_shard
+    keys = jnp.asarray(np.random.default_rng(0).permutation(
+        np.arange(1, n + 1, dtype=np.uint32)))
+    vals = keys * 3
+
+    spec = jax.tree.map(lambda _: P('x'), table)
+
+    # phase 1+2: partition (multisplit) + all_to_all exchange only
+    def route(k, v):
+        num = jax.lax.axis_size('x')
+        k2 = sv.normalize_words(k, 1, 'k')
+        owners = dist.owner_of(k2, num, 1)
+        cap = int(np.ceil(k.shape[0] / num * 2.0))
+        plan = dist.make_plan(owners, num, cap)
+        kb = dist.scatter_to_buffer(plan, k2, num)
+        vb = dist.scatter_to_buffer(plan, sv.normalize_words(v, 1, 'v'), num)
+        return dist.exchange(kb, 'x'), dist.exchange(vb, 'x')
+
+    froute = jax.jit(jax.shard_map(route, mesh=mesh, in_specs=(P('x'), P('x')),
+                                   out_specs=(P('x'), P('x')),
+                                   check_vma=False))
+    fall = jax.jit(lambda t, k, v: dist.shard_insert(mesh, 'x', t, k, v))
+
+    def t(f, *a):
+        jax.block_until_ready(f(*a))
+        t0 = time.perf_counter(); jax.block_until_ready(f(*a))
+        return time.perf_counter() - t0
+
+    t_route = t(froute, keys, vals)
+    t_total = t(fall, table, keys, vals)
+    return dict(shards=num_shards, n=n, t_route=t_route,
+                t_insert=max(t_total - t_route, 0.0), t_total=t_total)
+
+per_shard = 1 << 12
+out = [bench(s, per_shard) for s in (1, 2, 4, 8)]
+print("JSON:" + json.dumps(out))
+"""
+
+
+def run(out=print):
+    env = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", _WORKER], capture_output=True,
+                       text=True, timeout=900, env=env)
+    if r.returncode != 0:
+        out(f"fig6.FAILED,{r.stderr[-200:]}")
+        return
+    data = json.loads([l for l in r.stdout.splitlines()
+                       if l.startswith("JSON:")][0][5:])
+    t1 = data[0]["t_total"]
+    for d in data:
+        # all "devices" share ONE physical core here, so ideal weak scaling
+        # is t_N = N * t_1; eff_1core = N*t1/tN isolates the per-shard
+        # overhead added by multisplit + all_to_all (the paper's Fig-6
+        # breakdown), which IS measurable without real chips.
+        eff = d["shards"] * t1 / d["t_total"]
+        route_frac = d["t_route"] / d["t_total"]
+        out(f"fig6.insert.shards{d['shards']},{d['t_total']*1e6:.0f},"
+            f"{d['n']/d['t_total']/1e6:.3f}Mops/s,"
+            f"route_frac={route_frac:.2f},eff_1core={eff:.2f}")
+
+
+if __name__ == "__main__":
+    run()

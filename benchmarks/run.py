@@ -1,0 +1,35 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus per-row extras).  Scale note:
+CPU container, batch 2^13-2^14 vs the paper's 2^28 on a GV100; the curves'
+*shapes* (who wins where, how throughput scales with density/multiplicity/
+shards) are the reproduction target — see EXPERIMENTS.md §Paper-claims.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig5_single_value, fig6_weak_scaling,
+                            fig7_multi_value, fig8_metagenomics)
+    figures = {
+        "fig5": fig5_single_value.run,
+        "fig6": fig6_weak_scaling.run,
+        "fig7": fig7_multi_value.run,
+        "fig8": fig8_metagenomics.run,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived,extra")
+    for name, fn in figures.items():
+        if only and name != only:
+            continue
+        t0 = time.time()
+        fn(print)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

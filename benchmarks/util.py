@@ -1,0 +1,37 @@
+"""Benchmark timing helpers.
+
+CPU-container scale: batch sizes are 2^13-2^14 (the paper uses 2^28 on a
+GV100).  Throughput numbers are therefore *shape* comparisons against the
+paper's curves (which implementation wins where, how throughput scales with
+density/multiplicity), not absolute-magnitude reproductions — recorded as
+such in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, seconds: float, n_ops: int, extra: str = "") -> str:
+    """CSV row: name,us_per_call,derived(Mops/s)[,extra]"""
+    us = seconds * 1e6
+    mops = n_ops / seconds / 1e6
+    out = f"{name},{us:.1f},{mops:.3f}Mops/s"
+    if extra:
+        out += f",{extra}"
+    return out

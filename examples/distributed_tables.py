@@ -1,0 +1,48 @@
+"""Multi-device hash tables: the paper's distributed + independent modes
+(§IV-E) on 8 host devices.
+
+    PYTHONPATH=src python examples/distributed_tables.py
+(sets XLA_FLAGS itself — run as a standalone script)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.core import distributed as dist                    # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    print(f"mesh: {mesh.devices.size} devices")
+
+    # distributed mode: each key owned by exactly one shard
+    table = dist.create_sharded(mesh, "x", capacity_per_shard=4096, window=32)
+    n = 8 * 2048
+    keys = jnp.asarray(np.random.default_rng(0).permutation(
+        np.arange(1, n + 1, dtype=np.uint32)))
+    vals = keys * 3
+
+    table, status, overflow = dist.shard_insert(mesh, "x", table, keys, vals)
+    print(f"distributed insert: {n} pairs, exchange overflow="
+          f"{int(np.asarray(overflow).sum())} (padded all-to-all, slack 2.0)")
+
+    got, found, _ = dist.shard_retrieve(mesh, "x", table, keys)
+    print(f"distributed retrieve: all found={bool(np.asarray(found).all())}, "
+          f"values ok={bool((np.asarray(got) == np.asarray(vals)).all())}")
+
+    # per-shard occupancy (hash_owner balance)
+    from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
+    kp = np.asarray(table.key_planes())[:, 0]
+    occ = [(int(((kp[s] != EMPTY_KEY) & (kp[s] != TOMBSTONE_KEY)).sum()))
+           for s in range(8)]
+    print(f"per-shard keys: {occ} (balanced by hash_owner)")
+
+
+if __name__ == "__main__":
+    main()

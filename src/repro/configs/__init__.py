@@ -1,0 +1,47 @@
+"""Architecture config registry: ``--arch <id>`` -> ModelConfig."""
+
+from repro.configs import (
+    base,
+    dbrx_132b,
+    deepseek_v2_236b,
+    internvl2_1b,
+    jamba_1_5_large_398b,
+    mistral_large_123b,
+    olmo_1b,
+    rwkv6_3b,
+    smollm_360m,
+    starcoder2_3b,
+    warpcore,
+    whisper_small,
+)
+from repro.configs.base import SHAPES, ModelConfig, ShapeCell, applicable_shapes
+
+_MODULES = {
+    "smollm-360m": smollm_360m,
+    "mistral-large-123b": mistral_large_123b,
+    "starcoder2-3b": starcoder2_3b,
+    "olmo-1b": olmo_1b,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "dbrx-132b": dbrx_132b,
+    "whisper-small": whisper_small,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+    "rwkv6-3b": rwkv6_3b,
+    "internvl2-1b": internvl2_1b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].SMOKE
+
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeCell",
+           "applicable_shapes", "get_config", "get_smoke_config", "base",
+           "warpcore"]

@@ -1,0 +1,185 @@
+"""Config system: ModelConfig + input-shape cells + registry.
+
+Every assigned architecture gets one module in this package defining
+``CONFIG`` (the exact published configuration) and ``SMOKE`` (a reduced
+same-family variant for CPU tests).  ``repro.configs.registry`` maps
+``--arch <id>`` to them.
+
+Shape cells (assigned set, applies to every LM arch):
+  train_4k     seq 4096   global_batch 256   train_step
+  prefill_32k  seq 32768  global_batch 32    prefill (inference forward)
+  decode_32k   seq 32768  global_batch 128   serve_step, 1 token + 32k cache
+  long_500k    seq 524288 global_batch 1     serve_step; sub-quadratic only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | audio | hybrid | ssm | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                # 0 for attention-free
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 1           # jamba: one attention layer per this many
+    moe_every: int = 1            # jamba: MoE each this-many sublayers, dense MLP else
+    encoder_layers: int = 0       # whisper
+    frontend: Optional[str] = None  # 'audio_frames' | 'vit_patches' (stubs)
+    frontend_len: int = 0         # frames/patches per example
+    norm_type: str = "rmsnorm"
+    mlp_kind: str = "swiglu"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # RWKV
+    rwkv_heads: int = 0
+    # activation rematerialization: none | block | dots (checkpoint policy
+    # applied to each scanned block during training)
+    remat: str = "none"
+    # sequence parallelism: shard the (B, S, D) residual stream's S dim over
+    # the model axis between blocks (Megatron-SP).  Divides the per-chip
+    # saved-activation footprint by the TP width; GSPMD inserts the
+    # all-gather before attention and the reduce-scatter after.
+    seq_shard_activations: bool = False
+    # pad attention heads to this TP width so the head dim shards over the
+    # model axis (0 = off).  Critical when num_heads % TP != 0 — otherwise
+    # attention replicates across all TP columns (see §Perf cell 1).
+    attn_tp_pad: int = 0
+    # source + verification tier from the assignment table
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode step (none encoder-only)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + layers), for 6ND math."""
+        d, l = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        # attention
+        if self.mla is not None:
+            m = self.mla
+            qh = m.nope_dim + m.rope_dim
+            per_layer_attn = (d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qh
+                              + d * m.kv_lora_rank + d * m.rope_dim
+                              + m.kv_lora_rank * self.num_heads * (m.nope_dim + m.v_head_dim)
+                              + self.num_heads * m.v_head_dim * d)
+        elif self.family == "ssm":
+            per_layer_attn = 0
+        else:
+            per_layer_attn = (d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+                              + self.num_heads * hd * d)
+        # ffn
+        if self.moe is not None:
+            e = self.moe
+            ffn = (e.num_experts + e.num_shared) * 3 * d * e.d_ff_expert
+        elif self.mlp_kind == "swiglu":
+            ffn = 3 * d * self.d_ff
+        else:
+            ffn = 2 * d * self.d_ff
+        if self.family == "ssm":
+            di = d * 2
+            per_layer_attn = d * 2 * di + 2 * d * d * 0  # rwkv approximated below
+            per_layer_attn = 6 * d * d                    # r,k,v,g,o + decay loras
+            ffn = 2 * d * self.d_ff
+        if self.family == "hybrid" and self.ssm is not None:
+            # attn_every layers share: 1 attention + (attn_every-1) mamba
+            di = self.ssm.expand * d
+            mamba = (d * 2 * di + di * (max(1, d // 16) + 2 * self.ssm.d_state)
+                     + max(1, d // 16) * di + di * d)
+            frac_attn = 1.0 / self.attn_every
+            per_layer_attn = per_layer_attn * frac_attn + mamba * (1 - frac_attn)
+            if self.moe is not None and self.moe_every > 1:
+                # MoE on 1/moe_every of sublayers, dense swiglu on the rest
+                e = self.moe
+                moe_ffn = (e.num_experts + e.num_shared) * 3 * d * e.d_ff_expert
+                dense_ffn = 3 * d * self.d_ff
+                f = 1.0 / self.moe_every
+                ffn = moe_ffn * f + dense_ffn * (1 - f)
+        total = emb + l * (per_layer_attn + ffn)
+        if self.encoder_layers:
+            total += self.encoder_layers * (per_layer_attn + ffn)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        full_ffn = (e.num_experts + e.num_shared) * 3 * self.d_model * e.d_ff_expert
+        act_ffn = (e.top_k + e.num_shared) * 3 * self.d_model * e.d_ff_expert
+        n_moe_layers = self.num_layers // self.moe_every
+        return int(self.param_count() - n_moe_layers * (full_ffn - act_ffn))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """long_500k only for sub-quadratic families (full-attention skip is
+    recorded in DESIGN.md §4 and EXPERIMENTS.md)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.is_subquadratic:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,20 @@
+"""dbrx-132b — 16-expert top-4 fine-grained MoE [hf:databricks/dbrx-base; unverified]."""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=10752, vocab_size=100352, head_dim=128,
+    moe=MoEConfig(num_experts=16, top_k=4, d_ff_expert=10752, num_shared=0),
+    norm_type="layernorm", mlp_kind="swiglu",
+    source="hf:databricks/dbrx-base; unverified",
+)
+
+SMOKE = ModelConfig(
+    name="dbrx-132b-smoke", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=16,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128, num_shared=0),
+    norm_type="layernorm", mlp_kind="swiglu",
+)

@@ -1,0 +1,29 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + 160-expert top-6 MoE with 2 shared
+experts [arXiv:2405.04434; hf].
+
+d_ff=1536 is the per-expert FFN width (the assignment's d_ff field); the
+spec's kv=128 reflects MLA exposing one latent per head pre-compression.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe",
+    num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+    d_ff=1536, vocab_size=102400, head_dim=128,
+    moe=MoEConfig(num_experts=160, top_k=6, d_ff_expert=1536, num_shared=2),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, nope_dim=128,
+                  rope_dim=64, v_head_dim=128),
+    norm_type="rmsnorm", mlp_kind="swiglu",
+    source="arXiv:2405.04434; hf",
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-236b-smoke", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=64, vocab_size=256, head_dim=16,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=64, num_shared=1),
+    mla=MLAConfig(kv_lora_rank=32, q_lora_rank=48, nope_dim=16,
+                  rope_dim=8, v_head_dim=16),
+    norm_type="rmsnorm", mlp_kind="swiglu",
+)

@@ -1,0 +1,25 @@
+"""internvl2-1b — InternViT + InternLM2/Qwen2-0.5B backbone [arXiv:2404.16821; hf].
+
+The ViT frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed (B, 256, d_model) patch embeddings prepended to the token
+sequence; only the LM backbone is modeled.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="vlm",
+    num_layers=24, d_model=896, num_heads=14, num_kv_heads=2,
+    d_ff=4864, vocab_size=151655, head_dim=64,
+    frontend="vit_patches", frontend_len=256,
+    norm_type="rmsnorm", mlp_kind="swiglu", rope_theta=1000000.0,
+    source="arXiv:2404.16821; hf",
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-1b-smoke", family="vlm",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=16,
+    frontend="vit_patches", frontend_len=8,
+    norm_type="rmsnorm", mlp_kind="swiglu",
+)

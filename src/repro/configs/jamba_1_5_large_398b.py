@@ -1,0 +1,25 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention (1 attn per 8 layers) with
+16-expert top-2 MoE [arXiv:2403.19887; hf].  Sub-quadratic: runs long_500k."""
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    num_layers=72, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=24576, vocab_size=65536, head_dim=128,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=24576, num_shared=0),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    attn_every=8, moe_every=2,        # MoE every other sublayer (398B/94B active)
+    norm_type="rmsnorm", mlp_kind="swiglu",
+    source="arXiv:2403.19887; hf",
+)
+
+SMOKE = ModelConfig(
+    name="jamba-1.5-large-398b-smoke", family="hybrid",
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=16,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128, num_shared=0),
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2),
+    attn_every=4, moe_every=2,
+    norm_type="rmsnorm", mlp_kind="swiglu",
+)

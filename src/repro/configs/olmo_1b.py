@@ -1,0 +1,18 @@
+"""olmo-1b — dense LM with non-parametric LayerNorm [arXiv:2402.00838; hf]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=50304, head_dim=128,
+    norm_type="nonparametric_ln", mlp_kind="swiglu", tie_embeddings=True,
+    source="arXiv:2402.00838; hf",
+)
+
+SMOKE = ModelConfig(
+    name="olmo-1b-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=256, head_dim=16,
+    norm_type="nonparametric_ln", mlp_kind="swiglu", tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""rwkv6-3b — Finch: attention-free, data-dependent decay [arXiv:2404.05892; hf].
+
+Sub-quadratic (O(1) decode state): runs long_500k.  The hash-table KV-cache
+serving feature is inapplicable to this family (no KV cache) — noted in
+DESIGN.md §4.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    num_layers=32, d_model=2560, num_heads=0, num_kv_heads=0,
+    d_ff=8960, vocab_size=65536,
+    rwkv_heads=40,                      # head size 64
+    norm_type="layernorm", mlp_kind="relu2",
+    source="arXiv:2404.05892; hf",
+)
+
+SMOKE = ModelConfig(
+    name="rwkv6-3b-smoke", family="ssm",
+    num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+    d_ff=128, vocab_size=256,
+    rwkv_heads=4,
+    norm_type="layernorm", mlp_kind="relu2",
+)

@@ -1,0 +1,18 @@
+"""smollm-360m — llama-arch small dense LM [hf:HuggingFaceTB/SmolLM-135M; hf]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="dense",
+    num_layers=32, d_model=960, num_heads=15, num_kv_heads=5,
+    d_ff=2560, vocab_size=49152, head_dim=64,
+    norm_type="rmsnorm", mlp_kind="swiglu", tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M; hf",
+)
+
+SMOKE = ModelConfig(
+    name="smollm-360m-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=16,
+    norm_type="rmsnorm", mlp_kind="swiglu", tie_embeddings=True,
+)

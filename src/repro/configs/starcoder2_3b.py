@@ -1,0 +1,18 @@
+"""starcoder2-3b — GQA + RoPE code LM [arXiv:2402.19173; hf]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    num_layers=30, d_model=3072, num_heads=24, num_kv_heads=2,
+    d_ff=12288, vocab_size=49152, head_dim=128,
+    norm_type="layernorm", mlp_kind="gelu",
+    source="arXiv:2402.19173; hf",
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-3b-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=256, vocab_size=256, head_dim=16,
+    norm_type="layernorm", mlp_kind="gelu",
+)

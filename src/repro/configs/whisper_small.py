@@ -1,0 +1,25 @@
+"""whisper-small — encoder-decoder [arXiv:2212.04356; unverified].
+
+Conv frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed (B, 1500, d_model) frame embeddings; only the transformer
+backbone is modeled.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="audio",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=51865, head_dim=64,
+    encoder_layers=12, frontend="audio_frames", frontend_len=1500,
+    norm_type="layernorm", mlp_kind="gelu",
+    source="arXiv:2212.04356; unverified",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-small-smoke", family="audio",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=256, head_dim=16,
+    encoder_layers=2, frontend="audio_frames", frontend_len=32,
+    norm_type="layernorm", mlp_kind="gelu",
+)

@@ -1,0 +1,47 @@
+"""repro.core — WarpCore-on-TPU: hash table data structures in JAX.
+
+Paper structures (§IV): SingleValueHashTable, MultiValueHashTable,
+BucketListHashTable, HashSet, CountingHashTable, BloomFilter, plus the
+multi-GPU distributed/independent modes rendered over jax.shard_map.
+"""
+
+from repro.core.common import (
+    EMPTY_KEY,
+    TOMBSTONE_KEY,
+    STATUS_FULL,
+    STATUS_INSERTED,
+    STATUS_MASKED,
+    STATUS_POOL_FULL,
+    STATUS_UPDATED,
+    table_geometry,
+)
+from repro.core.single_value import SingleValueHashTable
+from repro.core.multi_value import MultiValueHashTable
+from repro.core.bucket_list import BucketListHashTable
+from repro.core.hashset import HashSet
+from repro.core.counting import CountingHashTable
+from repro.core.bloom import BloomFilter
+
+from repro.core import (
+    bloom,
+    bucket_list,
+    counting,
+    distributed,
+    hashing,
+    hashset,
+    layouts,
+    multi_value,
+    probing,
+    single_value,
+)
+
+__all__ = [
+    "EMPTY_KEY", "TOMBSTONE_KEY",
+    "STATUS_INSERTED", "STATUS_UPDATED", "STATUS_FULL", "STATUS_MASKED",
+    "STATUS_POOL_FULL",
+    "table_geometry",
+    "SingleValueHashTable", "MultiValueHashTable", "BucketListHashTable",
+    "HashSet", "CountingHashTable", "BloomFilter",
+    "bloom", "bucket_list", "counting", "distributed", "hashing", "hashset",
+    "layouts", "multi_value", "probing", "single_value",
+]

@@ -1,0 +1,101 @@
+"""BloomFilter — blocked bloom filter, set-membership with false positives.
+
+Blocked design (one cache-line-sized block per key, k bits inside it): the
+GPU rationale — one memory transaction per op — maps directly to the TPU,
+where the block is one vector-aligned row.  Insertion is naturally
+*order-free* (bit-OR is commutative/idempotent), so unlike the hash tables
+it needs no serialization and both ops are fully vectorized across the
+batch.
+
+The pure-JAX state is one byte per bit, shaped (num_blocks, block_bits) —
+scatter-max implements OR.  ``pack_words``/``unpack_words`` convert to the
+dense u32-word representation used by the Pallas kernel and by size
+accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.common import next_prime, register_struct, static_field
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+@register_struct
+@dataclasses.dataclass
+class BloomFilter:
+    bits: jax.Array                       # (num_blocks, block_bits) u8 in {0,1}
+    num_blocks: int = static_field()
+    block_bits: int = static_field()
+    k: int = static_field()
+    seed: int = static_field()
+
+    @property
+    def num_bits(self) -> int:
+        return self.num_blocks * self.block_bits
+
+
+def create(num_bits: int, *, k: int = 4, block_bits: int = 512,
+           seed: int = 0x9E3779B9) -> BloomFilter:
+    num_blocks = next_prime(max(1, num_bits // block_bits))
+    return BloomFilter(bits=jnp.zeros((num_blocks, block_bits), jnp.uint8),
+                       num_blocks=num_blocks, block_bits=block_bits, k=k, seed=seed)
+
+
+def _positions(f: BloomFilter, keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(block_idx (n,), bit_idx (n, k)) for each key."""
+    keys = keys.astype(_U)
+    block = hashing.mix_murmur3(keys ^ _U(f.seed)) % _U(f.num_blocks)
+    hs = []
+    h = hashing.mix_xxhash(keys ^ _U(f.seed))
+    g = hashing.mix_murmur3(keys + _U(0x61C88647))
+    for i in range(f.k):
+        # Kirsch–Mitzenmacher double hashing for the k probe bits
+        hs.append((h + _U(i) * g) % _U(f.block_bits))
+    return block, jnp.stack(hs, axis=-1)
+
+
+def insert(f: BloomFilter, keys, mask=None) -> BloomFilter:
+    keys = jnp.asarray(keys)
+    block, bitpos = _positions(f, keys)
+    if mask is not None:
+        block = jnp.where(mask, block, _U(f.num_blocks))      # OOR drop
+    rows = jnp.broadcast_to(block[:, None], bitpos.shape).reshape(-1)
+    cols = bitpos.reshape(-1)
+    bits = f.bits.at[rows, cols].max(jnp.uint8(1), mode="drop")
+    return dataclasses.replace(f, bits=bits)
+
+
+def contains(f: BloomFilter, keys) -> jax.Array:
+    """Membership query — false positives possible, false negatives never."""
+    keys = jnp.asarray(keys)
+    block, bitpos = _positions(f, keys)
+    rows = jnp.broadcast_to(block[:, None], bitpos.shape)
+    got = f.bits[rows, bitpos]
+    return jnp.all(got == 1, axis=-1)
+
+
+def fill_fraction(f: BloomFilter) -> jax.Array:
+    return jnp.mean(f.bits.astype(jnp.float32))
+
+
+def pack_words(f: BloomFilter) -> jax.Array:
+    """Dense (num_blocks, block_bits // 32) u32 word representation."""
+    b = f.bits.reshape(f.num_blocks, f.block_bits // 32, 32).astype(_U)
+    shifts = jnp.arange(32, dtype=_U)
+    return jnp.sum(b << shifts[None, None, :], axis=-1, dtype=_U)
+
+
+def unpack_words(words: jax.Array, block_bits: int, k: int, seed: int) -> BloomFilter:
+    num_blocks = words.shape[0]
+    shifts = jnp.arange(32, dtype=_U)
+    bits = ((words[:, :, None] >> shifts[None, None, :]) & _U(1)).astype(jnp.uint8)
+    return BloomFilter(bits=bits.reshape(num_blocks, block_bits),
+                       num_blocks=num_blocks, block_bits=block_bits, k=k, seed=seed)

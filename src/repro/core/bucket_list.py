@@ -1,0 +1,331 @@
+"""BucketListHashTable — memory-compact multi-value table (paper §IV-C, Fig. 3).
+
+Keys live once in a SingleValueHashTable whose value is a packed 64-bit
+*list handle* (two u32 words):
+
+  word0: pointer to the tail bucket (slot index into the value pool)
+  word1: [ count : 22 | bucket_idx : 8 | state : 2 ]
+
+Values live in linked lists of contiguous *buckets* drawn from a
+pre-allocated pool (global allocations would be a device-wide barrier —
+paper §IV-C; we bump-allocate from one array).  Bucket sizes follow the
+paper's growth schedule s_i = ceil(lambda * s_{i-1}).  The leading slot of
+every bucket except the first stores the pointer to the *previous* bucket
+(the list is walked tail -> head, exactly as in Fig. 4).
+
+The 4-state handle machine (uninitialized/blocked/ready/full) guards
+concurrent list growth on the GPU; under ownership partitioning there is a
+single writer per shard, so BLOCKED is never observable — we keep the
+encoding for layout fidelity and cheap invariant checks.
+
+Because the handle carries the count, ``count_values`` is O(1) per key (no
+probe walk) — one of the structure's practical wins over the pure OA
+multi-value table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layouts, probing
+from repro.core.common import (
+    DEFAULT_SEED,
+    DEFAULT_WINDOW,
+    STATUS_FULL,
+    STATUS_INSERTED,
+    STATUS_MASKED,
+    STATUS_POOL_FULL,
+    register_struct,
+    static_field,
+)
+from repro.core import single_value as sv
+
+_U = jnp.uint32
+_I = jnp.int32
+
+# handle word1 bit layout
+_COUNT_SHIFT = 10
+_BUCKET_SHIFT = 2
+_BUCKET_MASK = 0xFF
+_STATE_MASK = 0x3
+STATE_UNINIT, STATE_BLOCKED, STATE_READY, STATE_FULL = 0, 1, 2, 3
+MAX_COUNT = (1 << 22) - 1
+
+
+def pack_handle(ptr, count, bucket_idx, state):
+    w1 = ((count.astype(_U) << _U(_COUNT_SHIFT))
+          | (bucket_idx.astype(_U) << _U(_BUCKET_SHIFT))
+          | state.astype(_U))
+    return jnp.stack([ptr.astype(_U), w1], axis=-1)
+
+
+def unpack_handle(handle):
+    ptr = handle[..., 0]
+    w1 = handle[..., 1]
+    count = (w1 >> _U(_COUNT_SHIFT)).astype(_I)
+    bucket_idx = ((w1 >> _U(_BUCKET_SHIFT)) & _U(_BUCKET_MASK)).astype(_I)
+    state = (w1 & _U(_STATE_MASK)).astype(_I)
+    return ptr, count, bucket_idx, state
+
+
+def growth_schedule(s0: int, growth: float, pool_capacity: int,
+                    max_buckets: int = 64) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Bucket sizes s_i = ceil(growth * s_{i-1}) and exclusive cumulative value
+    capacity C_i (values held in buckets 0..i-1).  Truncated once C covers the
+    pool (no key can ever need more buckets)."""
+    sizes, cum = [], [0]
+    s = int(s0)
+    while len(sizes) < max_buckets and cum[-1] < pool_capacity:
+        sizes.append(s)
+        cum.append(cum[-1] + s)
+        s = int(math.ceil(growth * s))
+    return tuple(sizes), tuple(cum)
+
+
+@register_struct
+@dataclasses.dataclass
+class BucketListHashTable:
+    key_store: sv.SingleValueHashTable
+    pool: jax.Array                       # (pool_capacity,) u32 value+link slots
+    alloc_top: jax.Array                  # i32 bump allocator
+    pool_capacity: int = static_field()
+    sizes: tuple = static_field()         # bucket value-capacities per index
+    cum: tuple = static_field()           # exclusive cumulative value capacity
+    s0: int = static_field()
+    growth: float = static_field()
+
+    @property
+    def key_capacity(self) -> int:
+        return self.key_store.capacity
+
+    def num_keys(self) -> jax.Array:
+        return self.key_store.count
+
+    def storage_density(self) -> jax.Array:
+        """Stored information bits / allocated bits (paper's rho, §IV-C)."""
+        stored = (self.key_store.count * (1 + 1)          # key + one handle word of info
+                  + jnp.sum(self._counts_all()))
+        allocated = self.key_store.capacity * 3 + self.pool_capacity
+        return stored.astype(jnp.float32) / jnp.float32(allocated)
+
+    def _counts_all(self) -> jax.Array:
+        vp = self.key_store.value_planes()                # (2, p, W)
+        w1 = vp[1].reshape(-1)
+        kp = self.key_store.key_planes()[0].reshape(-1)
+        from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
+        live = (kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY)
+        return jnp.where(live, (w1 >> _U(_COUNT_SHIFT)).astype(_I), 0)
+
+
+def create(key_capacity: int, pool_capacity: int, *, s0: int = 1,
+           growth: float = 1.1, window: int = DEFAULT_WINDOW,
+           scheme: str = "cops", seed: int = DEFAULT_SEED,
+           key_words: int = 1, backend: str = "jax") -> BucketListHashTable:
+    key_store = sv.create(key_capacity, key_words=key_words, value_words=2,
+                          window=window, scheme=scheme, seed=seed, backend=backend)
+    sizes, cum = growth_schedule(s0, growth, pool_capacity)
+    return BucketListHashTable(
+        key_store=key_store,
+        pool=jnp.zeros((pool_capacity,), _U),
+        alloc_top=jnp.zeros((), _I),
+        pool_capacity=pool_capacity, sizes=sizes, cum=cum, s0=s0, growth=growth)
+
+
+# ---------------------------------------------------------------------------
+# insertion — sequential over the batch
+# ---------------------------------------------------------------------------
+
+def insert(table: BucketListHashTable, keys, values, mask=None,
+           ) -> tuple[BucketListHashTable, jax.Array]:
+    """Insert (key, value): new keys allocate their first bucket; existing keys
+    append to the tail bucket, growing the list when the tail is full."""
+    ks = table.key_store
+    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    values = sv.normalize_words(values, 1, "values")
+    n = keys.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    words = sv.key_hash_word(keys)
+    sizes = jnp.asarray(table.sizes, _I)
+    cum = jnp.asarray(table.cum, _I)
+    tstatic = (ks.layout, ks.key_words, ks.num_rows, ks.window,
+               ks.scheme, ks.seed, ks.max_probes)
+    pool_cap = table.pool_capacity
+
+    def step(carry, inp):
+        store, kcount, pool, top = carry
+        k, v, word, m = inp
+        mode, row, lane = sv._probe_for_insert(tstatic, store, k, word)
+        # current handle (valid when mode == 0)
+        old_handle = layouts.value_windows(ks.layout, store, row[None],
+                                           ks.key_words, 2)[0, :, lane]
+        ptr, count, bidx, state = unpack_handle(old_handle)
+
+        is_new = (mode == 1)
+        exists = (mode == 0)
+        # --- existing key: does the tail bucket have room?
+        tail_cap = sizes[jnp.clip(bidx, 0, sizes.shape[0] - 1)]
+        fill = count - cum[jnp.clip(bidx, 0, cum.shape[0] - 1)]
+        tail_has_room = exists & (fill < tail_cap) & (count < MAX_COUNT)
+        # value position inside current tail (skip the prev-link slot of j>0)
+        tail_data = ptr.astype(_I) + jnp.where(bidx > 0, 1, 0)
+        append_pos = tail_data + fill
+
+        # --- need a new bucket (new key, or tail full)
+        nbidx = jnp.where(is_new, 0, bidx + 1)
+        nbidx_c = jnp.clip(nbidx, 0, sizes.shape[0] - 1)
+        nsize = sizes[nbidx_c]
+        alloc_slots = nsize + jnp.where(nbidx > 0, 1, 0)      # + prev-link slot
+        need_alloc = (is_new | (exists & ~tail_has_room)) & m
+        fits = (top + alloc_slots <= pool_cap) & (nbidx < sizes.shape[0])
+        do_alloc = need_alloc & fits
+        new_ptr = top
+
+        # position of the value we write this step
+        vpos = jnp.where(tail_has_room, append_pos,
+                         new_ptr + jnp.where(nbidx > 0, 1, 0))
+        do_write = m & (tail_has_room | do_alloc)
+        # write the value (OOR-drop when masked out)
+        pool = pool.at[jnp.where(do_write, vpos, pool_cap)].set(v[0], mode="drop")
+        # link new bucket to previous tail
+        link_pos = jnp.where(do_alloc & (nbidx > 0), new_ptr, pool_cap)
+        pool = pool.at[link_pos].set(ptr, mode="drop")
+        top = top + jnp.where(do_alloc, alloc_slots, 0)
+
+        # --- updated handle
+        new_count = count + do_write.astype(_I)
+        h_ptr = jnp.where(do_alloc, new_ptr.astype(_U), ptr)
+        h_bidx = jnp.where(do_alloc, nbidx, bidx)
+        h_count = jnp.where(is_new & do_alloc, _I(1), new_count)
+        handle = pack_handle(h_ptr, h_count, h_bidx,
+                             jnp.full((), STATE_READY, _I))
+
+        # write handle into the key store:
+        #   new key + alloc ok  -> claim slot with (k, handle)
+        #   existing key        -> update handle value in place
+        # masked OOR-drop scatters instead of lax.switch (in-place updates)
+        case = jnp.where(~m, _I(0),
+                         jnp.where(exists & do_write, _I(1),
+                                   jnp.where(is_new & do_alloc, _I(2), _I(0))))
+        oor = _U(ks.num_rows)
+        hrow = jnp.where(case >= 1, row, oor)
+        store = layouts.scatter_values(ks.layout, store, hrow[None],
+                                       lane[None], handle[None], ks.key_words)
+        krow = jnp.where(case == 2, row, oor)
+        store = layouts.scatter_keys(ks.layout, store, krow[None],
+                                     lane[None], k[None])
+        kcount = kcount + jnp.where(case == 2, _I(1), _I(0))
+
+        status = jnp.where(~m, _I(STATUS_MASKED),
+                           jnp.where(do_write, _I(STATUS_INSERTED),
+                                     jnp.where(mode == 2, _I(STATUS_FULL),
+                                               _I(STATUS_POOL_FULL))))
+        return (store, kcount, pool, top), status
+
+    (store, kcount, pool, top), status = jax.lax.scan(
+        step, (ks.store, ks.count, table.pool, table.alloc_top),
+        (keys, values, words, mask))
+    new_ks = dataclasses.replace(ks, store=store, count=kcount)
+    return dataclasses.replace(table, key_store=new_ks, pool=pool,
+                               alloc_top=top), status
+
+
+# ---------------------------------------------------------------------------
+# retrieval — O(1) counts from handles; vectorized lockstep bucket walk
+# ---------------------------------------------------------------------------
+
+def count_values(table: BucketListHashTable, keys) -> jax.Array:
+    """Per-key value count, read straight off the handle (no probe walk)."""
+    handles, found = sv.retrieve(table.key_store, keys)
+    _, count, _, _ = unpack_handle(handles)
+    return jnp.where(found, count, 0)
+
+
+def retrieve_all(table: BucketListHashTable, keys, out_capacity: int,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather every value for each key by walking its bucket list tail->head
+    (Fig. 4).  All queried lists are walked in lockstep, one bucket per round,
+    with the full bucket read as one vector gather — the CG-cooperative
+    coalesced read adapted to the VPU."""
+    ks = table.key_store
+    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    n = keys.shape[0]
+    handles, found = sv.retrieve(ks, keys)
+    ptr, count, bidx, _ = unpack_handle(handles)
+    counts = jnp.where(found, count, 0)
+    offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
+    sizes = jnp.asarray(table.sizes, _I)
+    cum = jnp.asarray(table.cum, _I)
+    s_max = int(max(table.sizes))
+    max_rounds = len(table.sizes)
+    out = jnp.zeros((out_capacity,), _U)
+    # buckets are read in fixed-width chunks with a data-dependent inner
+    # loop: rounds where every active bucket is small never pay for s_max
+    # (growth=1.1 schedules reach s_max in the hundreds, but r=1 workloads
+    # only ever touch size-1 buckets)
+    chunk = int(min(s_max, 128))
+    lanes_c = jnp.arange(chunk, dtype=_I)
+
+    def cond(st):
+        r, j, ptr, out = st
+        return jnp.logical_and(r < max_rounds, jnp.any(j >= 0))
+
+    def body(st):
+        r, j, ptr, out = st
+        active = j >= 0
+        jc = jnp.clip(j, 0, sizes.shape[0] - 1)
+        bsize = sizes[jc]
+        base = cum[jc]                                        # values before bucket j
+        has_link = (j > 0)
+        data_start = ptr.astype(_I) + has_link.astype(_I)
+        # tail bucket may be partially filled
+        valid_in_bucket = jnp.minimum(counts - base, bsize)
+        max_valid = jnp.max(jnp.where(active, valid_in_bucket, 0))
+
+        def chunk_cond(cst):
+            c, out = cst
+            return c * chunk < max_valid
+
+        def chunk_body(cst):
+            c, out = cst
+            lanes = c * chunk + lanes_c                       # (chunk,)
+            gidx = data_start[:, None] + lanes[None, :]       # (n, chunk)
+            vals = table.pool[jnp.clip(gidx, 0, table.pool_capacity - 1)]
+            lane_ok = ((lanes[None, :] < valid_in_bucket[:, None])
+                       & active[:, None])
+            pos = offsets[:n, None] + base[:, None] + lanes[None, :]
+            pos = jnp.where(lane_ok, pos, out_capacity)
+            out = out.at[pos.reshape(-1)].set(vals.reshape(-1), mode="drop")
+            return c + 1, out
+
+        _, out = jax.lax.while_loop(chunk_cond, chunk_body,
+                                    (jnp.zeros((), _I), out))
+        # follow the prev link
+        link = table.pool[jnp.clip(ptr.astype(_I), 0, table.pool_capacity - 1)]
+        ptr = jnp.where(active & has_link, link, ptr)
+        j = jnp.where(active, j - 1, j)
+        return r + 1, j, ptr, out
+
+    j0 = jnp.where(found, bidx, -1)
+    _, _, _, out = jax.lax.while_loop(cond, body,
+                                      (jnp.zeros((), _I), j0, ptr, out))
+    return out, offsets, counts
+
+
+def for_each(table: BucketListHashTable, keys, fn: Callable, max_values: int):
+    """Apply ``fn(key, value, valid)`` per (query, value) pair (cf. §IV-B.4)."""
+    ks = table.key_store
+    keys_n = sv.normalize_words(keys, ks.key_words, "keys")
+    n = keys_n.shape[0]
+    vals, offsets, counts = retrieve_all(table, keys_n, n * max_values)
+    idx = offsets[:n, None] + jnp.arange(max_values)[None, :]
+    valid = jnp.arange(max_values)[None, :] < counts[:, None]
+    per_key = vals[jnp.where(valid, idx, 0)]
+    return jax.vmap(lambda k, vs, ms: jax.vmap(lambda v, m: fn(k, v, m))(vs, ms))(
+        keys_n, per_key, valid)

@@ -1,0 +1,130 @@
+"""Shared constants, capacity arithmetic and pytree helpers for repro.core.
+
+WarpCore stores keys in-band: an ``EMPTY`` sentinel marks a never-occupied
+slot and a ``TOMBSTONE`` marks a deleted one (paper §IV-B.5).  User keys must
+avoid both sentinels on the *primary* 32-bit plane (the paper has the same
+``k_e`` restriction).
+
+Capacity follows the paper's cycle-freeness rule ``c = p * W`` with ``p``
+prime (§IV-B.2, generalized from the warp width 32 to a configurable probe
+window ``W``): the table is laid out as a 2-D ``(p, W)`` array so that one
+probe window is one hardware-aligned row — the TPU analogue of "all 32 lanes
+hit one cache line".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# In-band sentinels (uint32 key plane).
+EMPTY_KEY = np.uint32(0xFFFFFFFF)
+TOMBSTONE_KEY = np.uint32(0xFFFFFFFE)
+MAX_USER_KEY = np.uint32(0xFFFFFFFD)
+
+# Insert status codes (per input element).
+STATUS_INSERTED = 0      # claimed a fresh slot
+STATUS_UPDATED = 1       # single-value: key existed, value overwritten ("duplicate warning")
+STATUS_FULL = 2          # probing exhausted without finding a slot
+STATUS_MASKED = 3        # input element was masked out
+STATUS_POOL_FULL = 4     # bucket-list: value pool exhausted
+
+# Probe-window widths supported (paper CG sizes 1..32; TPU lanes allow 128).
+SUPPORTED_WINDOWS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+DEFAULT_WINDOW = 32
+DEFAULT_SEED = 0x9E3779B9
+
+
+def is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    if n % 2 == 0:
+        return n == 2
+    f = 3
+    while f * f <= n:
+        if n % f == 0:
+            return False
+        f += 2
+    return True
+
+
+def next_prime(n: int) -> int:
+    """Smallest prime >= n."""
+    n = max(2, int(n))
+    while not is_prime(n):
+        n += 1
+    return n
+
+
+def table_geometry(min_capacity: int, window: int) -> tuple[int, int]:
+    """Return ``(num_rows, capacity)`` with num_rows prime and capacity = rows * window.
+
+    Guarantees capacity >= min_capacity.  num_rows prime keeps double hashing
+    over rows cycle-free (step sizes drawn from [1, p-1] generate Z_p).
+    """
+    if window not in SUPPORTED_WINDOWS:
+        raise ValueError(f"window={window} not in {SUPPORTED_WINDOWS}")
+    rows = next_prime(max(3, math.ceil(min_capacity / window)))
+    return rows, rows * window
+
+
+def register_struct(cls):
+    """Register a dataclass as a jax pytree; fields with ``metadata={'static': True}``
+    become aux data."""
+    data_fields = [f.name for f in dataclasses.fields(cls) if not f.metadata.get("static")]
+    meta_fields = [f.name for f in dataclasses.fields(cls) if f.metadata.get("static")]
+    jax.tree_util.register_dataclass(cls, data_fields=data_fields, meta_fields=meta_fields)
+    return cls
+
+
+def static_field(**kwargs):
+    return dataclasses.field(metadata={"static": True}, **kwargs)
+
+
+def as_u32(x) -> jax.Array:
+    x = jnp.asarray(x)
+    if x.dtype == jnp.uint32:
+        return x
+    if x.dtype in (jnp.int32, jnp.int64, jnp.uint64):
+        return x.astype(jnp.uint32)
+    raise TypeError(f"cannot reinterpret {x.dtype} as uint32 keys")
+
+
+def split_u64(x) -> tuple[jax.Array, jax.Array]:
+    """Split 64-bit integers into (hi, lo) uint32 planes.
+
+    Works without jax_enable_x64 when given a numpy uint64 array (planes are
+    extracted host-side); for traced inputs requires x64 or an (..., 2) u32 rep.
+    """
+    if isinstance(x, np.ndarray) and x.dtype == np.uint64:
+        lo = (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        hi = (x >> np.uint64(32)).astype(np.uint32)
+        return jnp.asarray(hi), jnp.asarray(lo)
+    x = jnp.asarray(x)
+    if x.dtype == jnp.uint64:
+        return (x >> 32).astype(jnp.uint32), (x & 0xFFFFFFFF).astype(jnp.uint32)
+    raise TypeError(f"expected uint64, got {x.dtype}")
+
+
+def join_u64(hi: jax.Array, lo: jax.Array) -> np.ndarray:
+    """Join (hi, lo) u32 planes into numpy uint64 (host-side convenience)."""
+    hi = np.asarray(hi, dtype=np.uint64)
+    lo = np.asarray(lo, dtype=np.uint64)
+    return (hi << np.uint64(32)) | lo
+
+
+def check_user_keys(keys: jax.Array) -> jax.Array:
+    """Debug guard: no key may collide with a sentinel on the primary plane."""
+    bad = (keys == EMPTY_KEY) | (keys == TOMBSTONE_KEY)
+    return ~bad
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype"))

@@ -1,0 +1,41 @@
+"""CountingHashTable — counts distinct key occurrences (paper §IV).
+
+A SingleValueHashTable whose value is a saturating u32 counter; inserting an
+existing key increments it.  Built on ``single_value.update_values`` (the
+read-modify-write upsert), so probing, layouts and backends are shared.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import single_value as sv
+from repro.core.common import DEFAULT_SEED, DEFAULT_WINDOW
+
+CountingHashTable = sv.SingleValueHashTable
+
+_U32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def create(min_capacity: int, *, key_words: int = 1, window: int = DEFAULT_WINDOW,
+           scheme: str = "cops", layout: str = "soa", seed: int = DEFAULT_SEED,
+           max_probes: int | None = None, backend: str = "jax") -> CountingHashTable:
+    return sv.create(min_capacity, key_words=key_words, value_words=1,
+                     window=window, scheme=scheme, layout=layout, seed=seed,
+                     max_probes=max_probes, backend=backend)
+
+
+def insert(table: CountingHashTable, keys, mask=None,
+           ) -> tuple[CountingHashTable, jax.Array]:
+    """Count each key occurrence (saturating at 2^32 - 1)."""
+    def bump(old, key):
+        c = old[0]
+        return jnp.where(c == _U32_MAX, c, c + jnp.uint32(1))[None]
+    return sv.update_values(table, keys, bump, jnp.uint32(1), mask)
+
+
+def counts(table: CountingHashTable, keys) -> jax.Array:
+    """Occurrence count per key (0 when absent)."""
+    vals, found = sv.retrieve(table, keys)
+    return jnp.where(found, vals, jnp.uint32(0))

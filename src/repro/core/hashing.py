@@ -1,0 +1,104 @@
+"""Hash mixers for WarpCore-on-TPU.
+
+The paper uses two independent hash functions: ``h`` for the initial probe
+position and ``g`` for the double-hashing step (§II, §IV-B.2).  We provide
+murmur3/xxhash-style avalanche mixers over uint32 lanes — cheap on the VPU
+(multiplies + shifts + xors, all 32-bit native) — plus combiners for 64-bit
+keys represented as (hi, lo) uint32 planes (DESIGN.md §2: TPU vector units
+are 32-bit native, so "64-bit support" = two planes, not int64 vectors).
+
+All functions are shape-polymorphic and jit/vmap/pallas-safe (pure jnp ops on
+uint32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_U = jnp.uint32
+
+# murmur3 fmix32 constants
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+# xxhash32 primes (used for the second, independent mixer)
+_X2 = np.uint32(0x85EBCA77)
+_X3 = np.uint32(0xC2B2AE3D)
+_X4 = np.uint32(0x27D4EB2F)
+
+
+def _shr(x, n):
+    return jax.lax.shift_right_logical(x, _U(n))
+
+
+def mix_murmur3(x: jax.Array) -> jax.Array:
+    """murmur3 32-bit finalizer — full avalanche."""
+    x = x.astype(_U)
+    x = x ^ _shr(x, 16)
+    x = x * _M1
+    x = x ^ _shr(x, 13)
+    x = x * _M2
+    x = x ^ _shr(x, 16)
+    return x
+
+
+def mix_xxhash(x: jax.Array) -> jax.Array:
+    """xxhash32 avalanche — independent second mixer for double hashing."""
+    x = x.astype(_U)
+    x = x ^ _shr(x, 15)
+    x = x * _X2
+    x = x ^ _shr(x, 13)
+    x = x * _X3
+    x = x ^ _shr(x, 16)
+    x = x * _X4
+    return x
+
+
+def mix_identity(x: jax.Array) -> jax.Array:
+    """Pathological hash for adversarial tests (primary clustering on LP)."""
+    return x.astype(_U)
+
+
+MIXERS = {
+    "murmur3": mix_murmur3,
+    "xxhash": mix_xxhash,
+    "identity": mix_identity,
+}
+
+
+def combine_planes(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Fold a 64-bit key's (hi, lo) planes into one well-mixed u32 word.
+
+    boost::hash_combine-style: asymmetric so (a,b) != (b,a).
+    """
+    h = mix_murmur3(lo)
+    h = h ^ (mix_murmur3(hi) + _U(0x9E3779B9) + (h << _U(6)) + _shr(h, 2))
+    return h
+
+
+def hash_rows(key_word: jax.Array, num_rows: int, seed: int) -> jax.Array:
+    """Initial probe row: h1(k) in [0, num_rows)."""
+    h = mix_murmur3(key_word ^ _U(np.uint32(seed)))
+    return (h % _U(num_rows)).astype(_U)
+
+
+def hash_step(key_word: jax.Array, num_rows: int, seed: int) -> jax.Array:
+    """Double-hashing row step: g(k) in [1, num_rows-1].
+
+    With num_rows prime, every step generates the full cyclic group Z_p,
+    i.e. the probe sequence visits every row exactly once (paper's
+    cycle-freeness guarantee, §IV-B.2).
+    """
+    h = mix_xxhash(key_word ^ _U((int(seed) * 0x9E3779B1) & 0xFFFFFFFF))
+    return (h % _U(num_rows - 1) + _U(1)).astype(_U)
+
+
+def hash_owner(key_word: jax.Array, num_owners: int, seed: int = 0x5BD1E995) -> jax.Array:
+    """Shard-owner assignment for the distributed mode (paper §IV-E).
+
+    Independent from hash_rows/hash_step so intra-shard probing stays uniform
+    after partitioning by owner.
+    """
+    h = mix_xxhash(mix_murmur3(key_word) ^ _U(np.uint32(seed)))
+    return (h % _U(num_owners)).astype(_U)

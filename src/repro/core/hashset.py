@@ -1,0 +1,48 @@
+"""HashSet — keys only, each stored once (paper §IV: "stores set of keys").
+
+A thin wrapper over SingleValueHashTable with zero value words: the layout
+machinery handles value_words == 0 (empty value planes), so probing/insert/
+erase are shared verbatim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import single_value as sv
+from repro.core.common import DEFAULT_SEED, DEFAULT_WINDOW, STATUS_INSERTED
+
+HashSet = sv.SingleValueHashTable
+
+
+def create(min_capacity: int, *, key_words: int = 1, window: int = DEFAULT_WINDOW,
+           scheme: str = "cops", layout: str = "soa", seed: int = DEFAULT_SEED,
+           max_probes: int | None = None, backend: str = "jax") -> HashSet:
+    if layout == "packed":
+        raise ValueError("packed layout needs a value word; use soa/aos for HashSet")
+    return sv.create(min_capacity, key_words=key_words, value_words=0,
+                     window=window, scheme=scheme, layout=layout, seed=seed,
+                     max_probes=max_probes, backend=backend)
+
+
+def add(hs: HashSet, keys, mask=None) -> tuple[HashSet, jax.Array]:
+    """Insert keys; returns (set, newly_added mask)."""
+    keys_n = sv.normalize_words(keys, hs.key_words, "keys")
+    vals = jnp.zeros((keys_n.shape[0], 0), jnp.uint32)
+    hs, status = sv.insert(hs, keys_n, vals, mask)
+    return hs, status == STATUS_INSERTED
+
+
+def contains(hs: HashSet, keys) -> jax.Array:
+    return sv.contains(hs, keys)
+
+
+def remove(hs: HashSet, keys, mask=None) -> tuple[HashSet, jax.Array]:
+    return sv.erase(hs, keys, mask)
+
+
+def size(hs: HashSet) -> jax.Array:
+    return hs.count

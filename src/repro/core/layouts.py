@@ -1,0 +1,150 @@
+"""Memory-layout abstraction: SOA / AOS / packed (paper §IV-A.1, Fig. 1).
+
+A *store* is a dict of arrays holding ``key_words + value_words`` uint32
+words per slot, arranged as (num_rows, window) slots:
+
+- ``soa``    — one (words, p, W) plane-major array per kind; vector loads of a
+               probe window touch only key words.  **Default on TPU** (the
+               paper itself notes SOA wins when only keys are probed, and the
+               VPU is 32-bit native — DESIGN.md §2).
+- ``aos``    — a single (p, W, key_words + value_words) slot-major array;
+               key+value of one slot are adjacent (paper: better when both are
+               always touched).
+- ``packed`` — AOS restricted to key_words == value_words == 1, the analogue
+               of the paper's 64-bit packed-AOS.  On GPU its point is single-
+               CAS atomicity; on TPU atomicity is moot (ownership
+               partitioning), so it is AOS with an enforced width.
+
+All writes are functional (returns a new store).  64-bit keys/values use two
+u32 words (hi, lo ordering: word 0 is the PRIMARY plane carrying sentinels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.common import EMPTY_KEY
+
+_U = jnp.uint32
+
+LAYOUTS = ("soa", "aos", "packed")
+
+
+def _check(kind: str, key_words: int, value_words: int) -> None:
+    if kind not in LAYOUTS:
+        raise ValueError(f"layout {kind!r} not in {LAYOUTS}")
+    if kind == "packed" and (key_words != 1 or value_words != 1):
+        raise ValueError("packed layout requires 1-word keys and values")
+
+
+def create(kind: str, num_rows: int, window: int, key_words: int,
+           value_words: int) -> dict:
+    _check(kind, key_words, value_words)
+    if kind == "soa":
+        return {
+            "keys": jnp.full((key_words, num_rows, window), EMPTY_KEY, dtype=_U),
+            "values": jnp.zeros((value_words, num_rows, window), dtype=_U),
+        }
+    words = key_words + value_words
+    slots = jnp.zeros((num_rows, window, words), dtype=_U)
+    slots = slots.at[:, :, :key_words].set(EMPTY_KEY)
+    return {"slots": slots}
+
+
+def key_planes(kind: str, store: dict, key_words: int) -> jax.Array:
+    """All key words as a (key_words, p, W) view."""
+    if kind == "soa":
+        return store["keys"]
+    return jnp.moveaxis(store["slots"][:, :, :key_words], -1, 0)
+
+
+def value_planes(kind: str, store: dict, key_words: int, value_words: int) -> jax.Array:
+    if kind == "soa":
+        return store["values"]
+    return jnp.moveaxis(store["slots"][:, :, key_words:key_words + value_words], -1, 0)
+
+
+def key_windows(kind: str, store: dict, rows: jax.Array, key_words: int) -> jax.Array:
+    """Gather probe windows for a batch of rows -> (n, key_words, W)."""
+    if kind == "soa":
+        return jnp.moveaxis(store["keys"][:, rows, :], 0, 1)
+    return jnp.moveaxis(store["slots"][rows][:, :, :key_words], -1, 1)
+
+
+def value_windows(kind: str, store: dict, rows: jax.Array, key_words: int,
+                  value_words: int) -> jax.Array:
+    if kind == "soa":
+        return jnp.moveaxis(store["values"][:, rows, :], 0, 1)
+    return jnp.moveaxis(store["slots"][rows][:, :, key_words:key_words + value_words], -1, 1)
+
+
+def write_slot(kind: str, store: dict, row, lane, key_vec: jax.Array,
+               value_vec: jax.Array, key_words: int) -> dict:
+    """Functionally write one slot (key + value words)."""
+    if kind == "soa":
+        return {
+            "keys": store["keys"].at[:, row, lane].set(key_vec),
+            "values": store["values"].at[:, row, lane].set(value_vec),
+        }
+    slot = jnp.concatenate([key_vec, value_vec])
+    return {"slots": store["slots"].at[row, lane, :].set(slot)}
+
+
+def write_value(kind: str, store: dict, row, lane, value_vec: jax.Array,
+                key_words: int) -> dict:
+    if kind == "soa":
+        return {"keys": store["keys"], "values": store["values"].at[:, row, lane].set(value_vec)}
+    return {"slots": store["slots"].at[row, lane, key_words:].set(value_vec)}
+
+
+def scatter_key_word(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,
+                     word: np.uint32, key_words: int, num_rows: int) -> dict:
+    """Scatter a constant key word into all key planes at (rows, lanes).
+
+    Out-of-range rows (== num_rows) are dropped — used to mask inactive
+    elements in vectorized erase.
+    """
+    fill = jnp.full(rows.shape, word, dtype=_U)
+    if kind == "soa":
+        keys = store["keys"]
+        for w in range(key_words):
+            keys = keys.at[w, rows, lanes].set(fill, mode="drop")
+        return {"keys": keys, "values": store["values"]}
+    slots = store["slots"]
+    for w in range(key_words):
+        slots = slots.at[rows, lanes, w].set(fill, mode="drop")
+    return {"slots": slots}
+
+
+def scatter_values(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,
+                   values: jax.Array, key_words: int) -> dict:
+    """Scatter per-element value vectors (n, value_words) at (rows, lanes); OOR dropped."""
+    if kind == "soa":
+        vals = store["values"]
+        for w in range(values.shape[1]):
+            vals = vals.at[w, rows, lanes].set(values[:, w], mode="drop")
+        return {"keys": store["keys"], "values": vals}
+    slots = store["slots"]
+    for w in range(values.shape[1]):
+        slots = slots.at[rows, lanes, key_words + w].set(values[:, w], mode="drop")
+    return {"slots": slots}
+
+
+def scatter_keys(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,
+                 keys: jax.Array) -> dict:
+    """Scatter per-element key vectors (n, key_words) at (rows, lanes); OOR dropped.
+
+    Masked writes via out-of-range rows replace lax.cond/switch branches:
+    conditionals returning whole stores defeat XLA's in-place buffer reuse
+    (each branch copies the table), while a dropped scatter is O(1)."""
+    if kind == "soa":
+        ks = store["keys"]
+        for w in range(keys.shape[1]):
+            ks = ks.at[w, rows, lanes].set(keys[:, w], mode="drop")
+        return {"keys": ks, "values": store["values"]}
+    slots = store["slots"]
+    for w in range(keys.shape[1]):
+        slots = slots.at[rows, lanes, w].set(keys[:, w], mode="drop")
+    return {"slots": slots}

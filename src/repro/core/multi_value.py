@@ -1,0 +1,290 @@
+"""MultiValueHashTable — same key may occur multiple times (paper §IV-B, V-B).
+
+Every (key, value) pair occupies its own slot: insertion claims the lowest
+EMPTY/TOMBSTONE slot in COPS probe order without checking for existing
+matches.  Retrieval of *all* values for a key therefore walks the probe
+sequence collecting every matching lane until it reaches a window that
+contains an EMPTY slot (the absence frontier — tombstones do not stop the
+walk).
+
+As in the paper, ``retrieve_all`` needs the output size up front: a separate
+vectorized *counting pass* produces per-key counts, the caller prefix-sums
+them into offsets and supplies a static output capacity (§IV-B.4: "the size
+of the output array has to be determined in a separate counting pass").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layouts, probing
+from repro.core.common import (
+    DEFAULT_SEED,
+    DEFAULT_WINDOW,
+    EMPTY_KEY,
+    STATUS_FULL,
+    STATUS_INSERTED,
+    STATUS_MASKED,
+    TOMBSTONE_KEY,
+    register_struct,
+    static_field,
+    table_geometry,
+)
+from repro.core.single_value import key_hash_word, normalize_words
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+@register_struct
+@dataclasses.dataclass
+class MultiValueHashTable:
+    store: dict
+    count: jax.Array                      # live (key, value) pairs
+    num_rows: int = static_field()
+    window: int = static_field()
+    key_words: int = static_field()
+    value_words: int = static_field()
+    scheme: str = static_field()
+    layout: str = static_field()
+    seed: int = static_field()
+    max_probes: int = static_field()
+    backend: str = static_field()
+
+    @property
+    def capacity(self) -> int:
+        return self.num_rows * self.window
+
+    def load_factor(self) -> jax.Array:
+        return self.count.astype(jnp.float32) / jnp.float32(self.capacity)
+
+    def key_planes(self) -> jax.Array:
+        return layouts.key_planes(self.layout, self.store, self.key_words)
+
+    def value_planes(self) -> jax.Array:
+        return layouts.value_planes(self.layout, self.store, self.key_words,
+                                    self.value_words)
+
+
+def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
+           window: int = DEFAULT_WINDOW, scheme: str = "cops",
+           layout: str = "soa", seed: int = DEFAULT_SEED,
+           max_probes: int | None = None, backend: str = "jax") -> MultiValueHashTable:
+    if scheme not in probing.SCHEMES:
+        raise ValueError(f"scheme {scheme!r} not in {probing.SCHEMES}")
+    num_rows, _ = table_geometry(min_capacity, window)
+    store = layouts.create(layout, num_rows, window, key_words, value_words)
+    return MultiValueHashTable(
+        store=store, count=jnp.zeros((), _I), num_rows=num_rows, window=window,
+        key_words=key_words, value_words=value_words, scheme=scheme, layout=layout,
+        seed=seed, max_probes=int(max_probes or num_rows), backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# insertion — sequential over the batch (single writer per shard)
+# ---------------------------------------------------------------------------
+
+def _probe_for_slot(tstatic, store, key_vec, word):
+    """Lowest EMPTY/TOMBSTONE slot in probe order. Returns (ok, row, lane)."""
+    layout, key_words, num_rows, w, scheme, seed, max_probes = tstatic
+    row0 = probing.initial_row(word, num_rows, seed)
+    step = probing.row_step(scheme, word, num_rows, seed)
+
+    def cond(st):
+        attempt, row, done, *_ = st
+        return jnp.logical_and(attempt < max_probes, ~done)
+
+    def body(st):
+        attempt, row, done, crow, clane, ok = st
+        win = layouts.key_windows(layout, store, row[None], key_words)[0]
+        cand = (win[0] == EMPTY_KEY) | (win[0] == TOMBSTONE_KEY)
+        c_lane = probing.vote_lowest(cand[None])[0]
+        hit = c_lane < w
+        crow = jnp.where(hit, row, crow)
+        clane = jnp.where(hit, c_lane.astype(_U), clane)
+        ok = ok | hit
+        nrow = probing.advance_row(scheme, row, step, attempt, num_rows)
+        return attempt + 1, jnp.where(hit, row, nrow), hit, crow, clane, ok
+
+    z = jnp.zeros((), _U)
+    st = (jnp.zeros((), _I), row0, jnp.zeros((), bool), z, z, jnp.zeros((), bool))
+    _, _, _, crow, clane, ok = jax.lax.while_loop(cond, body, st)
+    return ok, crow, clane
+
+
+def insert(table: MultiValueHashTable, keys, values, mask=None,
+           ) -> tuple[MultiValueHashTable, jax.Array]:
+    """Append (key, value) pairs; duplicates of a key occupy distinct slots."""
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.insert_multi(table, keys, values, mask)
+    keys = normalize_words(keys, table.key_words, "keys")
+    values = normalize_words(values, table.value_words, "values")
+    n = keys.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    words = key_hash_word(keys)
+    tstatic = (table.layout, table.key_words, table.num_rows, table.window,
+               table.scheme, table.seed, table.max_probes)
+
+    def step(carry, inp):
+        store, count = carry
+        k, v, word, m = inp
+        ok, row, lane = _probe_for_slot(tstatic, store, k, word)
+        do_write = m & ok
+        # masked write via OOR-drop scatter (see single_value.insert)
+        wrow = jnp.where(do_write, row, _U(table.num_rows))
+        store = layouts.scatter_keys(table.layout, store, wrow[None],
+                                     lane[None], k[None])
+        store = layouts.scatter_values(table.layout, store, wrow[None],
+                                       lane[None], v[None], table.key_words)
+        count = count + do_write.astype(_I)
+        status = jnp.where(~m, _I(STATUS_MASKED),
+                           jnp.where(ok, _I(STATUS_INSERTED), _I(STATUS_FULL)))
+        return (store, count), status
+
+    (store, count), status = jax.lax.scan(step, (table.store, table.count),
+                                          (keys, values, words, mask))
+    return dataclasses.replace(table, store=store, count=count), status
+
+
+# ---------------------------------------------------------------------------
+# counting pass + gather pass (both vectorized across the query batch)
+# ---------------------------------------------------------------------------
+
+def count_values(table: MultiValueHashTable, keys) -> jax.Array:
+    """Number of stored values per queried key (the paper's counting pass)."""
+    keys = normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    word = key_hash_word(keys)
+    row0 = probing.initial_row(word, table.num_rows, table.seed)
+    step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+
+    def cond(st):
+        attempt, row, done, cnt = st
+        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+
+    def body(st):
+        attempt, row, done, cnt = st
+        win = layouts.key_windows(table.layout, table.store, row, table.key_words)
+        match = jnp.all(win == keys[:, :, None], axis=1)
+        has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
+        cnt = cnt + jnp.where(done, 0, probing.vote_count(match))
+        done = done | has_empty
+        nrow = probing.advance_row(table.scheme, row, step, attempt, table.num_rows)
+        return attempt + 1, jnp.where(done, row, nrow), done, cnt
+
+    st = (jnp.zeros((), _I), row0, jnp.zeros((n,), bool), jnp.zeros((n,), _I))
+    _, _, _, cnt = jax.lax.while_loop(cond, body, st)
+    return cnt
+
+
+def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather every value for each queried key.
+
+    Returns (values, offsets, counts): ``values`` is (out_capacity, value_words)
+    [or (out_capacity,) for 1-word values] with the values for query i in
+    ``values[offsets[i] : offsets[i] + counts[i]]``; ``offsets`` is the (n+1,)
+    exclusive prefix sum.  ``out_capacity`` is static (jit shape); entries past
+    the true total are zero.  Overflow beyond out_capacity is dropped —
+    callers size via ``count_values`` exactly as in the paper.
+    """
+    keys = normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    counts = count_values(table, keys)
+    offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
+    word = key_hash_word(keys)
+    row0 = probing.initial_row(word, table.num_rows, table.seed)
+    step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+    out = jnp.zeros((out_capacity, table.value_words), _U)
+
+    def cond(st):
+        attempt, row, done, seen, out = st
+        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+
+    def body(st):
+        attempt, row, done, seen, out = st
+        win = layouts.key_windows(table.layout, table.store, row, table.key_words)
+        vwin = layouts.value_windows(table.layout, table.store, row,
+                                     table.key_words, table.value_words)
+        match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]   # (n, W)
+        has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
+        # within-window rank of each matching lane
+        rank = jnp.cumsum(match.astype(_I), axis=1) - 1                     # (n, W)
+        pos = offsets[:n, None] + seen[:, None] + rank                      # (n, W)
+        pos = jnp.where(match, pos, out_capacity)                           # OOR drop
+        flat_pos = pos.reshape(-1)
+        flat_vals = jnp.moveaxis(vwin, 1, 2).reshape(-1, table.value_words)
+        out = out.at[flat_pos].set(flat_vals, mode="drop")
+        seen = seen + probing.vote_count(match)
+        done = done | has_empty
+        nrow = probing.advance_row(table.scheme, row, step, attempt, table.num_rows)
+        return attempt + 1, jnp.where(done, row, nrow), done, seen, out
+
+    st = (jnp.zeros((), _I), row0, jnp.zeros((n,), bool), jnp.zeros((n,), _I), out)
+    _, _, _, _, out = jax.lax.while_loop(cond, body, st)
+    if table.value_words == 1:
+        return out[:, 0], offsets, counts
+    return out, offsets, counts
+
+
+def erase(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, jax.Array]:
+    """Tombstone every pair whose key matches. Returns (table, erased_counts)."""
+    keys = normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    word = key_hash_word(keys)
+    row0 = probing.initial_row(word, table.num_rows, table.seed)
+    step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+    store = table.store
+
+    def cond(st):
+        attempt, row, done, cnt, store = st
+        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+
+    def body(st):
+        attempt, row, done, cnt, store = st
+        win = layouts.key_windows(table.layout, store, row, table.key_words)
+        match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]
+        has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
+        # scatter tombstones at every matching lane of every queried row
+        rows_b = jnp.broadcast_to(row[:, None], match.shape)
+        lanes_b = jax.lax.broadcasted_iota(_U, match.shape, 1)
+        srows = jnp.where(match, rows_b, _U(table.num_rows)).reshape(-1)
+        slanes = lanes_b.reshape(-1)
+        store = layouts.scatter_key_word(table.layout, store, srows, slanes,
+                                         TOMBSTONE_KEY, table.key_words,
+                                         table.num_rows)
+        cnt = cnt + probing.vote_count(match)
+        done = done | has_empty
+        nrow = probing.advance_row(table.scheme, row, step, attempt, table.num_rows)
+        return attempt + 1, jnp.where(done, row, nrow), done, cnt, store
+
+    st = (jnp.zeros((), _I), row0, jnp.zeros((n,), bool), jnp.zeros((n,), _I), store)
+    _, _, _, cnt, store = jax.lax.while_loop(cond, body, st)
+    kp = layouts.key_planes(table.layout, store, table.key_words)[0]
+    count = jnp.sum((kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY), dtype=_I)
+    return dataclasses.replace(table, store=store, count=count), cnt
+
+
+def for_each(table: MultiValueHashTable, keys, fn: Callable, max_values: int):
+    """Apply ``fn(key, value, valid)`` to every (query, stored-value) pair.
+
+    ``max_values`` bounds values per key (static).  Device-sided callback
+    analogue of §IV-B.4 for the multi-value case.
+    """
+    keys_n = normalize_words(keys, table.key_words, "keys")
+    n = keys_n.shape[0]
+    vals, offsets, counts = retrieve_all(table, keys_n, n * max_values)
+    vals = normalize_words(vals, table.value_words, "values")
+    idx = offsets[:n, None] + jnp.arange(max_values)[None, :]
+    valid = jnp.arange(max_values)[None, :] < counts[:, None]
+    idx = jnp.where(valid, idx, 0)
+    per_key_vals = vals[idx]                                      # (n, max_values, vw)
+    return jax.vmap(lambda k, vs, ms: jax.vmap(lambda v, m: fn(k, v, m))(vs, ms))(
+        keys_n, per_key_vals, valid)

@@ -1,0 +1,83 @@
+"""Probing schemes over the (p, W) row layout — COPS and baselines.
+
+The table is a 2-D array of ``p`` rows (p prime) by ``W`` lanes.  One *probe
+window* is one row: the whole row is examined with vector ops — the TPU
+analogue of the paper's warp-cooperative window (§IV-B.2).  The *outer*
+scheme walks rows; the *inner* scheme is always "linear over the W lanes of
+the row", resolved by a vectorized vote (see ``vote_*`` below).
+
+Schemes (outer walk), all incremental to stay u32-overflow-safe:
+
+- ``"cops"``   — double hashing over rows: row_{l+1} = (row_l + g(k)) mod p.
+                 This is the paper's COPS (DH outer + LP inner).  With W=1 it
+                 degenerates to scalar double hashing (cuDPP-style baseline).
+- ``"linear"`` — row_{l+1} = (row_l + 1) mod p.  With W=1 this is the
+                 one-thread-per-key linear probing baseline (cuDF-style);
+                 with W>1 it is "blocked LP".  Exhibits primary clustering.
+- ``"quadratic"`` — row_{l+1} = (row_l + 2l + 1) mod p (incremental l^2).
+
+Each key's walk starts at ``h1(k) mod p`` and runs at most ``max_probes``
+attempts (default p: DH/LP visit every row exactly once, the paper's abort
+criterion "all slots visited").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+_U = jnp.uint32
+
+SCHEMES = ("cops", "linear", "quadratic")
+
+
+def initial_row(key_word: jax.Array, num_rows: int, seed: int) -> jax.Array:
+    return hashing.hash_rows(key_word, num_rows, seed)
+
+
+def row_step(scheme: str, key_word: jax.Array, num_rows: int, seed: int) -> jax.Array:
+    """Per-key row increment (constant across attempts for cops/linear)."""
+    if scheme == "cops":
+        return hashing.hash_step(key_word, num_rows, seed)
+    if scheme == "linear":
+        return jnp.ones_like(key_word)
+    if scheme == "quadratic":
+        # placeholder; quadratic uses the attempt counter, see advance_row
+        return jnp.ones_like(key_word)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def advance_row(scheme: str, row: jax.Array, step: jax.Array, attempt: jax.Array,
+                num_rows: int) -> jax.Array:
+    """Next row after ``attempt`` completed probes (attempt counts from 0)."""
+    p = _U(num_rows)
+    if scheme == "quadratic":
+        # (l+1)^2 - l^2 = 2l + 1
+        inc = (_U(2) * attempt.astype(_U) + _U(1)) % p
+    else:
+        inc = step
+    return (row + inc) % p
+
+
+# ---------------------------------------------------------------------------
+# In-window votes — the vector analogue of __ballot_sync + __ffs (paper step 3/4)
+# ---------------------------------------------------------------------------
+
+def vote_lowest(mask: jax.Array) -> jax.Array:
+    """Index of the lowest set lane, or W if none.  mask: (..., W) bool."""
+    w = mask.shape[-1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, mask.shape, mask.ndim - 1)
+    return jnp.min(jnp.where(mask, lanes, jnp.int32(w)), axis=-1)
+
+
+def vote_any(mask: jax.Array) -> jax.Array:
+    """Group-any over the window lanes."""
+    return jnp.any(mask, axis=-1)
+
+
+def vote_count(mask: jax.Array) -> jax.Array:
+    """Population count over the window lanes (multi-value counting pass)."""
+    return jnp.sum(mask.astype(jnp.int32), axis=-1)

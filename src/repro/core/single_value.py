@@ -1,0 +1,378 @@
+"""SingleValueHashTable — open-addressing, COPS probing, functional updates.
+
+The table is a pytree: ``insert``/``erase`` return a new table (XLA reuses
+the buffers in-place under jit when the argument is donated), ``retrieve`` is
+pure.  This is the JAX rendering of the paper's host-sided *and* device-sided
+interface (DESIGN.md §3.1): because ops are pure jittable functions they can
+be fused into larger computations exactly like the CUDA device-sided API.
+
+Semantics (paper §IV-B.3–5, adapted):
+
+- ``insert`` upserts: a present key has its value overwritten and reports
+  ``STATUS_UPDATED`` (the paper's "duplicate warning").  Absent keys claim the
+  earliest candidate slot (EMPTY or TOMBSTONE) in probe order.  Unlike a
+  naive tombstone-reuse scheme we keep probing until a *match* or an *EMPTY*
+  window before claiming a remembered tombstone — this preserves the
+  invariant "at most one live copy per key" after deletions, and keeps every
+  live key at-or-before the first EMPTY window of its probe sequence, which
+  is what lets retrieval stop at the first EMPTY (paper §IV-B.4).
+- ``erase`` writes TOMBSTONEs (§IV-B.5).
+- Insertion is *sequential over the batch* (lax.scan): on TPU the batch has
+  exactly one writer per table shard (ownership partitioning, DESIGN.md §2),
+  so serialization — not CAS — is the correctness mechanism.  Retrieval has
+  no write hazards and is fully vectorized across the batch.
+
+Key/value widths are in 32-bit words (1 => u32, 2 => u64 as hi/lo planes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, layouts, probing
+from repro.core.common import (
+    DEFAULT_SEED,
+    DEFAULT_WINDOW,
+    EMPTY_KEY,
+    STATUS_FULL,
+    STATUS_INSERTED,
+    STATUS_MASKED,
+    STATUS_UPDATED,
+    TOMBSTONE_KEY,
+    register_struct,
+    static_field,
+    table_geometry,
+)
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+@register_struct
+@dataclasses.dataclass
+class SingleValueHashTable:
+    store: dict
+    count: jax.Array                      # live keys (i32 scalar)
+    num_rows: int = static_field()
+    window: int = static_field()
+    key_words: int = static_field()
+    value_words: int = static_field()
+    scheme: str = static_field()
+    layout: str = static_field()
+    seed: int = static_field()
+    max_probes: int = static_field()
+    backend: str = static_field()
+
+    # -- convenience (python-side) -------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.num_rows * self.window
+
+    def load_factor(self) -> jax.Array:
+        return self.count.astype(jnp.float32) / jnp.float32(self.capacity)
+
+    def key_planes(self) -> jax.Array:
+        return layouts.key_planes(self.layout, self.store, self.key_words)
+
+    def value_planes(self) -> jax.Array:
+        return layouts.value_planes(self.layout, self.store, self.key_words,
+                                    self.value_words)
+
+
+def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
+           window: int = DEFAULT_WINDOW, scheme: str = "cops",
+           layout: str = "soa", seed: int = DEFAULT_SEED,
+           max_probes: int | None = None, backend: str = "jax") -> SingleValueHashTable:
+    """Create an empty table with capacity >= min_capacity rounded to p*W, p prime."""
+    if scheme not in probing.SCHEMES:
+        raise ValueError(f"scheme {scheme!r} not in {probing.SCHEMES}")
+    num_rows, _ = table_geometry(min_capacity, window)
+    store = layouts.create(layout, num_rows, window, key_words, value_words)
+    return SingleValueHashTable(
+        store=store, count=jnp.zeros((), _I), num_rows=num_rows, window=window,
+        key_words=key_words, value_words=value_words, scheme=scheme, layout=layout,
+        seed=seed, max_probes=int(max_probes or num_rows), backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# normalization helpers
+# ---------------------------------------------------------------------------
+
+def normalize_words(x, words: int, name: str) -> jax.Array:
+    """Accept (n,) u32 [words==1] or (n, words) u32; return (n, words)."""
+    x = jnp.asarray(x)
+    if x.dtype != jnp.uint32:
+        if x.dtype in (jnp.int32,):
+            x = x.astype(_U)
+        else:
+            raise TypeError(f"{name} must be uint32 words, got {x.dtype}")
+    if x.ndim == 1:
+        x = x[:, None]
+    if x.shape[-1] != words:
+        raise ValueError(f"{name} has {x.shape[-1]} words, table expects {words}")
+    return x
+
+
+def key_hash_word(keys: jax.Array) -> jax.Array:
+    """Fold (n, key_words) into the u32 word fed to the hash mixers."""
+    if keys.shape[-1] == 1:
+        return keys[..., 0]
+    word = keys[..., 0]
+    for w in range(1, keys.shape[-1]):
+        word = hashing.combine_planes(keys[..., w], word)
+    return word
+
+
+# ---------------------------------------------------------------------------
+# vectorized probe walk (shared by retrieve / erase / locate)
+# ---------------------------------------------------------------------------
+
+def _locate(table: SingleValueHashTable, keys: jax.Array):
+    """Vectorized COPS walk for a batch of keys.
+
+    Returns (rows, lanes, found) — position of each key if present.  Walks
+    until every key has either matched or hit a window containing EMPTY
+    (absence proof), or max_probes is exhausted.
+    """
+    n = keys.shape[0]
+    word = key_hash_word(keys)
+    row0 = probing.initial_row(word, table.num_rows, table.seed)
+    step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+    w = table.window
+
+    def cond(state):
+        attempt, row, done, frow, flane, found = state
+        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+
+    def body(state):
+        attempt, row, done, frow, flane, found = state
+        win = layouts.key_windows(table.layout, table.store, row, table.key_words)
+        match = jnp.all(win == keys[:, :, None], axis=1)          # (n, W)
+        has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)   # (n,)
+        mlane = probing.vote_lowest(match)                        # (n,) W if none
+        hit = (mlane < w) & ~done
+        frow = jnp.where(hit, row, frow)
+        flane = jnp.where(hit, mlane.astype(_U), flane)
+        found = found | hit
+        done = done | hit | has_empty
+        nrow = probing.advance_row(table.scheme, row, step, attempt, table.num_rows)
+        row = jnp.where(done, row, nrow)
+        return attempt + 1, row, done, frow, flane, found
+
+    state = (jnp.zeros((), _I), row0, jnp.zeros((n,), bool),
+             jnp.zeros((n,), _U), jnp.zeros((n,), _U), jnp.zeros((n,), bool))
+    _, _, _, frow, flane, found = jax.lax.while_loop(cond, body, state)
+    return frow, flane, found
+
+
+def retrieve(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
+    """Batch lookup -> (values (n, value_words) [or (n,) if 1 word], found (n,) bool)."""
+    keys = normalize_words(keys, table.key_words, "keys")
+    rows, lanes, found = _locate(table, keys)
+    vp = table.value_planes()                                     # (vw, p, W)
+    vals = vp[:, rows, lanes].T                                   # (n, vw)
+    vals = jnp.where(found[:, None], vals, 0)
+    if table.value_words == 1:
+        return vals[:, 0], found
+    return vals, found
+
+
+def contains(table: SingleValueHashTable, keys) -> jax.Array:
+    keys = normalize_words(keys, table.key_words, "keys")
+    return _locate(table, keys)[2]
+
+
+def erase(table: SingleValueHashTable, keys, mask=None) -> tuple[SingleValueHashTable, jax.Array]:
+    """Tombstone matching slots (paper §IV-B.5). Returns (table, erased_mask)."""
+    keys = normalize_words(keys, table.key_words, "keys")
+    rows, lanes, found = _locate(table, keys)
+    if mask is not None:
+        found = found & mask
+    # OOR row == num_rows drops masked/not-found scatters.
+    srows = jnp.where(found, rows, _U(table.num_rows))
+    store = layouts.scatter_key_word(table.layout, table.store, srows, lanes,
+                                     TOMBSTONE_KEY, table.key_words, table.num_rows)
+    # Recount live slots (duplicates in the batch hit one slot; a delta would
+    # double-count them).  One O(capacity) reduce, vector-friendly.
+    kp = layouts.key_planes(table.layout, store, table.key_words)[0]
+    count = jnp.sum((kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY), dtype=_I)
+    return dataclasses.replace(table, store=store, count=count), found
+
+
+# ---------------------------------------------------------------------------
+# insertion — sequential over the batch (single-writer-per-shard; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def _probe_for_insert(table_static, store, key_vec, word):
+    """Walk the probe sequence for one key.
+
+    Returns (mode, row, lane): mode 0 = matched existing key, 1 = claim
+    candidate slot, 2 = full.
+    """
+    layout, key_words, num_rows, w, scheme, seed, max_probes = table_static
+    row0 = probing.initial_row(word, num_rows, seed)
+    step = probing.row_step(scheme, word, num_rows, seed)
+
+    def cond(st):
+        attempt, row, done, *_ = st
+        return jnp.logical_and(attempt < max_probes, ~done)
+
+    def body(st):
+        attempt, row, done, crow, clane, have_cand, mrow, mlane, matched = st
+        win = layouts.key_windows(layout, store, row[None], key_words)[0]  # (kw, W)
+        match = jnp.all(win == key_vec[:, None], axis=0)                   # (W,)
+        empty = win[0] == EMPTY_KEY
+        tomb = win[0] == TOMBSTONE_KEY
+        m_lane = probing.vote_lowest(match[None])[0]
+        c_lane = probing.vote_lowest((empty | tomb)[None])[0]
+        has_empty = jnp.any(empty)
+        hit = m_lane < w
+        # remember the EARLIEST candidate seen over the whole walk
+        new_cand = jnp.logical_and(~have_cand, c_lane < w)
+        crow = jnp.where(new_cand, row, crow)
+        clane = jnp.where(new_cand, c_lane.astype(_U), clane)
+        have_cand = have_cand | (c_lane < w)
+        mrow = jnp.where(hit, row, mrow)
+        mlane = jnp.where(hit, m_lane.astype(_U), mlane)
+        matched = matched | hit
+        done = hit | has_empty
+        nrow = probing.advance_row(scheme, row, step, attempt, num_rows)
+        return (attempt + 1, jnp.where(done, row, nrow), done, crow, clane,
+                have_cand, mrow, mlane, matched)
+
+    z = jnp.zeros((), _U)
+    st = (jnp.zeros((), _I), row0, jnp.zeros((), bool), z, z,
+          jnp.zeros((), bool), z, z, jnp.zeros((), bool))
+    (_, _, _, crow, clane, have_cand, mrow, mlane, matched) = \
+        jax.lax.while_loop(cond, body, st)
+    mode = jnp.where(matched, _I(0), jnp.where(have_cand, _I(1), _I(2)))
+    row = jnp.where(matched, mrow, crow)
+    lane = jnp.where(matched, mlane, clane)
+    return mode, row, lane
+
+
+def insert(table: SingleValueHashTable, keys, values, mask=None,
+           ) -> tuple[SingleValueHashTable, jax.Array]:
+    """Batch upsert. Returns (table, status (n,) i32) — see STATUS_* codes.
+
+    Sequential lax.scan over the batch: within a shard there is exactly one
+    writer, so serial order — not CAS — provides the paper's linearizability
+    (DESIGN.md §2).  Duplicate keys inside one batch behave as consecutive
+    upserts (second occurrence reports STATUS_UPDATED).
+    """
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.insert(table, keys, values, mask)
+    keys = normalize_words(keys, table.key_words, "keys")
+    values = normalize_words(values, table.value_words, "values")
+    n = keys.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    words = key_hash_word(keys)
+    tstatic = (table.layout, table.key_words, table.num_rows, table.window,
+               table.scheme, table.seed, table.max_probes)
+
+    def step(carry, inp):
+        store, count = carry
+        k, v, word, m = inp
+        mode, row, lane = _probe_for_insert(tstatic, store, k, word)
+        # case 0: no-op (masked / full), 1: update value, 2: claim slot.
+        # Writes are masked via out-of-range rows (dropped scatters) rather
+        # than lax.switch — conditional branches returning the store defeat
+        # in-place buffer reuse (XLA copies the whole table per element).
+        case = jnp.where(~m, _I(0),
+                         jnp.where(mode == 0, _I(1),
+                                   jnp.where(mode == 1, _I(2), _I(0))))
+        oor = _U(table.num_rows)
+        vrow = jnp.where(case >= 1, row, oor)
+        store = layouts.scatter_values(table.layout, store, vrow[None],
+                                       lane[None], v[None], table.key_words)
+        krow = jnp.where(case == 2, row, oor)
+        store = layouts.scatter_keys(table.layout, store, krow[None],
+                                     lane[None], k[None])
+        count = count + jnp.where(case == 2, _I(1), _I(0))
+        status = jnp.where(~m, _I(STATUS_MASKED),
+                           jnp.where(mode == 0, _I(STATUS_UPDATED),
+                                     jnp.where(mode == 1, _I(STATUS_INSERTED),
+                                               _I(STATUS_FULL))))
+        return (store, count), status
+
+    (store, count), status = jax.lax.scan(step, (table.store, table.count),
+                                          (keys, values, words, mask))
+    return dataclasses.replace(table, store=store, count=count), status
+
+
+# ---------------------------------------------------------------------------
+# higher-order ops (paper §IV-B.4: for_each / for_all)
+# ---------------------------------------------------------------------------
+
+def for_each(table: SingleValueHashTable, keys, fn: Callable) -> Any:
+    """Apply ``fn(key, value, found)`` vectorized over a query batch.
+
+    The JAX rendering of the paper's device-sided callback: ``fn`` is traced
+    into the same jitted computation, so no intermediate results hit HBM.
+    """
+    keys = normalize_words(keys, table.key_words, "keys")
+    vals, found = retrieve(table, keys)
+    return jax.vmap(fn)(keys, normalize_words(vals, table.value_words, "values"),
+                        found)
+
+
+def for_all(table: SingleValueHashTable, fn: Callable) -> Any:
+    """Apply ``fn(key, value, live)`` over every slot of the table."""
+    kp = table.key_planes().reshape(table.key_words, -1).T      # (c, kw)
+    vp = table.value_planes().reshape(table.value_words, -1).T  # (c, vw)
+    live = (kp[:, 0] != EMPTY_KEY) & (kp[:, 0] != TOMBSTONE_KEY)
+    return jax.vmap(fn)(kp, vp, live)
+
+
+def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
+                  init, mask=None) -> tuple[SingleValueHashTable, jax.Array]:
+    """Sequential read-modify-write upsert: present -> update_fn(old, key),
+    absent -> insert ``init``.  Substrate for CountingHashTable."""
+    keys = normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    init = normalize_words(jnp.broadcast_to(jnp.asarray(init, _U),
+                                            (n,) if table.value_words == 1
+                                            else (n, table.value_words)),
+                           table.value_words, "init")
+    words = key_hash_word(keys)
+    tstatic = (table.layout, table.key_words, table.num_rows, table.window,
+               table.scheme, table.seed, table.max_probes)
+
+    def step(carry, inp):
+        store, count = carry
+        k, v0, word, m = inp
+        mode, row, lane = _probe_for_insert(tstatic, store, k, word)
+        old = layouts.value_windows(table.layout, store, row[None],
+                                    table.key_words, table.value_words)[0, :, lane]
+        upd = update_fn(old, k)
+        case = jnp.where(~m, _I(0),
+                         jnp.where(mode == 0, _I(1),
+                                   jnp.where(mode == 1, _I(2), _I(0))))
+        oor = _U(table.num_rows)
+        vrow = jnp.where(case >= 1, row, oor)
+        vnew = jnp.where(case == 1, upd, v0)
+        store = layouts.scatter_values(table.layout, store, vrow[None],
+                                       lane[None], vnew[None], table.key_words)
+        krow = jnp.where(case == 2, row, oor)
+        store = layouts.scatter_keys(table.layout, store, krow[None],
+                                     lane[None], k[None])
+        count = count + jnp.where(case == 2, _I(1), _I(0))
+        status = jnp.where(~m, _I(STATUS_MASKED),
+                           jnp.where(mode == 0, _I(STATUS_UPDATED),
+                                     jnp.where(mode == 1, _I(STATUS_INSERTED),
+                                               _I(STATUS_FULL))))
+        return (store, count), status
+
+    (store, count), status = jax.lax.scan(step, (table.store, table.count),
+                                          (keys, init, words, mask))
+    return dataclasses.replace(table, store=store, count=count), status

@@ -1,0 +1,121 @@
+"""Pipeline parallelism over the ``pod`` axis — ppermute-based GPipe.
+
+The block stack's leading dim is split across pipeline stages (the ``pod``
+mesh axis); microbatches stream through stages with
+``jax.lax.ppermute`` moving activations to the next stage.  The schedule is
+the scan-based rotating-buffer pipeline used by praxis/MaxText: at step t,
+stage s processes microbatch (t - s); jax.grad differentiates straight
+through (ppermute's transpose is the reverse ppermute), giving GPipe-style
+training without a hand-written 1F1B.
+
+Bubble fraction is (S-1)/(M+S-1) for S stages and M microbatches — choose
+M >= 4*S.  This is an opt-in alternative to the default pod=DP mapping
+(see DESIGN.md §5); ``tests/test_pipeline_parallel.py`` validates gradient
+equivalence against the unpipelined model on a host mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def stage_params(params_blocks, num_stages: int):
+    """Split stacked (L, ...) block params into (S, L/S, ...) stage stacks."""
+    def split(x):
+        l = x.shape[0]
+        assert l % num_stages == 0, (l, num_stages)
+        return x.reshape(num_stages, l // num_stages, *x.shape[1:])
+    return jax.tree.map(split, params_blocks)
+
+
+def pipelined_apply(block_fn: Callable, staged_params, x_microbatches,
+                    axis: str):
+    """Run microbatches through pipeline stages connected by ppermute.
+
+    Call INSIDE shard_map where ``staged_params`` has its stage dim mapped
+    over ``axis`` (each device holds (1, L/S, ...)) and ``x_microbatches``
+    is (M, mb, S, D) — every stage holds all microbatches (simplest
+    rotating-buffer variant).
+
+    Returns (M, mb, S, D) outputs valid on the LAST stage.
+    """
+    num_stages = jax.lax.axis_size(axis)
+    stage = jax.lax.axis_index(axis)
+    local_params = jax.tree.map(lambda p: p[0], staged_params)   # (L/S, ...)
+    m = x_microbatches.shape[0]
+    total_ticks = m + num_stages - 1
+    perm = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+
+    def run_stage(h):
+        def body(carry, blk):
+            return block_fn(blk, carry), None
+        out, _ = jax.lax.scan(body, h, local_params)
+        return out
+
+    def tick(carry, t):
+        buf, outs = carry                          # buf: (mb, S, D) in flight
+        # which microbatch enters stage 0 at tick t
+        mb_idx = jnp.clip(t, 0, m - 1)
+        incoming = x_microbatches[mb_idx]
+        h_in = jnp.where(stage == 0, incoming, buf)
+        h_out = run_stage(h_in)
+        # last stage writes its completed microbatch (t - S + 1)
+        done_idx = t - (num_stages - 1)
+        write = jnp.logical_and(stage == num_stages - 1, done_idx >= 0)
+        outs = jax.lax.cond(
+            write,
+            lambda o: jax.lax.dynamic_update_slice_in_dim(
+                o, h_out[None], jnp.clip(done_idx, 0, m - 1), axis=0),
+            lambda o: o, outs)
+        buf = jax.lax.ppermute(h_out, axis, perm)
+        return (buf, outs), None
+
+    buf0 = jnp.zeros_like(x_microbatches[0])
+    outs0 = jnp.zeros_like(x_microbatches)
+    (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(total_ticks))
+    # broadcast final outputs from the last stage to everyone
+    outs = jax.lax.ppermute(
+        outs, axis, [( (num_stages - 1 + i) % num_stages, i)
+                     for i in range(num_stages)]) if num_stages > 1 else outs
+    return outs
+
+
+def make_pipelined_loss(block_fn: Callable, loss_head: Callable,
+                        embed_fn: Callable, mesh: Mesh, axis: str = "pod",
+                        num_microbatches: int = 8):
+    """Wrap a block-structured LM into a pipeline-parallel loss over ``axis``.
+
+    embed_fn(params, batch) -> (h, extras); loss_head(params, h, batch) ->
+    scalar.  Embedding and head run replicated over the pipeline axis (they
+    are cheap relative to blocks at scale; vocab stays sharded over model).
+    """
+    def loss(params, batch):
+        def inner(staged_blocks, h_mb, batch_local):
+            outs = pipelined_apply(block_fn, staged_blocks, h_mb, axis)
+            return outs
+
+        def full(params, batch):
+            h, extras = embed_fn(params, batch)
+            mbs = h.reshape(num_microbatches,
+                            h.shape[0] // num_microbatches, *h.shape[1:])
+            staged = stage_params(params["blocks"],
+                                  int(mesh.shape[axis]))
+            spec_blocks = jax.tree.map(lambda _: P(axis), staged)
+            outs = jax.shard_map(
+                functools.partial(inner),
+                mesh=mesh,
+                in_specs=(spec_blocks, P(), P()),
+                out_specs=P(),
+                check_vma=False,
+            )(staged, mbs, 0)
+            h_out = outs.reshape(h.shape)
+            return loss_head(params, h_out, batch)
+
+        return full(params, batch)
+
+    return loss

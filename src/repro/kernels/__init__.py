@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+- ``cops``    — COPS probing: insert (single-/multi-value) + lookup over a
+                VMEM-resident table shard (paper §IV-B); u32 keys and
+                2-plane u64 keys (the beyond-32-bit claim, DESIGN.md §2).
+- ``bloom``   — blocked bloom filter insert/query on packed u32 words.
+- ``minhash`` — canonical k-mer extraction + hashing for the metagenomics
+                use case (paper §V-C).
+- ``flash``   — flash-attention forward with VMEM-resident online softmax
+                (the LM substrate's hot spot per §Roofline).
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jitted wrapper + padding/dispatch), and ref.py (pure-jnp oracle used by the
+allclose test sweeps).  Kernels run in interpret mode off-TPU.
+"""

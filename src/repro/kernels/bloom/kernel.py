@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the blocked bloom filter (paper §IV: BloomFilter).
+
+The filter is (num_blocks, words) packed u32 bit-words; each key touches
+exactly one block (one vector row — the "one memory transaction" property of
+blocked bloom filters, preserved on TPU as one VMEM row access).  Insert is
+a row read-OR-write; since the whole filter is VMEM-resident and grid steps
+are sequential, read-modify-write is race-free.  Query needs no
+serialization at all but uses the same row-gather structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hashing
+
+_U = jnp.uint32
+_I = jnp.int32
+
+DEFAULT_TILE = 256
+
+
+def _key_pattern(k, num_blocks, words, k_hashes, seed):
+    """(block_row, (words,) u32 OR-pattern) for one key."""
+    block = hashing.mix_murmur3(k ^ _U(seed)) % _U(num_blocks)
+    h = hashing.mix_xxhash(k ^ _U(seed))
+    g = hashing.mix_murmur3(k + _U(0x61C88647))
+    bits = words * 32
+    word_iota = jax.lax.broadcasted_iota(_U, (1, words), 1)[0]
+    pattern = jnp.zeros((words,), _U)
+    for i in range(k_hashes):
+        pos = (h + _U(i) * g) % _U(bits)
+        widx = pos // _U(32)
+        bit = pos % _U(32)
+        contrib = jnp.where(word_iota == widx,
+                            jax.lax.shift_left(_U(1), bit), _U(0))
+        pattern = pattern | contrib
+    return block, pattern
+
+
+def _insert_kernel(keys_ref, mask_ref, filt_in_ref, filt_ref,
+                   *, num_blocks, words, k_hashes, seed):
+    del filt_in_ref
+    tile = keys_ref.shape[1]
+
+    def one_key(j, _):
+        k = keys_ref[0, j]
+        m = mask_ref[0, j] != 0
+        block, pattern = _key_pattern(k, num_blocks, words, k_hashes, seed)
+
+        @pl.when(m)
+        def _():
+            row = filt_ref[pl.ds(block.astype(_I), 1), :][0]
+            filt_ref[pl.ds(block.astype(_I), 1), :] = (row | pattern)[None, :]
+
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def insert_call(filt, keys2d, mask2d, *, k_hashes, seed, interpret=True):
+    num_blocks, words = filt.shape
+    g, tile = keys2d.shape
+    kern = functools.partial(_insert_kernel, num_blocks=num_blocks, words=words,
+                             k_hashes=k_hashes, seed=seed)
+    full = pl.BlockSpec((num_blocks, words), lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, full],
+        out_specs=full,
+        out_shape=jax.ShapeDtypeStruct((num_blocks, words), _U),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(keys2d, mask2d, filt)
+
+
+def _query_kernel(keys_ref, filt_ref, out_ref,
+                  *, num_blocks, words, k_hashes, seed):
+    tile = keys_ref.shape[1]
+
+    def one_key(j, _):
+        k = keys_ref[0, j]
+        block, pattern = _key_pattern(k, num_blocks, words, k_hashes, seed)
+        row = filt_ref[pl.ds(block.astype(_I), 1), :][0]
+        hit = jnp.all((row & pattern) == pattern)
+        out_ref[0, j] = hit.astype(_I)
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def query_call(filt, keys2d, *, k_hashes, seed, interpret=True):
+    num_blocks, words = filt.shape
+    g, tile = keys2d.shape
+    kern = functools.partial(_query_kernel, num_blocks=num_blocks, words=words,
+                             k_hashes=k_hashes, seed=seed)
+    full = pl.BlockSpec((num_blocks, words), lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, full],
+        out_specs=row_tile,
+        out_shape=jax.ShapeDtypeStruct((g, tile), _I),
+        interpret=interpret,
+    )(keys2d, filt)

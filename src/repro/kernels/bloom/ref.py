@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the bloom kernel: the bit-plane implementation in
+``repro.core.bloom`` (scatter-max over unpacked bits — a different code path
+from the kernel's packed-word OR)."""
+
+from __future__ import annotations
+
+from repro.core import bloom as bloom_core
+
+insert = bloom_core.insert
+contains = bloom_core.contains

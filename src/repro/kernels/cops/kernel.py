@@ -1,0 +1,427 @@
+"""Pallas TPU kernel for COPS probing (paper §IV-B.2, Fig. 2).
+
+TPU mapping of the warp-cooperative scheme (DESIGN.md §2):
+
+- The table shard lives entirely in VMEM for the duration of the kernel:
+  BlockSpec maps the full (p, W) key/value planes with a constant index_map,
+  so the pipeline loads them once and revisits them across grid steps.  This
+  is the TPU analogue of "all probes of a group hit one cache line" — probes
+  cost VMEM-latency row slices, never HBM round trips.
+- One probe window = one (1, W) row slice; the warp vote becomes a vector
+  compare + iota-min over the W lanes.
+- The key batch streams through the grid in (1, T) tiles.  Keys are
+  processed *sequentially* inside each tile (fori_loop) and tiles execute
+  sequentially on the core (TPU grid semantics) — the single-writer
+  serialization that replaces atomicCAS under ownership partitioning.
+- Slot claims are read-modify-write of the whole row (vector-aligned store),
+  not a scalar lane store.
+
+The kernel supports the single-value upsert (claim-or-update), the
+multi-value append (claim-only), and lookup.  u32 keys / u32 values, SOA
+layout (kernel-side restriction; wider types take the pure-JAX path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.common import (
+    EMPTY_KEY,
+    STATUS_FULL,
+    STATUS_INSERTED,
+    STATUS_MASKED,
+    STATUS_UPDATED,
+    TOMBSTONE_KEY,
+)
+from repro.core import hashing
+
+_U = jnp.uint32
+_I = jnp.int32
+
+DEFAULT_TILE = 256
+
+
+def _win_vote(mask_row):
+    """Lowest set lane in a (W,) bool row, W if none — the group vote."""
+    w = mask_row.shape[0]
+    lanes = jax.lax.broadcasted_iota(_I, (1, w), 1)[0]
+    return jnp.min(jnp.where(mask_row, lanes, _I(w)))
+
+
+def _probe_setup(k, num_rows, seed, scheme):
+    row0 = hashing.hash_rows(k, num_rows, seed)
+    if scheme == "cops":
+        step = hashing.hash_step(k, num_rows, seed)
+    else:  # "linear" baseline
+        step = _U(1)
+    return row0, step
+
+
+# ---------------------------------------------------------------------------
+# insert (single-value upsert OR multi-value append)
+# ---------------------------------------------------------------------------
+
+def _insert_kernel(keys_ref, vals_ref, mask_ref, tk_in_ref, tv_in_ref,
+                   tk_ref, tv_ref, status_ref,
+                   *, num_rows, window, seed, max_probes, scheme, multi_value):
+    # tk_ref/tv_ref are the OUTPUT refs, aliased onto tk_in_ref/tv_in_ref —
+    # all reads and writes go through the output refs (single buffer).
+    del tk_in_ref, tv_in_ref
+    tile = keys_ref.shape[1]
+
+    def one_key(j, _):
+        k = keys_ref[0, j]
+        v = vals_ref[0, j]
+        m = mask_ref[0, j] != 0
+
+        row0, step = _probe_setup(k, num_rows, seed, scheme)
+
+        def cond(st):
+            attempt, row, done, *_ = st
+            return jnp.logical_and(attempt < max_probes, ~done)
+
+        def body(st):
+            (attempt, row, done, crow, clane, have_cand, mrow, mlane,
+             matched) = st
+            win = tk_ref[pl.ds(row.astype(_I), 1), :][0]           # (W,)
+            empty = win == EMPTY_KEY
+            tomb = win == TOMBSTONE_KEY
+            cand = empty | tomb
+            c_lane = _win_vote(cand)
+            has_empty = jnp.any(empty)
+            if multi_value:
+                hit = jnp.zeros((), bool)
+                m_lane = _I(window)
+            else:
+                match = win == k
+                m_lane = _win_vote(match)
+                hit = m_lane < window
+            new_cand = jnp.logical_and(~have_cand, c_lane < window)
+            crow = jnp.where(new_cand, row, crow)
+            clane = jnp.where(new_cand, c_lane, clane)
+            have_cand = have_cand | (c_lane < window)
+            mrow = jnp.where(hit, row, mrow)
+            mlane = jnp.where(hit, m_lane, mlane)
+            matched = matched | hit
+            if multi_value:
+                done = have_cand                      # first candidate wins
+            else:
+                done = hit | has_empty                # match or absence proof
+            nrow = (row + step) % _U(num_rows)
+            return (attempt + 1, jnp.where(done, row, nrow), done, crow,
+                    clane, have_cand, mrow, mlane, matched)
+
+        zu = jnp.zeros((), _U)
+        zi = jnp.zeros((), _I)
+        st = (zi, row0, jnp.zeros((), bool), zu, zi, jnp.zeros((), bool),
+              zu, zi, jnp.zeros((), bool))
+        (_, _, _, crow, clane, have_cand, mrow, mlane, matched) = \
+            jax.lax.while_loop(cond, body, st)
+
+        do_update = m & matched & (not multi_value)
+        do_claim = m & ~matched & have_cand
+        row = jnp.where(matched, mrow, crow).astype(_I)
+        lane = jnp.where(matched, mlane, clane)
+        write = do_update | do_claim
+
+        @pl.when(write)
+        def _():
+            lanes = jax.lax.broadcasted_iota(_I, (1, window), 1)[0]
+            sel = lanes == lane
+            vrow = tv_ref[pl.ds(row, 1), :][0]
+            tv_ref[pl.ds(row, 1), :] = jnp.where(sel, v, vrow)[None, :]
+
+        @pl.when(do_claim)
+        def _():
+            lanes = jax.lax.broadcasted_iota(_I, (1, window), 1)[0]
+            sel = lanes == lane
+            krow = tk_ref[pl.ds(row, 1), :][0]
+            tk_ref[pl.ds(row, 1), :] = jnp.where(sel, k, krow)[None, :]
+
+        status = jnp.where(~m, _I(STATUS_MASKED),
+                           jnp.where(do_update, _I(STATUS_UPDATED),
+                                     jnp.where(do_claim, _I(STATUS_INSERTED),
+                                               _I(STATUS_FULL))))
+        status_ref[0, j] = status
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def insert_call(table_keys, table_vals, keys2d, vals2d, mask2d, *, seed,
+                max_probes, scheme="cops", multi_value=False, interpret=True):
+    """keys2d/vals2d/mask2d: (G, T). Returns (table_keys, table_vals, status2d)."""
+    num_rows, window = table_keys.shape
+    g, tile = keys2d.shape
+    kern = functools.partial(
+        _insert_kernel, num_rows=num_rows, window=window, seed=seed,
+        max_probes=max_probes, scheme=scheme, multi_value=multi_value)
+    full = pl.BlockSpec((num_rows, window), lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, row_tile, full, full],
+        out_specs=[full, full, row_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((g, tile), _I),
+        ],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(keys2d, vals2d, mask2d, table_keys, table_vals)
+
+
+# ---------------------------------------------------------------------------
+# 64-bit keys: two u32 planes (hi, lo) — DESIGN.md §2.  The window match is
+# two vector compares ANDed; sentinels live on plane 0.  This is the kernel
+# path for the paper's "beyond 32-bit" claim (WarpDrive was 32-bit-only).
+# ---------------------------------------------------------------------------
+
+def _insert64_kernel(k0_ref, k1_ref, vals_ref, mask_ref, tk0_in, tk1_in,
+                     tv_in, tk0_ref, tk1_ref, tv_ref, status_ref,
+                     *, num_rows, window, seed, max_probes, scheme,
+                     multi_value):
+    del tk0_in, tk1_in, tv_in
+    tile = k0_ref.shape[1]
+
+    def one_key(j, _):
+        k0 = k0_ref[0, j]                 # primary plane (sentinels)
+        k1 = k1_ref[0, j]
+        v = vals_ref[0, j]
+        m = mask_ref[0, j] != 0
+        word = hashing.combine_planes(k1, k0)
+        row0, step = _probe_setup(word, num_rows, seed, scheme)
+
+        def cond(st):
+            attempt, row, done, *_ = st
+            return jnp.logical_and(attempt < max_probes, ~done)
+
+        def body(st):
+            (attempt, row, done, crow, clane, have_cand, mrow, mlane,
+             matched) = st
+            win0 = tk0_ref[pl.ds(row.astype(_I), 1), :][0]
+            win1 = tk1_ref[pl.ds(row.astype(_I), 1), :][0]
+            empty = win0 == EMPTY_KEY
+            tomb = win0 == TOMBSTONE_KEY
+            cand = empty | tomb
+            c_lane = _win_vote(cand)
+            has_empty = jnp.any(empty)
+            if multi_value:
+                hit = jnp.zeros((), bool)
+                m_lane = _I(window)
+            else:
+                match = (win0 == k0) & (win1 == k1)
+                m_lane = _win_vote(match)
+                hit = m_lane < window
+            new_cand = jnp.logical_and(~have_cand, c_lane < window)
+            crow = jnp.where(new_cand, row, crow)
+            clane = jnp.where(new_cand, c_lane, clane)
+            have_cand = have_cand | (c_lane < window)
+            mrow = jnp.where(hit, row, mrow)
+            mlane = jnp.where(hit, m_lane, mlane)
+            matched = matched | hit
+            done = have_cand if multi_value else (hit | has_empty)
+            nrow = (row + step) % _U(num_rows)
+            return (attempt + 1, jnp.where(done, row, nrow), done, crow,
+                    clane, have_cand, mrow, mlane, matched)
+
+        zu = jnp.zeros((), _U)
+        zi = jnp.zeros((), _I)
+        st = (zi, row0, jnp.zeros((), bool), zu, zi, jnp.zeros((), bool),
+              zu, zi, jnp.zeros((), bool))
+        (_, _, _, crow, clane, have_cand, mrow, mlane, matched) = \
+            jax.lax.while_loop(cond, body, st)
+
+        do_update = m & matched & (not multi_value)
+        do_claim = m & ~matched & have_cand
+        row = jnp.where(matched, mrow, crow).astype(_I)
+        lane = jnp.where(matched, mlane, clane)
+        write = do_update | do_claim
+        lanes = jax.lax.broadcasted_iota(_I, (1, window), 1)[0]
+        sel = lanes == lane
+
+        @pl.when(write)
+        def _():
+            vrow = tv_ref[pl.ds(row, 1), :][0]
+            tv_ref[pl.ds(row, 1), :] = jnp.where(sel, v, vrow)[None, :]
+
+        @pl.when(do_claim)
+        def _():
+            krow0 = tk0_ref[pl.ds(row, 1), :][0]
+            tk0_ref[pl.ds(row, 1), :] = jnp.where(sel, k0, krow0)[None, :]
+            krow1 = tk1_ref[pl.ds(row, 1), :][0]
+            tk1_ref[pl.ds(row, 1), :] = jnp.where(sel, k1, krow1)[None, :]
+
+        status_ref[0, j] = jnp.where(
+            ~m, _I(STATUS_MASKED),
+            jnp.where(do_update, _I(STATUS_UPDATED),
+                      jnp.where(do_claim, _I(STATUS_INSERTED),
+                                _I(STATUS_FULL))))
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def insert64_call(tk0, tk1, tv, k0_2d, k1_2d, vals2d, mask2d, *, seed,
+                  max_probes, scheme="cops", multi_value=False,
+                  interpret=True):
+    num_rows, window = tk0.shape
+    g, tile = k0_2d.shape
+    kern = functools.partial(
+        _insert64_kernel, num_rows=num_rows, window=window, seed=seed,
+        max_probes=max_probes, scheme=scheme, multi_value=multi_value)
+    full = pl.BlockSpec((num_rows, window), lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, row_tile, row_tile, full, full, full],
+        out_specs=[full, full, full, row_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((g, tile), _I),
+        ],
+        input_output_aliases={4: 0, 5: 1, 6: 2},
+        interpret=interpret,
+    )(k0_2d, k1_2d, vals2d, mask2d, tk0, tk1, tv)
+
+
+def _lookup64_kernel(k0_ref, k1_ref, tk0_ref, tk1_ref, tv_ref, vals_ref,
+                     found_ref, *, num_rows, window, seed, max_probes, scheme):
+    tile = k0_ref.shape[1]
+
+    def one_key(j, _):
+        k0 = k0_ref[0, j]
+        k1 = k1_ref[0, j]
+        word = hashing.combine_planes(k1, k0)
+        row0, step = _probe_setup(word, num_rows, seed, scheme)
+
+        def cond(st):
+            attempt, row, done, *_ = st
+            return jnp.logical_and(attempt < max_probes, ~done)
+
+        def body(st):
+            attempt, row, done, frow, flane, found = st
+            win0 = tk0_ref[pl.ds(row.astype(_I), 1), :][0]
+            win1 = tk1_ref[pl.ds(row.astype(_I), 1), :][0]
+            match = (win0 == k0) & (win1 == k1)
+            m_lane = _win_vote(match)
+            hit = m_lane < window
+            has_empty = jnp.any(win0 == EMPTY_KEY)
+            frow = jnp.where(hit, row, frow)
+            flane = jnp.where(hit, m_lane, flane)
+            found = found | hit
+            done = hit | has_empty
+            nrow = (row + step) % _U(num_rows)
+            return attempt + 1, jnp.where(done, row, nrow), done, frow, flane, found
+
+        zu = jnp.zeros((), _U)
+        zi = jnp.zeros((), _I)
+        st = (zi, row0, jnp.zeros((), bool), zu, zi, jnp.zeros((), bool))
+        _, _, _, frow, flane, found = jax.lax.while_loop(cond, body, st)
+        vrow = tv_ref[pl.ds(frow.astype(_I), 1), :][0]
+        lanes = jax.lax.broadcasted_iota(_I, (1, window), 1)[0]
+        val = jnp.max(jnp.where(lanes == flane, vrow, _U(0)))
+        vals_ref[0, j] = jnp.where(found, val, _U(0))
+        found_ref[0, j] = found.astype(_I)
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def lookup64_call(tk0, tk1, tv, k0_2d, k1_2d, *, seed, max_probes,
+                  scheme="cops", interpret=True):
+    num_rows, window = tk0.shape
+    g, tile = k0_2d.shape
+    kern = functools.partial(
+        _lookup64_kernel, num_rows=num_rows, window=window, seed=seed,
+        max_probes=max_probes, scheme=scheme)
+    full = pl.BlockSpec((num_rows, window), lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, full, full, full],
+        out_specs=[row_tile, row_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, tile), _U),
+            jax.ShapeDtypeStruct((g, tile), _I),
+        ],
+        interpret=interpret,
+    )(k0_2d, k1_2d, tk0, tk1, tv)
+
+
+# ---------------------------------------------------------------------------
+# lookup
+# ---------------------------------------------------------------------------
+
+def _lookup_kernel(keys_ref, tk_ref, tv_ref, vals_ref, found_ref,
+                   *, num_rows, window, seed, max_probes, scheme):
+    tile = keys_ref.shape[1]
+
+    def one_key(j, _):
+        k = keys_ref[0, j]
+        row0, step = _probe_setup(k, num_rows, seed, scheme)
+
+        def cond(st):
+            attempt, row, done, *_ = st
+            return jnp.logical_and(attempt < max_probes, ~done)
+
+        def body(st):
+            attempt, row, done, frow, flane, found = st
+            win = tk_ref[pl.ds(row.astype(_I), 1), :][0]
+            match = win == k
+            m_lane = _win_vote(match)
+            hit = m_lane < window
+            has_empty = jnp.any(win == EMPTY_KEY)
+            frow = jnp.where(hit, row, frow)
+            flane = jnp.where(hit, m_lane, flane)
+            found = found | hit
+            done = hit | has_empty
+            nrow = (row + step) % _U(num_rows)
+            return attempt + 1, jnp.where(done, row, nrow), done, frow, flane, found
+
+        zu = jnp.zeros((), _U)
+        zi = jnp.zeros((), _I)
+        st = (zi, row0, jnp.zeros((), bool), zu, zi, jnp.zeros((), bool))
+        _, _, _, frow, flane, found = jax.lax.while_loop(cond, body, st)
+
+        vrow = tv_ref[pl.ds(frow.astype(_I), 1), :][0]
+        lanes = jax.lax.broadcasted_iota(_I, (1, window), 1)[0]
+        val = jnp.max(jnp.where(lanes == flane, vrow, _U(0)))
+        vals_ref[0, j] = jnp.where(found, val, _U(0))
+        found_ref[0, j] = found.astype(_I)
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def lookup_call(table_keys, table_vals, keys2d, *, seed, max_probes,
+                scheme="cops", interpret=True):
+    """keys2d: (G, T). Returns (vals2d, found2d)."""
+    num_rows, window = table_keys.shape
+    g, tile = keys2d.shape
+    kern = functools.partial(
+        _lookup_kernel, num_rows=num_rows, window=window, seed=seed,
+        max_probes=max_probes, scheme=scheme)
+    full = pl.BlockSpec((num_rows, window), lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, full, full],
+        out_specs=[row_tile, row_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, tile), _U),
+            jax.ShapeDtypeStruct((g, tile), _I),
+        ],
+        interpret=interpret,
+    )(keys2d, table_keys, table_vals)

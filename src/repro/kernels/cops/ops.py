@@ -1,0 +1,151 @@
+"""Jitted wrappers dispatching table ops to the COPS Pallas kernel.
+
+Handles batch padding/tiling, table-struct plumbing, and the
+interpret-mode switch (interpret=True everywhere except on real TPU).
+Kernel path restrictions: SOA layout, 1-word keys and values — wider
+configurations fall back to the pure-JAX implementation in repro.core.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import EMPTY_KEY, STATUS_INSERTED, STATUS_MASKED
+from repro.kernels.cops import kernel as K
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+def should_interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] != "0"
+    return jax.default_backend() != "tpu"
+
+
+def _kernel_ok(table) -> bool:
+    return (table.layout == "soa" and table.key_words in (1, 2)
+            and table.value_words == 1 and table.scheme in ("cops", "linear"))
+
+
+def _tile_batch(x, tile, fill):
+    n = x.shape[0]
+    g = max(1, -(-n // tile))
+    pad = g * tile - n
+    x = jnp.pad(x, ((0, pad),), constant_values=fill)
+    return x.reshape(g, tile), n
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme", "tile", "multi_value", "interpret"))
+def _insert_jit(tk, tv, keys, vals, mask, *, seed, max_probes, scheme, tile,
+                multi_value, interpret):
+    k2, n = _tile_batch(keys, tile, EMPTY_KEY)
+    v2, _ = _tile_batch(vals, tile, 0)
+    m2, _ = _tile_batch(mask.astype(_I), tile, 0)
+    tk, tv, st2 = K.insert_call(tk, tv, k2, v2, m2, seed=seed,
+                                max_probes=max_probes, scheme=scheme,
+                                multi_value=multi_value, interpret=interpret)
+    return tk, tv, st2.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme", "tile", "multi_value", "interpret"))
+def _insert64_jit(tk0, tk1, tv, k0, k1, vals, mask, *, seed, max_probes,
+                  scheme, tile, multi_value, interpret):
+    k0_2, n = _tile_batch(k0, tile, EMPTY_KEY)
+    k1_2, _ = _tile_batch(k1, tile, 0)
+    v2, _ = _tile_batch(vals, tile, 0)
+    m2, _ = _tile_batch(mask.astype(_I), tile, 0)
+    tk0, tk1, tv, st2 = K.insert64_call(
+        tk0, tk1, tv, k0_2, k1_2, v2, m2, seed=seed, max_probes=max_probes,
+        scheme=scheme, multi_value=multi_value, interpret=interpret)
+    return tk0, tk1, tv, st2.reshape(-1)[:n]
+
+
+def _insert_dispatch(table, keys, values, mask, multi_value):
+    from repro.core import single_value as sv
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    values = sv.normalize_words(values, 1, "values")[:, 0]
+    if mask is None:
+        mask = jnp.ones(values.shape, bool)
+    interp = should_interpret()
+    tile = min(K.DEFAULT_TILE, values.shape[0])
+    if table.key_words == 2:
+        tk0, tk1 = table.store["keys"][0], table.store["keys"][1]
+        tv = table.store["values"][0]
+        tk0, tk1, tv, status = _insert64_jit(
+            tk0, tk1, tv, keys[:, 0], keys[:, 1], values, mask,
+            seed=table.seed, max_probes=table.max_probes, scheme=table.scheme,
+            tile=tile, multi_value=multi_value, interpret=interp)
+        store = {"keys": jnp.stack([tk0, tk1]), "values": tv[None]}
+    else:
+        tk = table.store["keys"][0]
+        tv = table.store["values"][0]
+        tk, tv, status = _insert_jit(
+            tk, tv, keys[:, 0], values, mask, seed=table.seed,
+            max_probes=table.max_probes, scheme=table.scheme, tile=tile,
+            multi_value=multi_value, interpret=interp)
+        store = {"keys": tk[None], "values": tv[None]}
+    count = table.count + jnp.sum(status == STATUS_INSERTED, dtype=_I)
+    return dataclasses.replace(table, store=store, count=count), status
+
+
+def insert(table, keys, values, mask=None):
+    """SingleValueHashTable upsert via the Pallas kernel (u32 or 2-plane u64
+    keys — the paper's beyond-32-bit claim on the kernel path)."""
+    from repro.core import single_value as sv
+    if not _kernel_ok(table):
+        return sv.insert(dataclasses.replace(table, backend="jax"), keys, values,
+                         mask)
+    return _insert_dispatch(table, keys, values, mask, multi_value=False)
+
+
+def insert_multi(table, keys, values, mask=None):
+    """MultiValueHashTable append via the Pallas kernel."""
+    from repro.core import multi_value as mv
+    if not _kernel_ok(table):
+        return mv.insert(dataclasses.replace(table, backend="jax"), keys, values,
+                         mask)
+    return _insert_dispatch(table, keys, values, mask, multi_value=True)
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme", "tile", "interpret"))
+def _lookup_jit(tk, tv, keys, *, seed, max_probes, scheme, tile, interpret):
+    k2, n = _tile_batch(keys, tile, EMPTY_KEY)
+    v2, f2 = K.lookup_call(tk, tv, k2, seed=seed, max_probes=max_probes,
+                           scheme=scheme, interpret=interpret)
+    return v2.reshape(-1)[:n], f2.reshape(-1)[:n] != 0
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme", "tile", "interpret"))
+def _lookup64_jit(tk0, tk1, tv, k0, k1, *, seed, max_probes, scheme, tile,
+                  interpret):
+    k0_2, n = _tile_batch(k0, tile, EMPTY_KEY)
+    k1_2, _ = _tile_batch(k1, tile, 0)
+    v2, f2 = K.lookup64_call(tk0, tk1, tv, k0_2, k1_2, seed=seed,
+                             max_probes=max_probes, scheme=scheme,
+                             interpret=interpret)
+    return v2.reshape(-1)[:n], f2.reshape(-1)[:n] != 0
+
+
+def retrieve(table, keys):
+    """Batch lookup via the Pallas kernel -> (values, found)."""
+    from repro.core import single_value as sv
+    if not _kernel_ok(table):
+        return sv.retrieve(dataclasses.replace(table, backend="jax"), keys)
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    tile = min(K.DEFAULT_TILE, keys.shape[0])
+    if table.key_words == 2:
+        return _lookup64_jit(
+            table.store["keys"][0], table.store["keys"][1],
+            table.store["values"][0], keys[:, 0], keys[:, 1],
+            seed=table.seed, max_probes=table.max_probes, scheme=table.scheme,
+            tile=tile, interpret=should_interpret())
+    return _lookup_jit(table.store["keys"][0], table.store["values"][0],
+                       keys[:, 0], seed=table.seed,
+                       max_probes=table.max_probes, scheme=table.scheme,
+                       tile=tile, interpret=should_interpret())

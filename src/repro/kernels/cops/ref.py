@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the COPS kernel.
+
+The reference semantics are the sequential-scan implementation in
+``repro.core.single_value`` / ``repro.core.multi_value`` (backend="jax") —
+a completely separate code path from the Pallas kernel (lax.scan over the
+batch + gather-based windows vs. in-kernel fori_loop over VMEM refs).
+Tests assert the kernel's table state and outputs match this oracle
+bit-for-bit across shape/width/load-factor sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import multi_value as mv
+from repro.core import single_value as sv
+
+
+def _as_jax(table):
+    return dataclasses.replace(table, backend="jax")
+
+
+def insert(table, keys, values, mask=None):
+    return sv.insert(_as_jax(table), keys, values, mask)
+
+
+def insert_multi(table, keys, values, mask=None):
+    return mv.insert(_as_jax(table), keys, values, mask)
+
+
+def retrieve(table, keys):
+    return sv.retrieve(_as_jax(table), keys)
+
+
+def retrieve_multi(table, keys, out_capacity):
+    return mv.retrieve_all(_as_jax(table), keys, out_capacity)

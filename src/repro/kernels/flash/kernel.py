@@ -1,0 +1,98 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+The §Roofline analysis shows the XLA-composed chunked attention still
+round-trips every (Tq, Tk) probability tile through HBM (fusion boundaries
+at each einsum).  This kernel keeps the whole online-softmax state in VMEM:
+one (Tq, hd) query tile is resident per grid step, K/V stream through in
+(Tk, hd) tiles, and only the final (Tq, hd) output block leaves the core —
+the canonical O(S) memory attention.
+
+Grid: (batch*heads, S/Tq).  BlockSpecs give the kernel a (Tq, hd) q tile
+and the full (S, hd) K/V panels of its (b, h) — at S=4096, hd=128, bf16
+that is 2 x 1 MiB of VMEM, well under budget; tiles are MXU-aligned
+(Tq, Tk, hd multiples of 128 recommended).
+
+Forward-only: training uses the jax.checkpoint'd XLA path (attention.py);
+wiring a custom_vjp backward kernel is the next §Perf step on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_F = jnp.float32
+
+DEFAULT_TQ = 128
+DEFAULT_TK = 128
+NEG_INF = np.float32(-1e30)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, tq, tk, seq_k, causal,
+                  scale):
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(_F) * scale                     # (Tq, hd)
+    nk = seq_k // tk
+
+    def kv_step(ik, carry):
+        m, l, acc = carry
+        kb = k_ref[0, pl.ds(ik * tk, tk), :].astype(_F)  # (Tk, hd)
+        vb = v_ref[0, pl.ds(ik * tk, tk), :].astype(_F)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=_F)  # (Tq, Tk)
+        if causal:
+            qpos = iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+            kpos = ik * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=_F)
+        acc_new = acc * corr[:, None] + pv
+        return m_new, l_new, acc_new
+
+    hd = q_ref.shape[-1]
+    m0 = jnp.full((tq,), NEG_INF, _F)
+    l0 = jnp.zeros((tq,), _F)
+    a0 = jnp.zeros((tq, hd), _F)
+    # causal: kv blocks beyond this q block's diagonal are fully masked —
+    # bound the loop at the diagonal instead of scanning them
+    if causal:
+        nk_eff = jnp.minimum(nk, (iq + 1) * tq // tk + (tq // tk > 0))
+        nk_eff = jnp.minimum(nk_eff, nk)
+    else:
+        nk_eff = nk
+    m, l, acc = jax.lax.fori_loop(0, nk_eff, kv_step, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_call(q, k, v, *, causal=True, tq=DEFAULT_TQ, tk=DEFAULT_TK,
+               interpret=True):
+    """q, k, v: (BH, S, hd) -> (BH, S, hd)."""
+    bh, seq, hd = q.shape
+    seq_k = k.shape[1]
+    tq = min(tq, seq)
+    tk = min(tk, seq_k)
+    assert seq % tq == 0 and seq_k % tk == 0, (seq, tq, seq_k, tk)
+    scale = 1.0 / float(np.sqrt(hd))
+    kern = functools.partial(_flash_kernel, tq=tq, tk=tk, seq_k=seq_k,
+                             causal=causal, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, seq // tq),
+        in_specs=[
+            pl.BlockSpec((1, tq, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq_k, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq_k, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Jitted wrapper for the flash attention kernel: GQA-aware (B, S, H, hd)
+interface matching repro.models.attention conventions."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cops.ops import should_interpret
+from repro.kernels.flash import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "tq", "tk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, tq=K.DEFAULT_TQ, tk=K.DEFAULT_TK,
+                    interpret=True):
+    """q: (B, S, H, hd); k, v: (B, S, Hkv, hd) with H % Hkv == 0.
+
+    Returns (B, S, H, hd).  GQA is handled by repeating K/V head panels
+    (index-gather, not materialized copies, under XLA).
+    """
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], hd)
+    out = K.flash_call(qf, kf, vf, causal=causal, tq=tq, tk=tk,
+                       interpret=interpret)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def flash_attention_auto(q, k, v, **kw):
+    return flash_attention(q, k, v, interpret=should_interpret(), **kw)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel: naive full-matrix
+softmax attention in fp32."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention(q, k, v, *, causal=True):
+    """q, k, v: (BH, S, hd) -> (BH, S, hd)."""
+    _, sq, hd = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the k-mer/minhash kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+_U = jnp.uint32
+
+INVALID = np.uint32(0xFFFFFFFF)
+
+
+def kmer_hashes(bases: jax.Array, k: int) -> jax.Array:
+    """Canonical k-mer hash per window start; (L,) -> (L - k + 1,)."""
+    bases = jnp.asarray(bases).astype(_U)
+    n = bases.shape[0] - k + 1
+    fwd = jnp.zeros((n,), _U)
+    rev = jnp.zeros((n,), _U)
+    bad = jnp.zeros((n,), bool)
+    for j in range(k):
+        b = bases[j:j + n]
+        bad = bad | (b > _U(3))
+        fwd = (fwd << _U(2)) | (b & _U(3))
+        rev = rev | ((_U(3) - (b & _U(3))) << _U(2 * j))
+    canon = jnp.minimum(fwd, rev)
+    return jnp.where(bad, INVALID, hashing.mix_murmur3(canon))
+
+
+def minhash_sketch(hashes: jax.Array, s: int) -> jax.Array:
+    """The s smallest *distinct* valid hashes, INVALID-padded (MetaCache [20])."""
+    h = jnp.sort(hashes)
+    distinct = jnp.concatenate([jnp.ones((1,), bool), h[1:] != h[:-1]])
+    keep = distinct & (h != INVALID)
+    # stable-compact the kept entries to the front, then take s
+    order = jnp.argsort(~keep, stable=True)
+    compacted = jnp.where(keep[order], h[order], INVALID)
+    return compacted[:s]

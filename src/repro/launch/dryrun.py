@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+This is the scale proof: for the production meshes — (16,16)=256 chips
+single-pod and (2,16,16)=512 chips multi-pod — every assigned architecture's
+train/prefill/serve step must lower and compile against ShapeDtypeStruct
+inputs (no allocation).  ``compiled.memory_analysis()`` proves the per-chip
+footprint fits; ``cost_analysis()`` + HLO collective parsing feed the
+roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k --mesh single --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module
+(jax locks the device count at first init).
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.distributed import sharding
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo as zoo
+from repro.training import optimizer as opt_mod
+from repro.training import train_loop as tl
+
+
+# Per-arch training settings for the BASELINE dry-run.  These are the
+# paper-neutral defaults; §Perf hillclimbs override them per cell.
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    optimizer: str = "adamw"
+    accum_steps: int = 4
+    remat: str = "block"
+    seq_shard: bool = False
+    attn_tp_pad: int = 0          # pad heads to TP width (0 = off)
+
+
+# Post-hillclimb defaults (§Perf): attn_tp_pad for every arch whose head
+# count doesn't divide the 16-wide model axis (else attention replicates
+# across TP); seq_shard for all full-attention transformers (big collective
+# + activation-memory win); adafactor + deep accumulation for >100B params.
+TRAIN_SETTINGS = {
+    "smollm-360m": TrainSettings(seq_shard=True, attn_tp_pad=16),      # 15 H
+    "starcoder2-3b": TrainSettings(seq_shard=True, attn_tp_pad=16),    # 24 H
+    "olmo-1b": TrainSettings(),   # 16 H ok; seq_shard REGRESSED here (coll 2.7->10.9 s: at d_model=2048 the SP boundary gathers cost more than the boundary ARs they replace)
+    "whisper-small": TrainSettings(accum_steps=2, attn_tp_pad=16),     # 12 H
+    "internvl2-1b": TrainSettings(seq_shard=True, attn_tp_pad=16),     # 14 H
+    "rwkv6-3b": TrainSettings(),                   # time-scan: no seq shard
+    "mistral-large-123b": TrainSettings(optimizer="adafactor", accum_steps=16,
+                                        seq_shard=True),               # 96 H ok
+    "deepseek-v2-236b": TrainSettings(optimizer="adafactor", accum_steps=16,
+                                      seq_shard=True),   # MLA constraints
+    "dbrx-132b": TrainSettings(optimizer="adafactor", accum_steps=16,
+                               seq_shard=True),                        # 48 H ok
+    "jamba-1.5-large-398b": TrainSettings(optimizer="adafactor",
+                                          accum_steps=16),  # mamba time-scan
+}
+
+
+def tuned_config(arch: str, kind: str, overrides: dict | None = None):
+    cfg = configs.get_config(arch)
+    ts = TRAIN_SETTINGS[arch]
+    o = overrides or {}
+    if kind == "train":
+        cfg = dataclasses.replace(
+            cfg,
+            remat=o.get("remat", ts.remat),
+            seq_shard_activations=o.get("seq_shard", ts.seq_shard),
+        )
+    if kind in ("train", "prefill"):
+        # head padding helps any full-sequence pass; sequence sharding is
+        # train-only — on the forward-only prefill it REGRESSED mistral
+        # (compute 8->52 s: SP boundaries force per-chunk halo gathers with
+        # no remat savings to pay for them; §Perf notes)
+        cfg = dataclasses.replace(
+            cfg, attn_tp_pad=o.get("attn_tp_pad", ts.attn_tp_pad))
+    if "capacity_factor" in o and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=o["capacity_factor"]))
+    return cfg
+
+
+def _opt_config(arch: str, overrides: dict | None = None) -> opt_mod.OptConfig:
+    ts = TRAIN_SETTINGS[arch]
+    o = overrides or {}
+    return opt_mod.OptConfig(name=o.get("optimizer", ts.optimizer))
+
+
+# ---------------------------------------------------------------------------
+# lowering builders
+# ---------------------------------------------------------------------------
+
+def _prefill_forward(cfg, model):
+    """Uniform prefill step: full forward, last-position logits only."""
+    from repro.models import transformer as tf
+    from repro.models import encdec as ed
+    from repro.models.layers import embed, linear, unembed, apply_norm
+
+    if cfg.family == "audio":
+        def fn(params, batch):
+            enc = ed.encode(cfg, params, batch["frames"])
+            return enc[:, -1]
+        return fn
+
+    def fn(params, batch):
+        h = embed(params["embed"], batch["tokens"])
+        if cfg.family == "vlm":
+            pe = linear(params["frontend_proj"],
+                        batch["patches"].astype(h.dtype))
+            h = jnp.concatenate([pe, h], axis=1)
+        h, _ = tf.lm_hidden(cfg, params, h)
+        h = h[:, -1:]
+        if cfg.tie_embeddings:
+            return unembed(params["embed"], h)
+        return linear(params["lm_head"], h).astype(jnp.float32)
+    return fn
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Lower + compile one cell. Returns (lowered, compiled, meta)."""
+    cell = SHAPES[shape_name]
+    cfg = tuned_config(arch, cell.kind, overrides)
+    model = zoo.build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    o = overrides or {}
+
+    batch_shape = zoo.input_specs(cfg, cell)
+    batch_sh = sharding.batch_shardings(batch_shape, mesh)
+
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            ocfg = _opt_config(arch, overrides)
+            accum = o.get("accum_steps", TRAIN_SETTINGS[arch].accum_steps)
+            step_fn = tl.make_train_step(model, ocfg, accum_steps=accum)
+            state_shape = jax.eval_shape(
+                lambda: tl.init_state(model, ocfg, jax.random.PRNGKey(0)))
+            state_sh = sharding.tree_shardings(state_shape, mesh)
+            fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_shape, batch_shape)
+        elif cell.kind == "prefill":
+            params_shape = zoo.param_specs(cfg)
+            params_sh = sharding.tree_shardings(params_shape, mesh)
+            fwd = _prefill_forward(cfg, model)
+            fn = jax.jit(fwd, in_shardings=(params_sh, batch_sh))
+            lowered = fn.lower(params_shape, batch_shape)
+        else:  # decode
+            params_shape = zoo.param_specs(cfg)
+            # NOTE: mode="serve" (full-mesh TP weights, no FSDP gathers) was
+            # tried and REFUTED for this mesh: batch-sharded activations vs
+            # 2D-sharded weights reshard every layer (coll 579->1117 ms).
+            # FSDP weight-gathers amortized over the 128-way decode batch
+            # remain the better trade (§Perf cell 3, iter 3).
+            params_sh = sharding.tree_shardings(
+                params_shape, mesh,
+                mode=o.get("param_mode", "train") if o else "train")
+            cache_shape = zoo.cache_specs(cfg, cell)
+            cache_sh = sharding.cache_shardings(cache_shape, mesh, cfg, cell)
+            pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+            pos_sh = NamedSharding(mesh, P())
+
+            def serve_step(params, cache, batch, pos):
+                return model.decode_step(params, cache, batch["tokens"], pos)
+
+            fn = jax.jit(serve_step,
+                         in_shardings=(params_sh, cache_sh, batch_sh, pos_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_shape, cache_shape, batch_shape,
+                               pos_shape)
+        compiled = lowered.compile()
+
+    meta = {"arch": arch, "shape": shape_name, "kind": cell.kind,
+            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+            "overrides": o}
+    return lowered, compiled, meta, cfg, cell
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None, save_hlo: str | None = None) -> dict:
+    t0 = time.time()
+    lowered, compiled, meta, cfg, cell = lower_cell(arch, shape_name,
+                                                    multi_pod, overrides)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    rec = dict(meta)
+    rec["compile_s"] = round(t_compile, 1)
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            rec[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    hlo_text = compiled.as_text()
+    rl = roofline.analyze(compiled, chips=meta["chips"],
+                          model_flops=roofline.model_flops_for(cfg, cell),
+                          hlo_text=hlo_text)
+    rec["roofline"] = dataclasses.asdict(rl)
+    if save_hlo:
+        os.makedirs(save_hlo, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{rec['mesh']}"
+        with open(os.path.join(save_hlo, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for shape in applicable_shapes(cfg):
+            out.append((arch, shape))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--override", default=None,
+                    help='JSON dict, e.g. {"accum_steps": 32}')
+    args = ap.parse_args(argv)
+
+    cells = (all_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    overrides = json.loads(args.override) if args.override else None
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            try:
+                rec = run_cell(arch, shape, mp, overrides, args.save_hlo)
+                rl = rec["roofline"]
+                print(f"PASS {tag}: compile={rec['compile_s']}s "
+                      f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                      f"bottleneck={rl['bottleneck']} "
+                      f"compute={rl['compute_s']*1e3:.1f}ms "
+                      f"memory={rl['memory_s']*1e3:.1f}ms "
+                      f"coll={rl['collective_s']*1e3:.1f}ms "
+                      f"useful={rl['useful_ratio']:.2f}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+            except Exception:
+                failures += 1
+                print(f"FAIL {tag}", flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

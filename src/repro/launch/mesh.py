@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips over DCI.
+
+``make_production_mesh`` is a FUNCTION (not module state) so importing this
+module never touches jax device initialization; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax use.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(num_devices: int | None = None, axis: str = "data"):
+    """1-D mesh over whatever devices exist (tests, examples, benchmarks)."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry the batch (pod + data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,89 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL records."""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path: str) -> list[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                out.append(json.loads(line))
+    # keep the LAST record per (arch, shape, mesh) — reruns supersede
+    seen = {}
+    for r in out:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | kind | compile s | temp GiB/chip | "
+            "args GiB/chip | FLOPs/dev | HBM bytes/dev | wire bytes/dev | "
+            "dominant collective |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        chips = r["chips"]
+        coll = rl["collectives"]["bytes"]
+        dom = max(coll, key=coll.get) if coll else "none"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+            f"{r['compile_s']} | "
+            f"{fmt_bytes(r.get('temp_size_in_bytes', 0) / chips)} | "
+            f"{fmt_bytes(r.get('argument_size_in_bytes', 0) / chips)} | "
+            f"{rl['flops_per_device']:.2e} | {rl['bytes_per_device']:.2e} | "
+            f"{rl['wire_bytes']:.2e} | {dom} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | MODEL_FLOPS | useful ratio | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted((r for r in recs if r["mesh"] == mesh),
+                    key=lambda r: (r["arch"], r["shape"])):
+        rl = r["roofline"]
+        note = _note(rl)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"**{rl['bottleneck']}** | {rl['model_flops']:.2e} | "
+            f"{rl['useful_ratio']:.2f} | {note} |")
+    return "\n".join(rows)
+
+
+def _note(rl: dict) -> str:
+    b = rl["bottleneck"]
+    if b == "memory":
+        return "cut HBM traffic: fuse/remat-policy/layout"
+    if b == "collective":
+        coll = rl["collectives"]["bytes"]
+        dom = max(coll, key=coll.get) if coll else "?"
+        return f"dominant {dom}: reshard to shrink it"
+    if rl["useful_ratio"] < 0.3:
+        return "redundant compute: fix replication/remat"
+    return "near-roofline compute"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_all.jsonl"
+    recs = load(path)
+    print(f"## Dry-run records: {len(recs)}\n")
+    print("### Single-pod roofline (16x16)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n### Multi-pod roofline (2x16x16)\n")
+    print(roofline_table(recs, "2x16x16"))
+    print("\n### Full dry-run table\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

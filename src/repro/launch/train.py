@@ -1,0 +1,135 @@
+"""End-to-end training driver with fault tolerance.
+
+Trains any ``--arch`` (full or smoke config) on the available devices,
+with: sharded+async checkpointing, SIGTERM/SIGINT preemption save, resume
+from latest checkpoint, deterministic per-(step, shard) data (a replacement
+host recomputes identical batches — straggler/elastic safety), optional
+cross-pod int8 gradient compression, and hash-table n-gram dedup in the
+data path.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck --ckpt-every 20
+    PYTHONPATH=src python -m repro.launch.train ... --resume
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import pipeline as dp
+from repro.distributed import collectives, sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_zoo as zoo
+from repro.training import checkpoint as ckpt_mod
+from repro.training import compression as comp
+from repro.training import optimizer as opt_mod
+from repro.training import train_loop as tl
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--dedup", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    model = zoo.build(cfg)
+    mesh = make_host_mesh()
+    ocfg = opt_mod.OptConfig(name=args.optimizer, lr=args.lr,
+                             warmup_steps=max(2, args.steps // 20),
+                             total_steps=args.steps)
+    dcfg = dp.DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch)
+
+    grad_sync = collectives.make_grad_sync(
+        mesh, comp.CompressionConfig(kind=args.grad_compression))
+    step_fn = tl.make_train_step(model, ocfg, accum_steps=args.accum,
+                                 grad_transform=grad_sync)
+
+    with jax.set_mesh(mesh):
+        state = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
+        state_sh = sharding.tree_shardings(state, mesh)
+        state = jax.device_put(state, state_sh)
+
+        manager = None
+        start_step = 0
+        if args.ckpt_dir:
+            manager = ckpt_mod.CheckpointManager(args.ckpt_dir)
+            if args.resume and manager.latest_step() is not None:
+                state, extra = manager.restore(
+                    jax.eval_shape(lambda: state), shardings=state_sh)
+                start_step = int(extra.get("step", manager.latest_step()))
+                print(f"resumed from step {start_step}", flush=True)
+
+        # preemption safety: save on SIGTERM/SIGINT, then exit cleanly
+        preempted = {"flag": False}
+
+        def _handler(signum, frame):
+            preempted["flag"] = True
+
+        signal.signal(signal.SIGTERM, _handler)
+        signal.signal(signal.SIGINT, _handler)
+
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+        dedup_table = None
+        if args.dedup:
+            from repro.core import counting
+            dedup_table = counting.create(1 << 16)
+
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            batch = dp.get_batch(dcfg, step)
+            if dedup_table is not None:
+                dedup_table, keep = dp.dedup_filter(dedup_table,
+                                                    batch["tokens"])
+                batch["loss_mask"] = jnp.broadcast_to(
+                    keep[:, None], batch["labels"].shape)
+            state, metrics = jit_step(state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                tok_s = (args.batch * args.seq * (step - start_step + 1)
+                         / (time.time() - t0))
+                print(f"step {step} loss {loss:.4f} lr "
+                      f"{float(metrics['lr']):.2e} tok/s {tok_s:.0f}",
+                      flush=True)
+            if manager and (step + 1) % args.ckpt_every == 0:
+                manager.save_async(step + 1, state, {"step": step + 1})
+            if preempted["flag"]:
+                if manager:
+                    manager.save(step + 1, state, {"step": step + 1,
+                                                   "preempted": True})
+                    print(f"preempted: saved step {step + 1}", flush=True)
+                return 0
+        if manager:
+            manager.save(args.steps, state, {"step": args.steps})
+            manager.wait()
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,420 @@
+"""Attention: GQA with RoPE + chunked (flash-style) computation, and MLA.
+
+``chunked_causal_attention`` is a pure-JAX flash attention: queries and keys
+are processed in blocks under lax.scan with a running (max, denom, acc)
+triple, so the (S, S) score matrix is never materialized.  At the assigned
+shapes (up to 32k prefill at batch 32) materialized scores would need TBs of
+HBM — blockwise attention is a requirement, not an optimization.  XLA maps
+each block product onto the MXU; block sizes are multiples of 128.
+
+MLA (DeepSeek-V2) keeps a rank-512 compressed KV cache; decode uses the
+*absorbed* form (q projected through W_uk so attention runs directly against
+the compressed cache) — the trick that makes the 236B model's 32k decode
+cache fit comfortably (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, apply_rope, init_linear, linear
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model: int, num_heads: int, num_kv_heads: int,
+             head_dim: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": init_linear(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": init_linear(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": init_linear(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             *, causal: bool = True, q_offset: int = 0,
+                             q_chunk: int = 512, k_chunk: int = 1024,
+                             kv_valid: int | None = None,
+                             ) -> jax.Array:
+    """Flash-style attention.
+
+    q: (B, Sq, Hkv, rep, hd); k, v: (B, Sk, Hkv, hd).  Returns (B, Sq, Hkv,
+    rep, hd).  ``q_offset`` is the absolute position of q[0] (cache decode /
+    prefill continuation).  ``kv_valid`` masks out key positions >= it
+    (padded cross-attention keys).
+    """
+    b, sq, hkv, rep, hd = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    # auto-pad ragged sequence lengths (e.g. whisper's 1500 frames) to chunk
+    # multiples; padded keys are masked via kv_valid, padded queries sliced off
+    q_pad = (-sq) % q_chunk
+    k_pad = (-sk) % k_chunk
+    orig_sq = sq
+    if k_pad:
+        kv_valid = min(kv_valid, sk) if kv_valid is not None else sk
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        sk += k_pad
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0), (0, 0)))
+        sq += q_pad
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(b, nq, q_chunk, hkv, rep, hd)
+    kb = k.reshape(b, nk, k_chunk, hkv, hd)
+    vb = v.reshape(b, nk, k_chunk, hkv, hd)
+
+    q_pos = (q_offset + jnp.arange(sq)).reshape(nq, q_chunk)
+    k_pos = jnp.arange(sk).reshape(nk, k_chunk)
+
+    def per_q_block(iq, qblk):
+        # qblk: (B, Tq, Hkv, rep, hd)
+        qpos = q_pos[iq]                                     # (Tq,)
+
+        @jax.checkpoint
+        def per_k_block(carry, ik):
+            # rematerialized: without this, the backward pass saves the
+            # (Tq, Tk) f32 score/prob tiles of EVERY (q, k) chunk pair —
+            # the full S^2 score matrix in disguise.  Recomputing tiles from
+            # q/k/v is the flash-attention backward (§Perf cell 1, iter 2).
+            m, l, acc = carry
+            kblk = kb[:, ik]                                 # (B, Tk, Hkv, hd)
+            vblk = vb[:, ik]
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = k_pos[ik]
+            if causal:
+                mask = qpos[:, None] >= kpos[None, :]        # (Tq, Tk)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            if kv_valid is not None:
+                s = jnp.where((kpos < kv_valid)[None, None, None, None, :],
+                              s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))      # (B,Hkv,rep,Tq)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhrqk,bkhd->bhrqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, rep, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(per_k_block, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)                  # (B,Tq,Hkv,rep,hd)
+
+    outs = jax.lax.map(lambda i: per_q_block(i, qb[:, i]), jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, rep, hd)
+    if q_pad:
+        out = out[:, :orig_sq]
+    return out.astype(q.dtype)
+
+
+def gqa_train(p: Params, x: jax.Array, *, num_heads: int, num_kv_heads: int,
+              head_dim: int, rope_theta: float, causal: bool = True,
+              use_rope: bool = True, q_chunk: int = 512,
+              k_chunk: int = 1024, return_kv: bool = False,
+              tp_pad_heads: int = 0):
+    """Full-sequence attention (training / prefill). x: (B, S, D).
+
+    ``tp_pad_heads`` (a TP width, e.g. 16): expand GQA K/V to full MHA and
+    zero-pad the head dim to a multiple of the TP width, then pin the head
+    dim to the 'model' axis.  Without this, head counts that don't divide
+    the TP width leave the whole attention block REPLICATED across the
+    model axis (GSPMD has nothing to shard) — a 16x compute+memory tax
+    observed directly in the smollm dry-run (EXPERIMENTS.md §Perf).  The
+    padded heads read zero K/V and their outputs are sliced off before wo.
+    """
+    from repro.models import shardutil
+    b, s, _ = x.shape
+    rep = num_heads // num_kv_heads
+    q = linear(p["wq"], x).reshape(b, s, num_heads, head_dim)
+    k = linear(p["wk"], x).reshape(b, s, num_kv_heads, head_dim)
+    v = linear(p["wv"], x).reshape(b, s, num_kv_heads, head_dim)
+    if use_rope:
+        pos = jnp.arange(s)[None, :]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    if tp_pad_heads and num_heads % tp_pad_heads != 0:
+        pad = (-num_heads) % tp_pad_heads
+        hp = num_heads + pad
+        k = jnp.repeat(k, rep, axis=2)                 # GQA -> MHA
+        v = jnp.repeat(v, rep, axis=2)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dp = ("pod", "data")
+        q = shardutil.constrain(q, dp, None, "model", None)
+        k = shardutil.constrain(k, dp, None, "model", None)
+        v = shardutil.constrain(v, dp, None, "model", None)
+        o = chunked_causal_attention(q.reshape(b, s, hp, 1, head_dim), k, v,
+                                     causal=causal, q_chunk=q_chunk,
+                                     k_chunk=k_chunk)
+        o = o.reshape(b, s, hp, head_dim)[:, :, :num_heads]
+        o = o.reshape(b, s, num_heads * head_dim)
+    else:
+        qg = q.reshape(b, s, num_kv_heads, rep, head_dim)
+        o = chunked_causal_attention(qg, k, v, causal=causal,
+                                     q_chunk=q_chunk, k_chunk=k_chunk)
+        o = o.reshape(b, s, num_heads * head_dim)
+    y = linear(p["wo"], o)
+    if return_kv:
+        if tp_pad_heads and num_heads % tp_pad_heads != 0:
+            # undo MHA expansion: kv head i lives at expanded index i*rep
+            return y, (k[:, :, :num_kv_heads * rep:rep],
+                       v[:, :, :num_kv_heads * rep:rep])
+        return y, (k, v)
+    return y
+
+
+def gqa_decode_ro(p: Params, x: jax.Array, cache_k: jax.Array,
+                  cache_v: jax.Array, pos: jax.Array, *, num_heads: int,
+                  num_kv_heads: int, head_dim: int, rope_theta: float,
+                  use_rope: bool = True):
+    """Read-only-cache decode: attends over cache[<pos] + the current token,
+    returning (y, k_new, v_new) WITHOUT writing the cache.
+
+    Why: threading a mutated cache slice through the layer scan makes XLA
+    rewrite the whole (L, B, S, H, hd) cache every token (67 MB/layer for a
+    16 KB update — §Perf cell 3).  Callers stack the per-layer k_new/v_new
+    and commit them with ONE dynamic_update_slice at ``pos`` after the scan.
+    """
+    b = x.shape[0]
+    rep = num_heads // num_kv_heads
+    smax = cache_k.shape[1]
+    q = linear(p["wq"], x).reshape(b, 1, num_heads, head_dim)
+    k = linear(p["wk"], x).reshape(b, 1, num_kv_heads, head_dim)
+    v = linear(p["wv"], x).reshape(b, 1, num_kv_heads, head_dim)
+    if use_rope:
+        posb = jnp.full((b, 1), pos)
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    qh = q.reshape(b, num_kv_heads, rep, head_dim)
+    scale = 1.0 / math.sqrt(head_dim)
+    s_cache = jnp.einsum("bhrd,bshd->bhrs", qh, cache_k,
+                         preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(smax)[None, None, None, :] < pos
+    s_cache = jnp.where(valid, s_cache, NEG_INF)
+    s_new = jnp.einsum("bhrd,bhd->bhr", qh, k[:, 0],
+                       preferred_element_type=jnp.float32) * scale
+    # two-term flash combine — concatenating [S] and [1] scores would break
+    # the sequence sharding of the cache scores (S+1 indivisible by the
+    # mesh), forcing GSPMD to all-gather the f32-converted V cache
+    # (observed: 70% of decode collective bytes, §Perf cell 3)
+    m = jnp.maximum(jnp.max(s_cache, axis=-1), s_new)           # (B,h,r)
+    p_cache = jnp.exp(s_cache - m[..., None])
+    p_new = jnp.exp(s_new - m)
+    denom = jnp.sum(p_cache, axis=-1) + p_new
+    o = (jnp.einsum("bhrs,bshd->bhrd", p_cache.astype(cache_v.dtype),
+                    cache_v, preferred_element_type=jnp.float32)
+         + p_new[..., None] * v[:, 0, :, None, :].astype(jnp.float32))
+    o = o / denom[..., None]
+    o = o.astype(x.dtype).reshape(b, 1, num_heads * head_dim)
+    return linear(p["wo"], o), k[:, 0], v[:, 0]
+
+
+def gqa_decode(p: Params, x: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+               pos: jax.Array, *, num_heads: int, num_kv_heads: int,
+               head_dim: int, rope_theta: float, use_rope: bool = True):
+    """Single-token decode. x: (B, 1, D); cache_[kv]: (B, Smax, Hkv, hd);
+    pos: scalar current position.  Returns (y, cache_k, cache_v)."""
+    b = x.shape[0]
+    rep = num_heads // num_kv_heads
+    smax = cache_k.shape[1]
+    q = linear(p["wq"], x).reshape(b, 1, num_heads, head_dim)
+    k = linear(p["wk"], x).reshape(b, 1, num_kv_heads, head_dim)
+    v = linear(p["wv"], x).reshape(b, 1, num_kv_heads, head_dim)
+    if use_rope:
+        posb = jnp.full((b, 1), pos)
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                                  pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                                  pos, axis=1)
+    qh = q.reshape(b, num_kv_heads, rep, head_dim)
+    s = jnp.einsum("bhrd,bshd->bhrs", qh, cache_k,
+                   preferred_element_type=jnp.float32) / math.sqrt(head_dim)
+    valid = jnp.arange(smax)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrs,bshd->bhrd", w.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o.astype(x.dtype).reshape(b, 1, num_heads * head_dim)
+    return linear(p["wo"], o), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d_model: int, num_heads: int, *, kv_lora_rank: int,
+             q_lora_rank: int, nope_dim: int, rope_dim: int, v_head_dim: int,
+             dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    qh = nope_dim + rope_dim
+    return {
+        "wdq": init_linear(ks[0], d_model, q_lora_rank, dtype),
+        "wuq": init_linear(ks[1], q_lora_rank, num_heads * qh, dtype),
+        "wdkv": init_linear(ks[2], d_model, kv_lora_rank, dtype),
+        "wkr": init_linear(ks[3], d_model, rope_dim, dtype),
+        "wuk": init_linear(ks[4], kv_lora_rank, num_heads * nope_dim, dtype),
+        "wuv": init_linear(ks[5], kv_lora_rank, num_heads * v_head_dim, dtype),
+        "wo": init_linear(ks[6], num_heads * v_head_dim, d_model, dtype),
+    }
+
+
+def mla_train(p: Params, x: jax.Array, *, num_heads: int, kv_lora_rank: int,
+              nope_dim: int, rope_dim: int, v_head_dim: int, rope_theta: float,
+              q_chunk: int = 512, k_chunk: int = 1024,
+              return_kv: bool = False):
+    """Training-time MLA: decompress K/V and run standard chunked attention.
+
+    Sharding: the decompressed K/V/Q are pinned head-sharded over 'model'
+    (128 heads / 16 = 8 per chip).  Left to propagation, GSPMD inherits the
+    sequence sharding of the residual stream instead, which (a) replicates
+    all 128 heads' score computation on every chip and (b) all-gathers
+    f32 K chunks inside the flash loop — both observed on the deepseek
+    train cell (§Perf cell 2).  Gathering the COMPRESSED c_kv (rank 512)
+    once and expanding per head-shard is the cheap order of operations —
+    MLA's compression works for training comms too, not just decode caches.
+    """
+    from repro.models import shardutil
+    dp = ("pod", "data")
+    b, s, _ = x.shape
+    qh = nope_dim + rope_dim
+    q = linear(p["wuq"], linear(p["wdq"], x)).reshape(b, s, num_heads, qh)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    c_kv = linear(p["wdkv"], x)                               # (B, S, rank)
+    c_kv = shardutil.constrain(c_kv, dp, None, None)          # full-seq, tiny
+    k_rope = linear(p["wkr"], x).reshape(b, s, 1, rope_dim)   # shared head
+    pos = jnp.arange(s)[None, :]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    k_rope = apply_rope(k_rope, pos, rope_theta)
+    k_nope = linear(p["wuk"], c_kv).reshape(b, s, num_heads, nope_dim)
+    v = linear(p["wuv"], c_kv).reshape(b, s, num_heads, v_head_dim)
+    # pack rope part into the head dim so one chunked attention call suffices
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, num_heads, rope_dim))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = shardutil.constrain(k_full, dp, None, "model", None)
+    vp = shardutil.constrain(v_pad(v, qh), dp, None, "model", None)
+    # scale uses the true per-head dim (nope+rope)
+    qf = q_full.reshape(b, s, num_heads, 1, qh)
+    qf = shardutil.constrain(qf, dp, None, "model", None, None)
+    o = chunked_causal_attention(qf, k_full, vp, causal=True,
+                                 q_chunk=q_chunk, k_chunk=k_chunk)
+    o = o.reshape(b, s, num_heads, qh)[..., :v_head_dim]
+    y = linear(p["wo"], o.reshape(b, s, num_heads * v_head_dim))
+    if return_kv:
+        return y, (c_kv, k_rope[:, :, 0, :])   # compressed cache entries
+    return y
+
+
+def v_pad(v: jax.Array, to_dim: int) -> jax.Array:
+    """Zero-pad value head dim so q/k/v share a head dim for the chunked core."""
+    pad = to_dim - v.shape[-1]
+    if pad == 0:
+        return v
+    return jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, pad),))
+
+
+def mla_decode_ro(p: Params, x: jax.Array, cache_ckv: jax.Array,
+                  cache_kr: jax.Array, pos: jax.Array, *, num_heads: int,
+                  kv_lora_rank: int, nope_dim: int, rope_dim: int,
+                  v_head_dim: int, rope_theta: float):
+    """Read-only-cache absorbed MLA decode -> (y, ckv_new, kr_new)
+    (see gqa_decode_ro for the cache-rewrite rationale)."""
+    b = x.shape[0]
+    smax = cache_ckv.shape[1]
+    qh = nope_dim + rope_dim
+    q = linear(p["wuq"], linear(p["wdq"], x)).reshape(b, num_heads, qh)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    posb = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope[:, None], posb, rope_theta)[:, 0]
+    c_kv = linear(p["wdkv"], x)[:, 0]                          # (B, rank)
+    k_rope = linear(p["wkr"], x).reshape(b, 1, 1, rope_dim)
+    k_rope = apply_rope(k_rope, posb, rope_theta)[:, 0, 0]     # (B, rope)
+    wuk = p["wuk"]["w"].reshape(kv_lora_rank, num_heads, nope_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, wuk)            # (B, H, rank)
+    scale = 1.0 / math.sqrt(qh)
+    s_cache = (jnp.einsum("bhr,bsr->bhs", q_abs, cache_ckv,
+                          preferred_element_type=jnp.float32)
+               + jnp.einsum("bhe,bse->bhs", q_rope, cache_kr,
+                            preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(smax)[None, None, :] < pos
+    s_cache = jnp.where(valid, s_cache, NEG_INF)
+    s_new = (jnp.einsum("bhr,br->bh", q_abs, c_kv.astype(q_abs.dtype),
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhe,be->bh", q_rope, k_rope,
+                          preferred_element_type=jnp.float32)) * scale
+    # two-term flash combine (no concat — see gqa_decode_ro)
+    m = jnp.maximum(jnp.max(s_cache, axis=-1), s_new)           # (B, H)
+    p_cache = jnp.exp(s_cache - m[..., None])
+    p_new = jnp.exp(s_new - m)
+    denom = jnp.sum(p_cache, axis=-1) + p_new
+    ctx = (jnp.einsum("bhs,bsr->bhr", p_cache.astype(cache_ckv.dtype),
+                      cache_ckv, preferred_element_type=jnp.float32)
+           + p_new[..., None] * c_kv[:, None, :].astype(jnp.float32))
+    ctx = ctx / denom[..., None]
+    wuv = p["wuv"]["w"].reshape(kv_lora_rank, num_heads, v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), wuv)
+    y = linear(p["wo"], o.reshape(b, 1, num_heads * v_head_dim))
+    return y, c_kv, k_rope
+
+
+def mla_decode(p: Params, x: jax.Array, cache_ckv: jax.Array,
+               cache_kr: jax.Array, pos: jax.Array, *, num_heads: int,
+               kv_lora_rank: int, nope_dim: int, rope_dim: int,
+               v_head_dim: int, rope_theta: float):
+    """Absorbed-form MLA decode: attention runs against the compressed cache.
+
+    cache_ckv: (B, Smax, rank); cache_kr: (B, Smax, rope_dim).
+    score_h = (q_nope_h W_uk_h) · c_kv + q_rope_h · k_rope   — W_uk absorbed
+    out_h   = (attn · c_kv) W_uv_h                           — W_uv absorbed
+    """
+    b = x.shape[0]
+    smax = cache_ckv.shape[1]
+    qh = nope_dim + rope_dim
+    q = linear(p["wuq"], linear(p["wdq"], x)).reshape(b, num_heads, qh)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    posb = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope[:, None], posb, rope_theta)[:, 0]   # (B, H, rope)
+    c_kv = linear(p["wdkv"], x)[:, 0]                          # (B, rank)
+    k_rope = linear(p["wkr"], x).reshape(b, 1, 1, rope_dim)
+    k_rope = apply_rope(k_rope, posb, rope_theta)[:, 0, 0]     # (B, rope)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv[:, None].astype(cache_ckv.dtype), pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, k_rope[:, None].astype(cache_kr.dtype), pos, axis=1)
+    wuk = p["wuk"]["w"].reshape(kv_lora_rank, num_heads, nope_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, wuk)            # (B, H, rank)
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs, cache_ckv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhe,bse->bhs", q_rope, cache_kr,
+                      preferred_element_type=jnp.float32)) / math.sqrt(qh)
+    valid = jnp.arange(smax)[None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w.astype(cache_ckv.dtype), cache_ckv,
+                     preferred_element_type=jnp.float32)       # (B, H, rank)
+    wuv = p["wuv"]["w"].reshape(kv_lora_rank, num_heads, v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), wuv)
+    return (linear(p["wo"], o.reshape(b, 1, num_heads * v_head_dim)),
+            cache_ckv, cache_kr)

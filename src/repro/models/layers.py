@@ -1,0 +1,184 @@
+"""Core NN layers — functional JAX, params as nested dicts.
+
+Conventions:
+- params are created by ``init_*`` functions from a PRNG key, stored in the
+  configured param dtype (bf16 by default);
+- compute runs in bf16 with fp32 reductions where it matters (norms,
+  softmax, loss);
+- layers are plain functions so they vmap/scan/shard transparently.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / embedding
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+                std: float | None = None) -> Params:
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": truncated_normal(key, (d_in, d_out), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": truncated_normal(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied read-out: logits = x @ table^T (fp32 accumulation)."""
+    return jnp.einsum("...d,vd->...v", x, p["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype, *, elementwise: bool = True) -> Params:
+    if not elementwise:
+        return {}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm; with empty params it is OLMo's non-parametric LN."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if "scale" in p:
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+NORM_INITS = {
+    "rmsnorm": lambda d, dt: init_rmsnorm(d, dt),
+    "layernorm": lambda d, dt: init_layernorm(d, dt),
+    "nonparametric_ln": lambda d, dt: {},
+}
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(p, x)
+    return layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, kind: str = "swiglu",
+             *, bias: bool = False) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"gate": init_linear(ks[0], d_model, d_ff, dtype),
+                "up": init_linear(ks[1], d_model, d_ff, dtype),
+                "down": init_linear(ks[2], d_ff, d_model, dtype)}
+    if kind == "gelu":
+        return {"up": init_linear(ks[0], d_model, d_ff, dtype, bias=bias),
+                "down": init_linear(ks[1], d_ff, d_model, dtype, bias=bias)}
+    if kind == "relu2":   # RWKV-style squared relu
+        return {"up": init_linear(ks[0], d_model, d_ff, dtype),
+                "down": init_linear(ks[1], d_ff, d_model, dtype)}
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp(p: Params, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+    if kind == "gelu":
+        return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+    if kind == "relu2":
+        h = jax.nn.relu(linear(p["up"], x))
+        return linear(p["down"], h * h)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / (10000 ** (dim / d_model))
+    out = np.zeros((length, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE over valid positions; logits fp32 (B, S, V), labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

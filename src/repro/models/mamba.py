@@ -1,0 +1,115 @@
+"""Mamba (selective SSM) block — the sub-quadratic half of Jamba.
+
+Mamba-1 as used by Jamba (arXiv:2403.19887): in_proj -> causal depthwise
+conv -> selective scan (input-dependent dt, B, C over a diagonal state) ->
+gate -> out_proj.  The sequence scan is a lax.scan carrying the (B, d_inner,
+d_state) state: O(1) memory in sequence length, which is what makes the
+long_500k cell runnable for the hybrid/ssm families (DESIGN.md §4).
+
+Decode keeps (conv_state, ssm_state) per layer and advances one token in
+O(d_inner * d_state) — no KV cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, init_linear, linear, truncated_normal
+
+
+def init_mamba(key, d_model: int, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dtype=jnp.bfloat16) -> Params:
+    d_inner = expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": init_linear(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": truncated_normal(ks[1], (d_conv, d_inner), 0.1, dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": init_linear(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": init_linear(ks[3], dt_rank, d_inner, dtype, bias=True),
+        "a_log": jnp.log(a),                                  # fp32
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_linear(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _conv_causal(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv; x: (B, S, d_inner), w: (K, d_inner)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return y + b[None, None, :]
+
+
+def _ssm_params(p: Params, x: jax.Array, d_state: int):
+    """Input-dependent (dt, B, C); x: (..., d_inner)."""
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    proj = linear(p["x_proj"], x)
+    dt = jax.nn.softplus(linear(p["dt_proj"], proj[..., :dt_rank])
+                         .astype(jnp.float32))                # (..., d_inner)
+    bmat = proj[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    cmat = proj[..., dt_rank + d_state:].astype(jnp.float32)
+    return dt, bmat, cmat
+
+
+def mamba_train(p: Params, x: jax.Array, *, d_state: int = 16) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D); scan over time."""
+    b, s, d = x.shape
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                         # (B, S, d_inner)
+    xi = jax.nn.silu(_conv_causal(p["conv_w"], p["conv_b"], xi))
+    dt, bmat, cmat = _ssm_params(p, xi, d_state)
+    a = -jnp.exp(p["a_log"])                                  # (d_inner, N)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                                 # (B,di) (B,di) (B,N) (B,N)
+        da = jnp.exp(dtt[..., None] * a[None])                # (B, di, N)
+        db = dtt[..., None] * bt[:, None, :]                  # (B, di, N)
+        h = da * h + db * xt.astype(jnp.float32)[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, ct)                   # (B, di)
+        return h, y
+
+    h0 = jnp.zeros((b, xi.shape[-1], d_state), jnp.float32)
+    xs = (jnp.moveaxis(xi, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                # (B, S, d_inner)
+    y = y + xi.astype(jnp.float32) * p["d_skip"][None, None, :]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return linear(p["out_proj"], y)
+
+
+def init_mamba_state(batch: int, d_model: int, *, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2):
+    d_inner = expand * d_model
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, state: dict, *, d_state: int = 16):
+    """One-token step. x: (B, 1, D). Returns (y, state)."""
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                         # (B, 1, di)
+    window = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+    k = p["conv_w"].shape[0]
+    y = sum(window[:, i, :] * p["conv_w"][i][None, :] for i in range(k))
+    xi1 = jax.nn.silu(y + p["conv_b"][None, :])               # (B, di)
+    new_conv = window[:, 1:, :].astype(state["conv"].dtype)
+    dt, bmat, cmat = _ssm_params(p, xi1, d_state)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a[None])
+    db = dt[..., None] * bmat[:, None, :]
+    h = da * state["ssm"] + db * xi1.astype(jnp.float32)[..., None]
+    yo = jnp.einsum("bdn,bn->bd", h, cmat)
+    yo = yo + xi1.astype(jnp.float32) * p["d_skip"][None, :]
+    yo = yo.astype(x.dtype) * jax.nn.silu(z[:, 0])
+    out = linear(p["out_proj"], yo)[:, None, :]
+    return out, {"conv": new_conv, "ssm": h}

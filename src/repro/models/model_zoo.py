@@ -1,0 +1,123 @@
+"""Uniform model facade: build(config) -> Model with init/loss/prefill/decode,
+plus ``input_specs`` emitting ShapeDtypeStruct stand-ins for every input of
+every (arch x shape) cell — the dry-run lowers against these (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+from repro.models import vlm as vlm_mod
+
+_I = jnp.int32
+_BF = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable                 # (key) -> params
+    loss: Callable                 # (params, batch) -> (scalar, metrics)
+    prefill: Callable | None      # (params, batch, max_seq) -> (logits, cache[, aux])
+    init_cache: Callable           # (batch_size, max_seq) -> cache
+    decode_step: Callable          # (params, cache, tokens, pos) -> (logits, cache)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(ed.init_encdec, cfg),
+            loss=functools.partial(ed.encdec_loss, cfg),
+            prefill=lambda params, batch, max_seq: ed.encdec_prefill(
+                cfg, params, batch["frames"],
+                ed.init_encdec_cache(cfg, batch["frames"].shape[0], max_seq,
+                                     cfg.frontend_len)),
+            init_cache=lambda b, s: ed.init_encdec_cache(cfg, b, s,
+                                                         cfg.frontend_len),
+            decode_step=functools.partial(ed.encdec_decode_step, cfg),
+        )
+    if cfg.family == "vlm":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(tf.init_lm, cfg),
+            loss=functools.partial(vlm_mod.vlm_loss, cfg),
+            prefill=functools.partial(vlm_mod.vlm_prefill, cfg),
+            init_cache=functools.partial(tf.init_lm_cache, cfg),
+            decode_step=functools.partial(tf.lm_decode_step, cfg),
+        )
+    prefill = None
+    if cfg.family in ("dense", "moe"):
+        def prefill(params, batch, max_seq):
+            return tf.lm_prefill(cfg, params, batch["tokens"], max_seq)
+    return Model(
+        cfg=cfg,
+        init=functools.partial(tf.init_lm, cfg),
+        loss=functools.partial(tf.lm_loss, cfg),
+        prefill=prefill,
+        init_cache=functools.partial(tf.init_lm_cache, cfg),
+        decode_step=functools.partial(tf.lm_decode_step, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; weak-type-correct, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Model inputs for one shape cell.
+
+    train  : token/label batch (+ stub frontend embeddings where relevant)
+    prefill: tokens only
+    decode : one new token + position; the KV cache spec comes separately
+             from ``cache_specs`` (it is a donated carry, not a data input).
+    """
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.family == "audio":
+        frames = _sds((b, cfg.frontend_len, cfg.d_model), _BF)
+        if cell.kind == "train":
+            return {"frames": frames, "tokens": _sds((b, s), _I),
+                    "labels": _sds((b, s), _I)}
+        if cell.kind == "prefill":
+            return {"frames": frames}
+        return {"tokens": _sds((b, 1), _I)}
+    if cfg.family == "vlm":
+        p = cfg.frontend_len
+        patches = _sds((b, p, cfg.d_model), _BF)
+        s_text = s - p                       # total sequence = patches + text
+        if cell.kind == "train":
+            return {"patches": patches, "tokens": _sds((b, s_text), _I),
+                    "labels": _sds((b, s_text), _I)}
+        if cell.kind == "prefill":
+            return {"patches": patches, "tokens": _sds((b, s_text), _I)}
+        return {"tokens": _sds((b, 1), _I)}
+    if cell.kind == "train":
+        return {"tokens": _sds((b, s), _I), "labels": _sds((b, s), _I)}
+    if cell.kind == "prefill":
+        return {"tokens": _sds((b, s), _I)}
+    return {"tokens": _sds((b, 1), _I)}
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell) -> Any:
+    """ShapeDtypeStruct pytree for the decode cache of one cell."""
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init_cache(cell.global_batch,
+                                                   cell.seq_len))
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree for params (AOT lowering, no allocation)."""
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

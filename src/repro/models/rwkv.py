@@ -1,0 +1,159 @@
+"""RWKV-6 ("Finch", arXiv:2404.05892) — attention-free time mixing with
+data-dependent decay.
+
+Per head (size N), the WKV state is an (N, N) outer-product accumulator:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with the decay w_t produced *per token per channel* by a low-rank MLP (the
+Finch innovation over RWKV-5's static decay).  Token-shift mixing is also
+data-dependent (low-rank lerp).  The sequence is processed by lax.scan with
+O(1) state, so long_500k decode is a pure state update — no cache at all
+(the hash-table serving path is inapplicable to this family; DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, init_linear, linear, truncated_normal
+
+
+def init_rwkv_tmix(key, d_model: int, num_heads: int, *, decay_rank: int = 64,
+                   mix_rank: int = 32, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 12)
+    n = d_model // num_heads
+    return {
+        "mu": truncated_normal(ks[0], (5, d_model), 0.02, jnp.float32),
+        "mix_a": truncated_normal(ks[1], (d_model, mix_rank * 5), 0.02, dtype),
+        "mix_b": truncated_normal(ks[2], (5, mix_rank, d_model), 0.02, dtype),
+        "wr": init_linear(ks[3], d_model, d_model, dtype),
+        "wk": init_linear(ks[4], d_model, d_model, dtype),
+        "wv": init_linear(ks[5], d_model, d_model, dtype),
+        "wg": init_linear(ks[6], d_model, d_model, dtype),
+        "wo": init_linear(ks[7], d_model, d_model, dtype),
+        "w0": truncated_normal(ks[8], (d_model,), 0.02, jnp.float32) - 4.0,
+        "decay_a": truncated_normal(ks[9], (d_model, decay_rank), 0.02, dtype),
+        "decay_b": truncated_normal(ks[10], (decay_rank, d_model), 0.02, dtype),
+        "u": truncated_normal(ks[11], (num_heads, n), 0.02, jnp.float32),
+        "ln_scale": jnp.ones((d_model,), jnp.float32),
+    }
+
+
+def _ddlerp(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift: five mixed streams (r, k, v, w, g)."""
+    xx = x_prev - x                                           # (B, S, D)
+    mix_rank = p["mix_a"].shape[1] // 5
+    low = jnp.tanh(x @ p["mix_a"]).reshape(*x.shape[:-1], 5, mix_rank)
+    dyn = jnp.einsum("...fr,frd->...fd", low, p["mix_b"])     # (B,S,5,D)
+    mu = p["mu"].astype(x.dtype)                              # (5, D)
+    lerp = mu[None, None] + dyn                               # (B,S,5,D)
+    mixed = x[..., None, :] + xx[..., None, :] * lerp
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _decay(p: Params, xw: jax.Array) -> jax.Array:
+    """Per-token per-channel decay in (0, 1): exp(-exp(w0 + lora))."""
+    lora = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    logw = p["w0"][None, None, :] + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def _group_norm(scale: jax.Array, x: jax.Array, num_heads: int) -> jax.Array:
+    """Per-head layernorm on the WKV output (RWKV's group_norm)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, num_heads, d // num_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y.reshape(b, s, d) * scale[None, None, :]).astype(x.dtype)
+
+
+def rwkv_tmix_train(p: Params, x: jax.Array, *, num_heads: int) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    n = d // num_heads
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = linear(p["wr"], xr).reshape(b, s, num_heads, n)
+    k = linear(p["wk"], xk).reshape(b, s, num_heads, n)
+    v = linear(p["wv"], xv).reshape(b, s, num_heads, n)
+    g = jax.nn.silu(linear(p["wg"], xg))
+    w = _decay(p, xw).reshape(b, s, num_heads, n)             # fp32
+    u = p["u"]                                                # (H, N)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,N) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                        vt.astype(jnp.float32))
+        o = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                       state + u[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, o
+
+    s0 = jnp.zeros((b, num_heads, n, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    _, os = jax.lax.scan(step, s0, xs)
+    o = jnp.moveaxis(os, 0, 1).reshape(b, s, d).astype(x.dtype)
+    o = _group_norm(p["ln_scale"], o, num_heads)
+    return linear(p["wo"], o * g)
+
+
+def init_rwkv_cmix(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": truncated_normal(ks[0], (d_model,), 0.02, jnp.float32),
+        "wk": init_linear(ks[1], d_model, d_ff, dtype),
+        "wv": init_linear(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def rwkv_cmix_train(p: Params, x: jax.Array) -> jax.Array:
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    xk = x + (x_prev - x) * p["mu_k"].astype(x.dtype)[None, None, :]
+    h = jax.nn.relu(linear(p["wk"], xk))
+    return linear(p["wv"], h * h)
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) recurrent state)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_state(batch: int, d_model: int, num_heads: int):
+    n = d_model // num_heads
+    return {
+        "tshift": jnp.zeros((batch, d_model), jnp.bfloat16),
+        "cshift": jnp.zeros((batch, d_model), jnp.bfloat16),
+        "wkv": jnp.zeros((batch, num_heads, n, n), jnp.float32),
+    }
+
+
+def rwkv_tmix_decode(p: Params, x: jax.Array, state: dict, *, num_heads: int):
+    """x: (B, 1, D). Returns (y, state)."""
+    b, _, d = x.shape
+    n = d // num_heads
+    x_prev = state["tshift"].astype(x.dtype)[:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = linear(p["wr"], xr).reshape(b, num_heads, n)
+    k = linear(p["wk"], xk).reshape(b, num_heads, n)
+    v = linear(p["wv"], xv).reshape(b, num_heads, n)
+    g = jax.nn.silu(linear(p["wg"], xg))
+    w = _decay(p, xw).reshape(b, num_heads, n)
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    o = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   state["wkv"] + p["u"][None, :, :, None] * kv)
+    new_wkv = w[..., None] * state["wkv"] + kv
+    o = o.reshape(b, 1, d).astype(x.dtype)
+    o = _group_norm(p["ln_scale"], o, num_heads)
+    y = linear(p["wo"], o * g)
+    return y, {**state, "tshift": x[:, 0].astype(jnp.bfloat16), "wkv": new_wkv}
+
+
+def rwkv_cmix_decode(p: Params, x: jax.Array, state: dict):
+    x_prev = state["cshift"].astype(x.dtype)[:, None, :]
+    xk = x + (x_prev - x) * p["mu_k"].astype(x.dtype)[None, None, :]
+    h = jax.nn.relu(linear(p["wk"], xk))
+    y = linear(p["wv"], h * h)
+    return y, {**state, "cshift": x[:, 0].astype(jnp.bfloat16)}

@@ -1,0 +1,62 @@
+"""Activation sharding constraints that degrade gracefully off-mesh.
+
+GSPMD propagation alone picks pathological layouts for embedding gathers
+(it follows the table's vocab/d sharding and *replicates the batch*, which
+makes every downstream activation 16x too big — observed directly in the
+smollm dry-run HLO).  One constraint on the residual stream at the block
+boundary pins the data-parallel layout and lets everything else propagate.
+
+The helpers are no-ops when no mesh context is active (unit tests, CPU
+smoke runs) or when a dim is not divisible by its axes, so model code can
+call them unconditionally.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not m.shape:
+        return None
+    return m
+
+
+def constrain(x: jax.Array, *spec_axes) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec_axes)) with graceful fallback.
+
+    Each entry is an axis name, tuple of names, or None/P.UNCONSTRAINED.
+    Axes missing from the active mesh or not dividing the dim are dropped.
+    """
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(mesh.shape)
+    out = []
+    for dim, ax in zip(x.shape, spec_axes):
+        if ax is None or ax is P.UNCONSTRAINED:
+            out.append(ax)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        axs = tuple(a for a in axs if a in sizes)
+        total = int(np.prod([sizes[a] for a in axs])) if axs else 1
+        if axs and dim % total == 0:
+            out.append(axs if len(axs) > 1 else axs[0])
+        else:
+            out.append(P.UNCONSTRAINED)
+    out += [P.UNCONSTRAINED] * (x.ndim - len(out))
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def constrain_batch(x: jax.Array, extra=None) -> jax.Array:
+    """Pin dim0 to the data-parallel axes (pod+data), rest unconstrained
+    except an optional dim1 axis (sequence parallelism)."""
+    u = P.UNCONSTRAINED
+    return constrain(x, ("pod", "data"), extra if extra else u, u)

@@ -1,0 +1,488 @@
+"""Decoder-only LM assembly — dense / moe / hybrid / ssm families.
+
+Layers are *scanned*: parameters are stacked with a leading block dim and the
+forward pass is one ``lax.scan`` over blocks, so the traced HLO contains each
+block body exactly once.  At 88-layer/123B scale this is what keeps AOT
+compilation of the dry-run tractable (and is the production-standard layout
+for checkpointing + pipelining).
+
+Block structure per family:
+  dense / moe / vlm : [norm -> GQA|MLA -> norm -> MLP|MoE] x L
+  hybrid (jamba)    : blocks of ``attn_every`` sub-layers, one attention at
+                      the block midpoint, Mamba elsewhere, MoE after each
+                      mixer (1:7 attn:mamba at attn_every=8)
+  ssm (rwkv6)       : [ln -> time-mix -> ln -> channel-mix] x L
+
+Decode threads per-layer caches through the same scan (caches are scan
+xs/ys), so one-token serve_steps stay O(layers) in HLO too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import shardutil
+from repro.models.layers import (
+    DTYPES,
+    NORM_INITS,
+    Params,
+    apply_norm,
+    embed,
+    init_embedding,
+    init_linear,
+    init_mlp,
+    linear,
+    mlp,
+    softmax_cross_entropy,
+    unembed,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_mixer(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.mla is not None:
+        m = cfg.mla
+        return attn.init_mla(key, cfg.d_model, cfg.num_heads,
+                             kv_lora_rank=m.kv_lora_rank, q_lora_rank=m.q_lora_rank,
+                             nope_dim=m.nope_dim, rope_dim=m.rope_dim,
+                             v_head_dim=m.v_head_dim, dtype=dtype)
+    return attn.init_gqa(key, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                         cfg.resolved_head_dim, dtype)
+
+
+def _init_ffn(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.moe is not None:
+        e = cfg.moe
+        return moe_mod.init_moe(key, cfg.d_model, e.d_ff_expert, e.num_experts,
+                                e.num_shared, dtype)
+    return init_mlp(key, cfg.d_model, cfg.d_ff, dtype, kind=cfg.mlp_kind)
+
+
+def _norm_init(cfg: ModelConfig, dtype):
+    return NORM_INITS[cfg.norm_type](cfg.d_model, dtype)
+
+
+def _init_block(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.family == "ssm":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": NORM_INITS["layernorm"](cfg.d_model, dtype),
+            "tmix": rwkv_mod.init_rwkv_tmix(k1, cfg.d_model, cfg.rwkv_heads,
+                                            dtype=dtype),
+            "ln2": NORM_INITS["layernorm"](cfg.d_model, dtype),
+            "cmix": rwkv_mod.init_rwkv_cmix(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+    if cfg.family == "hybrid":
+        e = cfg.attn_every
+        n_moe = e // cfg.moe_every
+        ks = jax.random.split(key, 5)
+        mk = jax.random.split(ks[0], e - 1)
+        s = cfg.ssm
+        p = {
+            "mamba": jax.vmap(lambda k: mamba_mod.init_mamba(
+                k, cfg.d_model, d_state=s.d_state, d_conv=s.d_conv,
+                expand=s.expand, dtype=dtype))(mk),
+            "attn": _init_mixer(ks[2], cfg, dtype),
+            "norm1": jnp.ones((e, cfg.d_model), dtype),
+            "norm2": jnp.ones((e, cfg.d_model), dtype),
+        }
+        if n_moe:
+            fk = jax.random.split(ks[1], n_moe)
+            p["ffn_moe"] = jax.vmap(lambda k: _init_ffn(k, cfg, dtype))(fk)
+        if e - n_moe:
+            dk = jax.random.split(ks[3], e - n_moe)
+            p["ffn_dense"] = jax.vmap(
+                lambda k: init_mlp(k, cfg.d_model, cfg.d_ff, dtype,
+                                   kind=cfg.mlp_kind))(dk)
+        return p
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": _norm_init(cfg, dtype),
+        "attn": _init_mixer(k1, cfg, dtype),
+        "ffn_norm": _norm_init(cfg, dtype),
+        "ffn": _init_ffn(k2, cfg, dtype),
+    }
+
+
+def num_blocks(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.attn_every == 0
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+def init_lm(cfg: ModelConfig, key) -> Params:
+    dtype = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 4)
+    bk = jax.random.split(ks[0], num_blocks(cfg))
+    params = {
+        "embed": init_embedding(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg, dtype))(bk),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend is not None:
+        # stub frontends provide embeddings directly; a learned projection
+        # adapts them into the LM residual stream
+        params["frontend_proj"] = init_linear(ks[3], cfg.d_model, cfg.d_model,
+                                              dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward blocks (training / prefill, full sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_ffn(cfg: ModelConfig, p: Params, h: jax.Array):
+    if cfg.moe is not None:
+        return moe_mod.moe_ffn(p, h, num_experts=cfg.moe.num_experts,
+                               top_k=cfg.moe.top_k,
+                               capacity_factor=cfg.moe.capacity_factor)
+    return mlp(p, h, kind=cfg.mlp_kind), jnp.zeros((), jnp.float32)
+
+
+def _apply_mixer_train(cfg: ModelConfig, p: Params, h: jax.Array) -> jax.Array:
+    if cfg.mla is not None:
+        m = cfg.mla
+        return attn.mla_train(p, h, num_heads=cfg.num_heads,
+                              kv_lora_rank=m.kv_lora_rank, nope_dim=m.nope_dim,
+                              rope_dim=m.rope_dim, v_head_dim=m.v_head_dim,
+                              rope_theta=cfg.rope_theta)
+    return attn.gqa_train(p, h, num_heads=cfg.num_heads,
+                          num_kv_heads=cfg.num_kv_heads,
+                          head_dim=cfg.resolved_head_dim,
+                          rope_theta=cfg.rope_theta,
+                          tp_pad_heads=cfg.attn_tp_pad)
+
+
+def _block_train(cfg: ModelConfig, p: Params, h: jax.Array):
+    """One scanned block; returns (h, aux)."""
+    if cfg.family == "ssm":
+        hn = apply_norm("layernorm", p["ln1"], h)
+        h = h + rwkv_mod.rwkv_tmix_train(p["tmix"], hn, num_heads=cfg.rwkv_heads)
+        hn = apply_norm("layernorm", p["ln2"], h)
+        h = h + rwkv_mod.rwkv_cmix_train(p["cmix"], hn)
+        return h, jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        e = cfg.attn_every
+        attn_pos = e // 2
+        aux = jnp.zeros((), jnp.float32)
+        mi = di = oi = 0
+        for i in range(e):
+            hn = _rms(p["norm1"][i], h)
+            if i == attn_pos:
+                h = h + _apply_mixer_train(cfg, p["attn"], hn)
+            else:
+                mp = jax.tree.map(lambda x: x[mi], p["mamba"])
+                h = h + mamba_mod.mamba_train(mp, hn, d_state=cfg.ssm.d_state)
+                mi += 1
+            hn = _rms(p["norm2"][i], h)
+            if i % cfg.moe_every == cfg.moe_every - 1:
+                fp = jax.tree.map(lambda x: x[oi], p["ffn_moe"])
+                y, a = _apply_ffn(cfg, fp, hn)
+                aux = aux + a
+                oi += 1
+            else:
+                fp = jax.tree.map(lambda x: x[di], p["ffn_dense"])
+                y = mlp(fp, hn, kind=cfg.mlp_kind)
+                di += 1
+            h = h + y
+        return h, aux
+    # dense / moe / vlm / audio-decoder
+    hn = apply_norm(cfg.norm_type, p["attn_norm"], h)
+    h = h + _apply_mixer_train(cfg, p["attn"], hn)
+    hn = apply_norm(cfg.norm_type, p["ffn_norm"], h)
+    y, aux = _apply_ffn(cfg, p["ffn"], hn)
+    return h + y, aux
+
+
+def _rms(scale: jax.Array, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def lm_hidden(cfg: ModelConfig, params: Params, h: jax.Array):
+    """Run the scanned block stack over hidden states (B, S, D).
+
+    cfg.remat selects the activation-checkpoint policy applied to each
+    scanned block: 'block' saves only block boundaries (recompute inside the
+    block on the backward pass), 'dots' additionally saves matmul outputs
+    (checkpoint_dots) — the standard memory/compute trade for large models.
+    """
+    def block(p, h):
+        h, a = _block_train(cfg, p, h)
+        h = shardutil.constrain_batch(
+            h, "model" if cfg.seq_shard_activations else None)
+        return h, a
+
+    if cfg.remat == "block":
+        block = jax.checkpoint(block)
+    elif cfg.remat == "dots":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    def body(carry, block_p):
+        h, aux = carry
+        h, a = block(block_p, h)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return apply_norm(cfg.norm_type, params["final_norm"], h), aux
+
+
+def lm_logits(cfg: ModelConfig, params: Params, tokens: jax.Array,
+              prefix_embeds: jax.Array | None = None):
+    """tokens: (B, S). Optional prefix_embeds (B, P, D) (vlm patches).
+    Returns (logits fp32 (B, S_total, V), aux)."""
+    h = embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        pe = linear(params["frontend_proj"], prefix_embeds.astype(h.dtype))
+        h = jnp.concatenate([pe, h], axis=1)
+    h = shardutil.constrain_batch(h)
+    h, aux = lm_hidden(cfg, params, h)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], h)
+    else:
+        logits = linear(params["lm_head"], h).astype(jnp.float32)
+    return logits, aux
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: dict):
+    """batch: tokens (B, S), labels (B, S), optional prefix_embeds/loss_mask."""
+    logits, aux = lm_logits(cfg, params, batch["tokens"],
+                            batch.get("prefix_embeds"))
+    if batch.get("prefix_embeds") is not None:
+        logits = logits[:, batch["prefix_embeds"].shape[1]:]
+    ce = softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def lm_prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+               max_seq: int, prefix_embeds: jax.Array | None = None):
+    """Full-sequence prefill: last-position logits + populated KV cache.
+
+    Supported for the kv-cache families (dense/moe/vlm incl. MLA); hybrid and
+    ssm families prefill via their decode recurrence (examples use a token
+    scan).  Only the last position is unembedded — at 32k prefill the full
+    (B, S, V) logits tensor would dwarf every other buffer.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError("state-recurrent families prefill via decode")
+    h = embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        pe = linear(params["frontend_proj"], prefix_embeds.astype(h.dtype))
+        h = jnp.concatenate([pe, h], axis=1)
+    h = shardutil.constrain_batch(h)
+    b, s, _ = h.shape
+
+    def body(carry, block_p):
+        h, aux = carry
+        hn = apply_norm(cfg.norm_type, block_p["attn_norm"], h)
+        if cfg.mla is not None:
+            m = cfg.mla
+            y, kv = attn.mla_train(
+                block_p["attn"], hn, num_heads=cfg.num_heads,
+                kv_lora_rank=m.kv_lora_rank, nope_dim=m.nope_dim,
+                rope_dim=m.rope_dim, v_head_dim=m.v_head_dim,
+                rope_theta=cfg.rope_theta, return_kv=True)
+        else:
+            y, kv = attn.gqa_train(
+                block_p["attn"], hn, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta, return_kv=True)
+        h = h + y
+        hn = apply_norm(cfg.norm_type, block_p["ffn_norm"], h)
+        y, a = _apply_ffn(cfg, block_p["ffn"], hn)
+        return (h + y, aux + a), kv
+
+    (h, aux), kvs = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                 params["blocks"])
+    h = apply_norm(cfg.norm_type, params["final_norm"], h[:, -1:])
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], h)
+    else:
+        logits = linear(params["lm_head"], h).astype(jnp.float32)
+    # place prefill K/V into a max_seq cache
+    cache = init_lm_cache(cfg, b, max_seq)
+    if cfg.mla is not None:
+        ckv, kr = kvs
+        cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(jnp.bfloat16), 0, axis=2)
+        cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr.astype(jnp.bfloat16), 0, axis=2)
+    else:
+        k, v = kvs
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(jnp.bfloat16), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(jnp.bfloat16), 0, axis=2)
+    return logits, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    nb = num_blocks(cfg)
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        st = rwkv_mod.init_rwkv_state(batch, cfg.d_model, cfg.rwkv_heads)
+        return {"rwkv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (nb,) + x.shape), st)}
+    if cfg.family == "hybrid":
+        e = cfg.attn_every
+        s = cfg.ssm
+        ms = mamba_mod.init_mamba_state(batch, cfg.d_model, d_state=s.d_state,
+                                        d_conv=s.d_conv, expand=s.expand)
+        return {
+            "k": jnp.zeros((nb, batch, max_seq, cfg.num_kv_heads, hd),
+                           jnp.bfloat16),
+            "v": jnp.zeros((nb, batch, max_seq, cfg.num_kv_heads, hd),
+                           jnp.bfloat16),
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (nb, e - 1) + x.shape), ms),
+        }
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((nb, batch, max_seq, m.kv_lora_rank), jnp.bfloat16),
+            "kr": jnp.zeros((nb, batch, max_seq, m.rope_dim), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((nb, batch, max_seq, cfg.num_kv_heads, hd), jnp.bfloat16),
+        "v": jnp.zeros((nb, batch, max_seq, cfg.num_kv_heads, hd), jnp.bfloat16),
+    }
+
+
+def _block_decode(cfg: ModelConfig, p: Params, h: jax.Array, cache_blk: dict,
+                  pos: jax.Array):
+    """One-token step through one block.
+
+    Returns (h, token_entries): per-layer caches are READ-ONLY here; only
+    the current token's K/V (or compressed latent / recurrent state) is
+    emitted.  The caller commits all layers' entries with one
+    dynamic_update_slice — threading mutated caches through the scan makes
+    XLA rewrite the full cache every token (§Perf cell 3).
+    """
+    if cfg.family == "ssm":
+        st = cache_blk["rwkv"]
+        hn = apply_norm("layernorm", p["ln1"], h)
+        y, st = rwkv_mod.rwkv_tmix_decode(p["tmix"], hn, st,
+                                          num_heads=cfg.rwkv_heads)
+        h = h + y
+        hn = apply_norm("layernorm", p["ln2"], h)
+        y, st = rwkv_mod.rwkv_cmix_decode(p["cmix"], hn, st)
+        return h + y, {"rwkv": st}
+    if cfg.family == "hybrid":
+        e = cfg.attn_every
+        attn_pos = e // 2
+        mstates = cache_blk["mamba"]
+        new_m = []
+        entries = {}
+        mi = di = oi = 0
+        for i in range(e):
+            hn = _rms(p["norm1"][i], h)
+            if i == attn_pos:
+                y, k_new, v_new = attn.gqa_decode_ro(
+                    p["attn"], hn, cache_blk["k"], cache_blk["v"], pos,
+                    num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta)
+                entries["k"] = k_new
+                entries["v"] = v_new
+            else:
+                mp = jax.tree.map(lambda x: x[mi], p["mamba"])
+                ms = jax.tree.map(lambda x: x[mi], mstates)
+                y, ms = mamba_mod.mamba_decode(mp, hn, ms,
+                                               d_state=cfg.ssm.d_state)
+                new_m.append(ms)
+                mi += 1
+            h = h + y
+            hn = _rms(p["norm2"][i], h)
+            if i % cfg.moe_every == cfg.moe_every - 1:
+                fp = jax.tree.map(lambda x: x[oi], p["ffn_moe"])
+                y, _ = _apply_ffn(cfg, fp, hn)
+                oi += 1
+            else:
+                fp = jax.tree.map(lambda x: x[di], p["ffn_dense"])
+                y = mlp(fp, hn, kind=cfg.mlp_kind)
+                di += 1
+            h = h + y
+        entries["mamba"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+        return h, entries
+    hn = apply_norm(cfg.norm_type, p["attn_norm"], h)
+    if cfg.mla is not None:
+        m = cfg.mla
+        y, ckv_new, kr_new = attn.mla_decode_ro(
+            p["attn"], hn, cache_blk["ckv"], cache_blk["kr"], pos,
+            num_heads=cfg.num_heads, kv_lora_rank=m.kv_lora_rank,
+            nope_dim=m.nope_dim, rope_dim=m.rope_dim, v_head_dim=m.v_head_dim,
+            rope_theta=cfg.rope_theta)
+        entries = {"ckv": ckv_new, "kr": kr_new}
+    else:
+        y, k_new, v_new = attn.gqa_decode_ro(
+            p["attn"], hn, cache_blk["k"], cache_blk["v"], pos,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta)
+        entries = {"k": k_new, "v": v_new}
+    h = h + y
+    hn = apply_norm(cfg.norm_type, p["ffn_norm"], h)
+    y, _ = _apply_ffn(cfg, p["ffn"], hn)
+    return h + y, entries
+
+
+# cache fields that hold (L, B, S, ...) sequence buffers, committed with one
+# dus at ``pos``; everything else (recurrent states) is replaced wholesale
+_SEQ_CACHE_FIELDS = ("k", "v", "ckv", "kr")
+
+
+def _commit_cache(cache: dict, entries: dict, pos: jax.Array) -> dict:
+    new_cache = {}
+    for field, val in entries.items():
+        if field in _SEQ_CACHE_FIELDS:
+            # scatter, NOT dynamic_update_slice: a traced-start DUS on the
+            # sequence-sharded dim makes GSPMD reshard/gather the whole
+            # cache (collectives >> the 16 KB payload); a scatter is masked
+            # per-shard — only the owner of ``pos`` writes (§Perf cell 3)
+            upd = val.astype(cache[field].dtype)               # (L, B, ...)
+            new_cache[field] = cache[field].at[:, :, pos].set(upd)
+        else:
+            new_cache[field] = val
+    return new_cache
+
+
+def lm_decode_step(cfg: ModelConfig, params: Params, cache: dict,
+                   tokens: jax.Array, pos: jax.Array):
+    """tokens: (B, 1); pos: scalar. Returns (logits (B, 1, V) fp32, cache)."""
+    h = shardutil.constrain_batch(embed(params["embed"], tokens))
+
+    def body(h, xs):
+        block_p, cache_blk = xs
+        h, entries = _block_decode(cfg, block_p, h, cache_blk, pos)
+        return h, entries
+
+    h, entries = jax.lax.scan(body, h, (params["blocks"], cache))
+    new_cache = _commit_cache(cache, entries, pos)
+    h = apply_norm(cfg.norm_type, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], h)
+    else:
+        logits = linear(params["lm_head"], h).astype(jnp.float32)
+    return logits, new_cache

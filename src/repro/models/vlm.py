@@ -1,0 +1,32 @@
+"""VLM wrapper (internvl2): stub ViT frontend + LM backbone.
+
+The assignment models the transformer backbone only; the InternViT frontend
+is a STUB whose output — (B, num_patches, d_model) patch embeddings — is an
+*input* supplied by ``input_specs()``.  The wrapper projects the patch
+embeddings through a learned adapter (``frontend_proj``), prepends them to
+the token embeddings, and computes loss only over text positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import Params
+
+
+def vlm_loss(cfg: ModelConfig, params: Params, batch: dict):
+    """batch: patches (B, P, D), tokens (B, S_text), labels (B, S_text)."""
+    return tf.lm_loss(cfg, params, {
+        "tokens": batch["tokens"],
+        "labels": batch["labels"],
+        "prefix_embeds": batch["patches"],
+        "loss_mask": batch.get("loss_mask"),
+    })
+
+
+def vlm_prefill(cfg: ModelConfig, params: Params, batch: dict, max_seq: int):
+    return tf.lm_prefill(cfg, params, batch["tokens"], max_seq,
+                         prefix_embeds=batch["patches"])

@@ -1,0 +1,146 @@
+"""Paged KV cache whose page table is a WarpCore SingleValueHashTable.
+
+vLLM-style paging adapted to TPU + the paper's data structure (DESIGN.md
+§3.3): the logical->physical page mapping for every (sequence, page_index)
+lives in a repro.core SingleValueHashTable with packed keys
+
+    key   = seq_id * MAX_PAGES_PER_SEQ + page_idx     (u32)
+    value = physical page id                          (u32)
+
+Allocation inserts into the table (O(1) amortized, COPS-probed); the decode
+gather retrieves a batch of page translations in one vectorized lookup —
+the hash table's bulk-retrieve is exactly the address-translation traffic
+pattern.  Freeing a sequence erases its keys (tombstones), returning pages
+to a free list.
+
+The dense per-layer cache in ``transformer.py`` remains the dry-run path
+(GSPMD shards it); this paged cache is the serving-memory-manager feature
+exercised by ``examples/paged_serving.py`` and the serving tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import single_value as sv
+from repro.core.common import STATUS_INSERTED, register_struct, static_field
+
+_I = jnp.int32
+_U = jnp.uint32
+
+MAX_PAGES_PER_SEQ = 1 << 12           # 4096 pages/seq (128 tokens/page -> 512k)
+
+
+@register_struct
+@dataclasses.dataclass
+class PagedKVCache:
+    pages_k: jax.Array                # (L, num_pages, page, Hkv, hd) bf16
+    pages_v: jax.Array
+    page_table: sv.SingleValueHashTable
+    free_top: jax.Array               # bump allocator over the free list
+    free_list: jax.Array              # (num_pages,) physical ids
+    page_size: int = static_field()
+    num_pages: int = static_field()
+
+    @property
+    def num_layers(self) -> int:
+        return self.pages_k.shape[0]
+
+
+def create(num_layers: int, num_pages: int, page_size: int, num_kv_heads: int,
+           head_dim: int, *, table_slack: float = 1.5) -> PagedKVCache:
+    table = sv.create(int(num_pages * table_slack) + 64, window=32)
+    shape = (num_layers, num_pages, page_size, num_kv_heads, head_dim)
+    return PagedKVCache(
+        pages_k=jnp.zeros(shape, jnp.bfloat16),
+        pages_v=jnp.zeros(shape, jnp.bfloat16),
+        page_table=table,
+        free_top=jnp.zeros((), _I),
+        free_list=jnp.arange(num_pages, dtype=_U),
+        page_size=page_size, num_pages=num_pages)
+
+
+def _pt_key(seq_ids: jax.Array, page_idx: jax.Array) -> jax.Array:
+    return (seq_ids.astype(_U) * _U(MAX_PAGES_PER_SEQ)
+            + page_idx.astype(_U) + _U(1))      # +1 keeps 0 < key < sentinel
+
+
+def allocate_pages(cache: PagedKVCache, seq_ids: jax.Array,
+                   page_idx: jax.Array, mask=None):
+    """Map (seq, page_idx) -> fresh physical pages.  Returns (cache, phys).
+
+    Already-mapped pairs return their existing page (idempotent; the insert
+    status distinguishes INSERTED from UPDATED)."""
+    n = seq_ids.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    keys = _pt_key(seq_ids, page_idx)
+    # tentatively hand out the next free pages to genuinely-new keys
+    present = sv.contains(cache.page_table, keys)
+    fresh = mask & ~present
+    order = jnp.cumsum(fresh.astype(_I)) - 1
+    phys_new = cache.free_list[
+        jnp.clip(cache.free_top + order, 0, cache.num_pages - 1)]
+    table, status = sv.insert(cache.page_table, keys,
+                              jnp.where(fresh, phys_new, 0), mask=fresh)
+    got_new = status == STATUS_INSERTED
+    n_new = jnp.sum(got_new, dtype=_I)
+    vals, found = sv.retrieve(table, keys)
+    cache = dataclasses.replace(cache, page_table=table,
+                                free_top=cache.free_top + n_new)
+    return cache, jnp.where(found, vals, 0)
+
+
+def lookup_pages(cache: PagedKVCache, seq_ids: jax.Array,
+                 page_idx: jax.Array):
+    """Translate a batch of (seq, page_idx) -> (physical page, found)."""
+    vals, found = sv.retrieve(cache.page_table, _pt_key(seq_ids, page_idx))
+    return vals, found
+
+
+def append_token(cache: PagedKVCache, seq_ids: jax.Array, pos: jax.Array,
+                 k: jax.Array, v: jax.Array):
+    """Write one token's K/V for a batch of sequences.
+
+    k, v: (L, B, Hkv, hd); pos: (B,) absolute positions.  Allocates the page
+    on first touch."""
+    page_idx = pos // cache.page_size
+    offset = pos % cache.page_size
+    cache, phys = allocate_pages(cache, seq_ids, page_idx)
+    pk = cache.pages_k.at[:, phys, offset].set(k.astype(jnp.bfloat16))
+    pv = cache.pages_v.at[:, phys, offset].set(v.astype(jnp.bfloat16))
+    return dataclasses.replace(cache, pages_k=pk, pages_v=pv)
+
+
+def gather_kv(cache: PagedKVCache, seq_ids: jax.Array, max_len: int):
+    """Materialize (L, B, max_len, Hkv, hd) K/V for attention.
+
+    One bulk hash-table retrieve translates every (seq, page) in the window;
+    a vectorized gather pulls the pages."""
+    b = seq_ids.shape[0]
+    n_pages = -(-max_len // cache.page_size)
+    pi = jnp.arange(n_pages, dtype=_I)
+    sq = jnp.repeat(seq_ids, n_pages)
+    pg = jnp.tile(pi, b)
+    phys, found = lookup_pages(cache, sq, pg)           # (B*n_pages,)
+    phys = jnp.where(found, phys, 0).reshape(b, n_pages)
+    k = cache.pages_k[:, phys]                          # (L, B, n_pages, page, H, hd)
+    v = cache.pages_v[:, phys]
+    l = cache.pages_k.shape[0]
+    k = k.reshape(l, b, n_pages * cache.page_size, *k.shape[4:])[:, :, :max_len]
+    v = v.reshape(l, b, n_pages * cache.page_size, *v.shape[4:])[:, :, :max_len]
+    return k, v
+
+
+def free_sequences(cache: PagedKVCache, seq_ids: jax.Array, max_pages: int):
+    """Erase a sequence's page-table entries (tombstones; paper §IV-B.5)."""
+    pi = jnp.arange(max_pages, dtype=_I)
+    sq = jnp.repeat(seq_ids, max_pages)
+    pg = jnp.tile(pi, seq_ids.shape[0])
+    keys = _pt_key(sq, pg)
+    table, erased = sv.erase(cache.page_table, keys)
+    return dataclasses.replace(cache, page_table=table), jnp.sum(erased)

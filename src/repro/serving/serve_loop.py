@@ -1,0 +1,74 @@
+"""Serving loop: batched prefill + greedy decode over the model facade.
+
+``generate`` drives the dense-cache path (the dry-run serve_step); the
+paged-cache path (hash-table page table) is exercised by
+``examples/paged_serving.py``.  Sampling is greedy or temperature-based on a
+counter-mode PRNG keyed by (seed, step) so generation is reproducible across
+restarts mid-stream.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_I = jnp.int32
+
+
+def _sample(logits: jax.Array, key, temperature: float) -> jax.Array:
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(_I)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(_I)
+
+
+def generate(model, params, prompts: jax.Array, max_new: int, *,
+             temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, S_prompt) int32. Returns (B, max_new) generated tokens.
+
+    Uses real prefill where the family supports it, otherwise a decode-scan
+    warmup (state-recurrent families).
+    """
+    b, s_prompt = prompts.shape
+    max_seq = s_prompt + max_new
+
+    if model.prefill is not None and model.cfg.family in ("dense", "moe"):
+        logits, cache, *_ = model.prefill(params, {"tokens": prompts}, max_seq)
+        last_logits = logits[:, -1]
+        start_pos = s_prompt
+    else:
+        cache = model.init_cache(b, max_seq)
+
+        def warm(carry, i):
+            cache, _ = carry
+            tok = jax.lax.dynamic_slice_in_dim(prompts, i, 1, axis=1)
+            lg, cache = model.decode_step(params, cache, tok, i)
+            return (cache, lg[:, 0]), None
+
+        (cache, last_logits), _ = jax.lax.scan(
+            warm, (cache, jnp.zeros((b, model.cfg.vocab_size), jnp.float32)),
+            jnp.arange(s_prompt))
+        start_pos = s_prompt
+
+    def step(carry, i):
+        cache, logits = carry
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        tok = _sample(logits, key, temperature)[:, None]
+        lg, cache = model.decode_step(params, cache, tok, start_pos + i)
+        return (cache, lg[:, 0]), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(step, (cache, last_logits),
+                                jnp.arange(max_new))
+    return jnp.moveaxis(toks, 0, 1)                      # (B, max_new)
+
+
+def make_serve_step(model):
+    """The unit the dry-run lowers for decode cells: one token for a batch
+    against a fully-sized cache.  Donated cache; jit-ready."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,281 @@
+"""Unit tests: all six WarpCore data structures (paper §IV)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    bloom as bf,
+    bucket_list as bl,
+    counting as ct,
+    hashset as hs,
+    multi_value as mv,
+    single_value as sv,
+)
+from repro.core.common import (
+    EMPTY_KEY,
+    STATUS_FULL,
+    STATUS_INSERTED,
+    STATUS_MASKED,
+    STATUS_UPDATED,
+    TOMBSTONE_KEY,
+    table_geometry,
+)
+
+
+def test_table_geometry_prime_rows():
+    rows, cap = table_geometry(1000, 32)
+    assert cap == rows * 32 and cap >= 1000
+    for f in range(2, int(rows ** 0.5) + 1):
+        assert rows % f != 0
+
+
+class TestSingleValue:
+    def test_insert_retrieve_roundtrip(self):
+        t = sv.create(2048, window=32)
+        keys = jnp.arange(1, 1001, dtype=jnp.uint32)
+        vals = keys * 7
+        t, st = jax.jit(sv.insert)(t, keys, vals)
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        got, found = jax.jit(sv.retrieve)(t, keys)
+        assert found.all() and (got == vals).all()
+        assert int(t.count) == 1000
+
+    def test_misses(self):
+        t = sv.create(512)
+        t, _ = sv.insert(t, jnp.arange(1, 101, dtype=jnp.uint32),
+                         jnp.arange(1, 101, dtype=jnp.uint32))
+        _, found = sv.retrieve(t, jnp.arange(200, 300, dtype=jnp.uint32))
+        assert not found.any()
+
+    def test_upsert_updates_value(self):
+        t = sv.create(512)
+        k = jnp.asarray([5, 6], jnp.uint32)
+        t, _ = sv.insert(t, k, jnp.asarray([1, 2], jnp.uint32))
+        t, st = sv.insert(t, k, jnp.asarray([10, 20], jnp.uint32))
+        assert (np.asarray(st) == STATUS_UPDATED).all()
+        got, _ = sv.retrieve(t, k)
+        assert (np.asarray(got) == [10, 20]).all()
+        assert int(t.count) == 2
+
+    def test_erase_and_reinsert(self):
+        t = sv.create(512)
+        keys = jnp.arange(1, 101, dtype=jnp.uint32)
+        t, _ = sv.insert(t, keys, keys)
+        t, erased = sv.erase(t, keys[:50])
+        assert erased.all() and int(t.count) == 50
+        _, f = sv.retrieve(t, keys[:50])
+        assert not f.any()
+        _, f2 = sv.retrieve(t, keys[50:])
+        assert f2.all()
+        t, st = sv.insert(t, keys[:50], keys[:50] + 1)
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        assert int(t.count) == 100
+
+    def test_no_duplicate_after_tombstone_reuse(self):
+        # key probing past a tombstone must update, not duplicate
+        t = sv.create(256, window=8)
+        keys = jnp.arange(1, 101, dtype=jnp.uint32)
+        t, _ = sv.insert(t, keys, keys)
+        t, _ = sv.erase(t, keys[:30])
+        t, st = sv.insert(t, keys[30:60], keys[30:60] * 2)  # present keys
+        assert (np.asarray(st) == STATUS_UPDATED).all()
+        got, f = sv.retrieve(t, keys[30:60])
+        assert f.all() and (got == keys[30:60] * 2).all()
+
+    def test_full_table_reports_full(self):
+        t = sv.create(32, window=8, max_probes=16)
+        cap = t.capacity
+        keys = jnp.arange(1, cap + 50, dtype=jnp.uint32)   # unique keys
+        t, st = sv.insert(t, keys, keys)
+        st = np.asarray(st)
+        count = int(t.count)
+        assert count <= cap
+        assert (st == STATUS_FULL).sum() == len(keys) - count
+        assert (st == STATUS_INSERTED).sum() == count
+
+    def test_masked_inserts_skipped(self):
+        t = sv.create(512)
+        keys = jnp.arange(1, 11, dtype=jnp.uint32)
+        mask = jnp.asarray([True, False] * 5)
+        t, st = sv.insert(t, keys, keys, mask=mask)
+        assert (np.asarray(st)[1::2] == STATUS_MASKED).all()
+        _, f = sv.retrieve(t, keys)
+        assert (np.asarray(f) == np.asarray(mask)).all()
+
+    @pytest.mark.parametrize("layout", ["soa", "aos", "packed"])
+    def test_layouts_equivalent(self, layout):
+        t = sv.create(1024, layout=layout, window=16)
+        keys = jnp.arange(1, 501, dtype=jnp.uint32)
+        t, st = sv.insert(t, keys, keys ^ jnp.uint32(0xBEEF))
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        got, f = sv.retrieve(t, keys)
+        assert f.all() and (got == keys ^ jnp.uint32(0xBEEF)).all()
+
+    @pytest.mark.parametrize("scheme", ["cops", "linear", "quadratic"])
+    def test_probing_schemes(self, scheme):
+        t = sv.create(1024, scheme=scheme, window=16)
+        keys = jnp.arange(1, 701, dtype=jnp.uint32)
+        t, st = sv.insert(t, keys, keys)
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        got, f = sv.retrieve(t, keys)
+        assert f.all() and (got == keys).all()
+
+    def test_64bit_keys_two_planes(self):
+        t = sv.create(1024, key_words=2, value_words=2, window=16)
+        n = 300
+        rng = np.random.default_rng(3)
+        keys = np.stack([rng.integers(0, 2**32 - 2, n, dtype=np.uint32),
+                         rng.integers(0, 2**32 - 2, n, dtype=np.uint32)],
+                        axis=1)
+        keys = np.unique(keys, axis=0)
+        vals = np.stack([keys[:, 0] ^ 0xAAAA, keys[:, 1] ^ 0x5555], axis=1)
+        t, st = sv.insert(t, jnp.asarray(keys), jnp.asarray(vals.astype(np.uint32)))
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        got, f = sv.retrieve(t, jnp.asarray(keys))
+        assert f.all() and (np.asarray(got) == vals).all()
+
+    def test_high_load_factor_097(self):
+        """Paper's headline: COPS stays correct at rho = 0.97."""
+        t = sv.create(1024, window=32)
+        n = int(t.capacity * 0.97)
+        keys = jnp.arange(1, n + 1, dtype=jnp.uint32)
+        t, st = sv.insert(t, keys, keys)
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        got, f = sv.retrieve(t, keys)
+        assert f.all() and (got == keys).all()
+
+    def test_for_each_and_for_all(self):
+        t = sv.create(256)
+        keys = jnp.arange(1, 51, dtype=jnp.uint32)
+        t, _ = sv.insert(t, keys, keys * 3)
+        out = sv.for_each(t, keys, lambda k, v, f: v[0] + 1)
+        assert (np.asarray(out) == np.arange(1, 51) * 3 + 1).all()
+        live = sv.for_all(t, lambda k, v, m: m)
+        assert int(jnp.sum(live)) == 50
+
+
+class TestMultiValue:
+    def test_multiplicity_roundtrip(self):
+        t = mv.create(4096, window=32)
+        ks, vs, exp = [], [], {}
+        for i in range(1, 201):
+            m = (i % 7) + 1
+            exp[i] = {i * 100 + j for j in range(m)}
+            for j in range(m):
+                ks.append(i)
+                vs.append(i * 100 + j)
+        t, st = jax.jit(mv.insert)(t, jnp.asarray(ks, jnp.uint32),
+                                   jnp.asarray(vs, jnp.uint32))
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        q = jnp.arange(1, 201, dtype=jnp.uint32)
+        cnt = mv.count_values(t, q)
+        assert (np.asarray(cnt) == [(i % 7) + 1 for i in range(1, 201)]).all()
+        out, off, _ = mv.retrieve_all(t, q, out_capacity=len(ks))
+        out, off = np.asarray(out), np.asarray(off)
+        for i in range(1, 201):
+            assert set(out[off[i - 1]:off[i]].tolist()) == exp[i]
+
+    def test_erase_all_values_of_key(self):
+        t = mv.create(1024)
+        keys = jnp.asarray([7] * 5 + [9] * 3, jnp.uint32)
+        vals = jnp.arange(8, dtype=jnp.uint32)
+        t, _ = mv.insert(t, keys, vals)
+        t, cnt = mv.erase(t, jnp.asarray([7], jnp.uint32))
+        assert int(cnt[0]) == 5
+        c = mv.count_values(t, jnp.asarray([7, 9], jnp.uint32))
+        assert np.asarray(c).tolist() == [0, 3]
+
+
+class TestBucketList:
+    def test_growth_and_retrieval(self):
+        t = bl.create(1024, pool_capacity=16384, s0=1, growth=1.1)
+        rng = np.random.default_rng(1)
+        ks, vs, exp = [], [], {}
+        for i in range(1, 151):
+            m = int(rng.integers(1, 30))
+            exp[i] = {i * 1000 + j for j in range(m)}
+            for j in range(m):
+                ks.append(i)
+                vs.append(i * 1000 + j)
+        perm = rng.permutation(len(ks))
+        t, st = jax.jit(bl.insert)(
+            t, jnp.asarray(np.asarray(ks, np.uint32)[perm]),
+            jnp.asarray(np.asarray(vs, np.uint32)[perm]))
+        assert (np.asarray(st) == STATUS_INSERTED).all()
+        q = jnp.arange(1, 151, dtype=jnp.uint32)
+        cnt = bl.count_values(t, q)
+        assert (np.asarray(cnt) == [len(exp[i]) for i in range(1, 151)]).all()
+        out, off, _ = bl.retrieve_all(t, q, out_capacity=len(ks))
+        out, off = np.asarray(out), np.asarray(off)
+        for i in range(1, 151):
+            assert set(out[off[i - 1]:off[i]].tolist()) == exp[i]
+
+    def test_growth_schedule(self):
+        sizes, cum = bl.growth_schedule(1, 2.0, 1000)
+        assert sizes[:5] == (1, 2, 4, 8, 16)
+        assert cum[:6] == (0, 1, 3, 7, 15, 31)
+        sizes, cum = bl.growth_schedule(4, 1.0, 100)
+        assert all(s == 4 for s in sizes)
+
+    def test_pool_exhaustion_reported(self):
+        from repro.core.common import STATUS_POOL_FULL
+        t = bl.create(256, pool_capacity=8, s0=4, growth=1.0)
+        keys = jnp.asarray([1] * 20, jnp.uint32)
+        t, st = bl.insert(t, keys, jnp.arange(20, dtype=jnp.uint32))
+        st = np.asarray(st)
+        assert (st == STATUS_POOL_FULL).any()
+        assert int(bl.count_values(t, jnp.asarray([1], jnp.uint32))[0]) < 20
+
+    def test_handle_packing(self):
+        ptr = jnp.asarray([12345], jnp.uint32)
+        h = bl.pack_handle(ptr, jnp.asarray([999]), jnp.asarray([7]),
+                           jnp.asarray([bl.STATE_READY]))
+        p, c, b, s = bl.unpack_handle(h)
+        assert int(p[0]) == 12345 and int(c[0]) == 999
+        assert int(b[0]) == 7 and int(s[0]) == bl.STATE_READY
+
+
+class TestCountingAndSet:
+    def test_counting(self):
+        t = ct.create(512)
+        keys = jnp.asarray(np.repeat(np.arange(1, 21, dtype=np.uint32), 5))
+        t, _ = ct.insert(t, keys)
+        c = ct.counts(t, jnp.arange(1, 21, dtype=jnp.uint32))
+        assert (np.asarray(c) == 5).all()
+        assert int(ct.counts(t, jnp.asarray([99], jnp.uint32))[0]) == 0
+
+    def test_hashset(self):
+        s = hs.create(512)
+        s, new = hs.add(s, jnp.arange(1, 101, dtype=jnp.uint32))
+        assert new.all()
+        s, new2 = hs.add(s, jnp.arange(50, 151, dtype=jnp.uint32))
+        assert int(new2.sum()) == 50
+        assert int(hs.size(s)) == 150
+        s, rem = hs.remove(s, jnp.arange(1, 51, dtype=jnp.uint32))
+        assert rem.all() and int(hs.size(s)) == 100
+
+
+class TestBloom:
+    def test_no_false_negatives(self):
+        f = bf.create(1 << 14, k=4)
+        keys = jnp.arange(1, 2001, dtype=jnp.uint32)
+        f = bf.insert(f, keys)
+        assert bf.contains(f, keys).all()
+
+    def test_fp_rate_reasonable(self):
+        f = bf.create(1 << 15, k=4)
+        f = bf.insert(f, jnp.arange(1, 1001, dtype=jnp.uint32))
+        fp = bf.contains(f, jnp.arange(10 ** 6, 10 ** 6 + 10000,
+                                       dtype=jnp.uint32))
+        assert float(fp.mean()) < 0.02
+
+    def test_pack_roundtrip(self):
+        f = bf.create(1 << 12, k=3)
+        f = bf.insert(f, jnp.arange(1, 301, dtype=jnp.uint32))
+        w = bf.pack_words(f)
+        f2 = bf.unpack_words(w, f.block_bits, f.k, f.seed)
+        assert (f2.bits == f.bits).all()

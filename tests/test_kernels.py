@@ -1,0 +1,224 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs the pure-jnp
+oracle in each kernel's ref.py — shapes, windows, load factors, dtypes."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bloom as bloom_core
+from repro.core import multi_value as mv
+from repro.core import single_value as sv
+from repro.kernels.bloom import ops as bloom_ops
+from repro.kernels.bloom import ref as bloom_ref
+from repro.kernels.cops import ops as cops_ops
+from repro.kernels.cops import ref as cops_ref
+from repro.kernels.minhash import ops as mh_ops
+from repro.kernels.minhash import ref as mh_ref
+
+
+def _mk_pairs(rng, n):
+    keys = rng.choice(np.arange(1, 8 * n, dtype=np.uint32), size=n,
+                      replace=False)
+    vals = rng.integers(0, 2 ** 32 - 1, n, dtype=np.uint32)
+    return jnp.asarray(keys), jnp.asarray(vals)
+
+
+class TestCopsKernel:
+    @pytest.mark.parametrize("window", [8, 32, 128])
+    @pytest.mark.parametrize("load", [0.5, 0.9])
+    def test_insert_matches_ref(self, window, load):
+        rng = np.random.default_rng(window)
+        t_k = sv.create(2048, window=window, backend="pallas")
+        t_r = sv.create(2048, window=window, backend="jax")
+        n = int(t_k.capacity * load)
+        keys, vals = _mk_pairs(rng, n)
+        t_k, st_k = sv.insert(t_k, keys, vals)
+        t_r, st_r = cops_ref.insert(t_r, keys, vals)
+        np.testing.assert_array_equal(np.asarray(st_k), np.asarray(st_r))
+        for pk, pr in zip(jax.tree.leaves(t_k.store),
+                          jax.tree.leaves(t_r.store)):
+            np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        assert int(t_k.count) == int(t_r.count)
+
+    @pytest.mark.parametrize("window", [16, 64])
+    def test_lookup_matches_ref(self, window):
+        rng = np.random.default_rng(7)
+        t = sv.create(1024, window=window, backend="pallas")
+        keys, vals = _mk_pairs(rng, 600)
+        t, _ = sv.insert(t, keys, vals)
+        queries = jnp.concatenate([keys[:300],
+                                   jnp.arange(10 ** 6, 10 ** 6 + 300,
+                                              dtype=jnp.uint32)])
+        got_k, f_k = cops_ops.retrieve(t, queries)
+        got_r, f_r = cops_ref.retrieve(t, queries)
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(got_r))
+        np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+
+    def test_duplicate_keys_within_batch(self):
+        """Sequential semantics: later duplicate upserts the earlier one."""
+        t_k = sv.create(256, backend="pallas")
+        t_r = sv.create(256, backend="jax")
+        keys = jnp.asarray([5, 7, 5, 9, 5], jnp.uint32)
+        vals = jnp.asarray([1, 2, 3, 4, 5], jnp.uint32)
+        t_k, st_k = sv.insert(t_k, keys, vals)
+        t_r, st_r = sv.insert(t_r, keys, vals)
+        np.testing.assert_array_equal(np.asarray(st_k), np.asarray(st_r))
+        got, _ = cops_ops.retrieve(t_k, jnp.asarray([5], jnp.uint32))
+        assert int(got[0]) == 5
+
+    def test_linear_scheme_kernel(self):
+        rng = np.random.default_rng(2)
+        t_k = sv.create(512, scheme="linear", window=16, backend="pallas")
+        t_r = sv.create(512, scheme="linear", window=16, backend="jax")
+        keys, vals = _mk_pairs(rng, 300)
+        t_k, _ = sv.insert(t_k, keys, vals)
+        t_r, _ = sv.insert(t_r, keys, vals)
+        for pk, pr in zip(jax.tree.leaves(t_k.store),
+                          jax.tree.leaves(t_r.store)):
+            np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+    @pytest.mark.parametrize("mult", [1, 4, 16])
+    def test_multi_value_matches_ref(self, mult):
+        rng = np.random.default_rng(mult)
+        t_k = mv.create(4096, window=32, backend="pallas")
+        t_r = mv.create(4096, window=32, backend="jax")
+        base = rng.choice(np.arange(1, 4000, dtype=np.uint32), 150,
+                          replace=False)
+        keys = jnp.asarray(np.repeat(base, mult))
+        vals = jnp.arange(150 * mult, dtype=jnp.uint32)
+        t_k, st_k = mv.insert(t_k, keys, vals)
+        t_r, st_r = cops_ref.insert_multi(t_r, keys, vals)
+        np.testing.assert_array_equal(np.asarray(st_k), np.asarray(st_r))
+        for pk, pr in zip(jax.tree.leaves(t_k.store),
+                          jax.tree.leaves(t_r.store)):
+            np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+    @pytest.mark.parametrize("window", [16, 32])
+    def test_64bit_keys_kernel_matches_ref(self, window):
+        """2-plane u64 keys on the kernel path (paper: beyond 32-bit)."""
+        rng = np.random.default_rng(window)
+        n = 600
+        keys = np.unique(np.stack(
+            [rng.integers(0, 2 ** 32 - 2, n, dtype=np.uint32),
+             rng.integers(0, 2 ** 32 - 2, n, dtype=np.uint32)], axis=1), axis=0)
+        vals = (keys[:, 0] ^ keys[:, 1]).astype(np.uint32)
+        tk = sv.create(2048, key_words=2, window=window, backend="pallas")
+        tr = sv.create(2048, key_words=2, window=window, backend="jax")
+        tk, st_k = sv.insert(tk, jnp.asarray(keys), jnp.asarray(vals))
+        tr, st_r = sv.insert(tr, jnp.asarray(keys), jnp.asarray(vals))
+        np.testing.assert_array_equal(np.asarray(st_k), np.asarray(st_r))
+        for pk, pr in zip(jax.tree.leaves(tk.store),
+                          jax.tree.leaves(tr.store)):
+            np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        got, found = cops_ops.retrieve(tk, jnp.asarray(keys))
+        assert found.all() and (np.asarray(got) == vals).all()
+
+    def test_wider_value_fallback_dispatches_to_jax(self):
+        """2-word values are outside the kernel contract -> pure-JAX path."""
+        t = sv.create(512, key_words=1, value_words=2, backend="pallas")
+        keys = jnp.arange(1, 101, dtype=jnp.uint32)
+        vals = jnp.stack([keys, keys * 2], axis=1)
+        t, st = sv.insert(t, keys, vals)
+        got, f = sv.retrieve(dataclasses.replace(t, backend="jax"), keys)
+        assert f.all()
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("shape", [(2, 256, 4, 2, 64), (1, 384, 2, 2, 32),
+                                       (2, 128, 4, 4, 64)])
+    def test_matches_naive_reference(self, causal, shape):
+        from repro.kernels.flash import ops as fops, ref as fref
+        b, s, h, hkv, hd = shape
+        rng = np.random.default_rng(s + h)
+        q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+        out = fops.flash_attention(q, k, v, causal=causal)
+        rep = h // hkv
+        qe = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+        ke = jnp.repeat(k, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+        ve = jnp.repeat(v, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+        want = fref.attention(qe, ke, ve, causal=causal)
+        want = want.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16_inputs(self):
+        from repro.kernels.flash import ops as fops, ref as fref
+        rng = np.random.default_rng(9)
+        q = jnp.asarray(rng.normal(size=(1, 256, 2, 64))).astype(jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(1, 256, 2, 64))).astype(jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(1, 256, 2, 64))).astype(jnp.bfloat16)
+        out = fops.flash_attention(q, k, v)
+        qe = q.transpose(0, 2, 1, 3).reshape(2, 256, 64)
+        ke = k.transpose(0, 2, 1, 3).reshape(2, 256, 64)
+        ve = v.transpose(0, 2, 1, 3).reshape(2, 256, 64)
+        want = fref.attention(qe, ke, ve).reshape(1, 2, 256, 64)
+        np.testing.assert_allclose(
+            np.asarray(out.transpose(0, 2, 1, 3), np.float32),
+            np.asarray(want, np.float32), rtol=2e-2, atol=2e-2)
+
+
+class TestBloomKernel:
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    @pytest.mark.parametrize("n", [100, 3000])
+    def test_states_and_queries_match_ref(self, k, n):
+        f = bloom_core.create(1 << 13, k=k)
+        keys = jnp.arange(1, n + 1, dtype=jnp.uint32)
+        fk = bloom_ops.insert(f, keys)
+        fr = bloom_ref.insert(f, keys)
+        np.testing.assert_array_equal(np.asarray(fk.bits), np.asarray(fr.bits))
+        q = jnp.arange(1, 2 * n + 1, dtype=jnp.uint32)
+        np.testing.assert_array_equal(np.asarray(bloom_ops.contains(fk, q)),
+                                      np.asarray(bloom_ref.contains(fr, q)))
+
+    def test_masked_inserts(self):
+        f = bloom_core.create(1 << 12, k=3)
+        keys = jnp.arange(1, 101, dtype=jnp.uint32)
+        mask = keys % 2 == 0
+        fk = bloom_ops.insert(f, keys, mask)
+        fr = bloom_ref.insert(f, keys, mask)
+        np.testing.assert_array_equal(np.asarray(fk.bits), np.asarray(fr.bits))
+
+
+class TestMinhashKernel:
+    @pytest.mark.parametrize("k", [8, 16])
+    @pytest.mark.parametrize("length", [100, 1337, 4096])
+    def test_kmer_hashes_match_ref(self, k, length):
+        rng = np.random.default_rng(length)
+        bases = jnp.asarray(rng.integers(0, 4, length).astype(np.uint8))
+        hk = mh_ops.kmer_hashes(bases, k=k, tile=256)
+        hr = mh_ref.kmer_hashes(bases, k=k)
+        np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+
+    def test_invalid_bases_invalidate_kmers(self):
+        bases = np.zeros(100, np.uint8)
+        bases[50] = 4                                  # N base
+        hk = np.asarray(mh_ops.kmer_hashes(jnp.asarray(bases), k=8, tile=64))
+        assert (hk[43:51] == mh_ref.INVALID).all()
+        assert (hk[:43] != mh_ref.INVALID).all()
+
+    def test_canonical_reverse_complement(self):
+        """A sequence and its reverse complement share canonical k-mers."""
+        rng = np.random.default_rng(5)
+        fwd = rng.integers(0, 4, 64).astype(np.uint8)
+        rc = (3 - fwd)[::-1].copy()
+        k = 8
+        hf = set(np.asarray(mh_ref.kmer_hashes(jnp.asarray(fwd), k)).tolist())
+        hr = set(np.asarray(mh_ref.kmer_hashes(jnp.asarray(rc), k)).tolist())
+        assert hf == hr
+
+    def test_sketch_smallest_distinct(self):
+        hashes = jnp.asarray([5, 3, 3, 9, 1, 1, 7], jnp.uint32)
+        sk = np.asarray(mh_ref.minhash_sketch(hashes, 4))
+        assert sk.tolist() == [1, 3, 5, 7]
+
+    def test_sketch_reads_shape(self):
+        rng = np.random.default_rng(0)
+        reads = jnp.asarray(rng.integers(0, 4, (4, 120)).astype(np.uint8))
+        sk = mh_ops.sketch_reads(reads, k=16, s=8)
+        assert sk.shape == (4, 8)

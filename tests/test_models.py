@@ -1,0 +1,205 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train step
+on CPU, asserting output shapes + finiteness (assignment requirement f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model_zoo as zoo
+
+
+def _batch_for(cfg, key, b=2, s=16):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((b, cfg.frontend_len, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((b, cfg.frontend_len, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_loss_finite(self, arch):
+        cfg = configs.get_smoke_config(arch)
+        model = zoo.build(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        loss, metrics = jax.jit(model.loss)(params, _batch_for(cfg, key))
+        assert jnp.isfinite(loss), f"{arch} loss not finite"
+        assert 1.0 < float(loss) < 20.0
+
+    def test_train_step_reduces_loss(self, arch):
+        from repro.training import optimizer as opt_mod
+        from repro.training import train_loop as tl
+        cfg = configs.get_smoke_config(arch)
+        model = zoo.build(cfg)
+        ocfg = opt_mod.OptConfig(lr=3e-3, warmup_steps=1, total_steps=30)
+        state = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
+        step = jax.jit(tl.make_train_step(model, ocfg))
+        batch = _batch_for(cfg, jax.random.PRNGKey(1), b=4, s=16)
+        losses = []
+        for _ in range(8):
+            state, m = step(state, batch)   # overfit one batch
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], f"{arch}: {losses}"
+
+    def test_decode_step_shapes(self, arch):
+        cfg = configs.get_smoke_config(arch)
+        model = zoo.build(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        b, max_seq = 2, 24
+        cache = model.init_cache(b, max_seq)
+        tok = jnp.zeros((b, 1), jnp.int32)
+        logits, cache2 = jax.jit(model.decode_step)(params, cache, tok,
+                                                    jnp.int32(0))
+        assert logits.shape == (b, 1, cfg.vocab_size)
+        assert jnp.isfinite(logits).all()
+        # cache structure preserved
+        assert (jax.tree_util.tree_structure(cache)
+                == jax.tree_util.tree_structure(cache2))
+
+    def test_decode_matches_forward(self, arch):
+        """Teacher-forced decode must reproduce the parallel forward.
+
+        MoE configs use a no-drop capacity factor here: capacity-based
+        dropping legitimately differs between a (B*S)-token forward and a
+        B-token decode step — equality only holds when nothing drops.
+        """
+        import dataclasses as dc
+        cfg = configs.get_smoke_config(arch)
+        if cfg.family == "audio":
+            pytest.skip("enc-dec positions verified in test_encdec_consistency")
+        if cfg.moe is not None:
+            cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=8.0))
+        model = zoo.build(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        b, s = 2, 8
+        batch = _batch_for(cfg, key, b=b, s=s)
+        from repro.models import transformer as tf
+        logits_fwd, _ = tf.lm_logits(cfg, params, batch["tokens"],
+                                     batch.get("patches"))
+        if cfg.family == "vlm":
+            logits_fwd = logits_fwd[:, cfg.frontend_len:]
+            pytest.skip("vlm decode starts mid-sequence; covered by shapes test")
+        cache = model.init_cache(b, s)
+        outs = []
+        for i in range(s):
+            lg, cache = model.decode_step(params, cache,
+                                          batch["tokens"][:, i:i + 1],
+                                          jnp.int32(i))
+            outs.append(lg[:, 0])
+        logits_dec = jnp.stack(outs, axis=1)
+        # MoE: discrete top-k routing amplifies bf16 noise (a near-tie in
+        # router logits flips an expert choice) — wider tolerance
+        tol = 0.5 if cfg.moe is not None else 0.15
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_fwd),
+                                   rtol=tol, atol=tol)
+
+    def test_full_config_exact_spec(self, arch):
+        """The FULL config matches the assignment table exactly."""
+        spec = {
+            "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+            "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+            "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+            "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+            "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+            "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+            "whisper-small": (12, 768, 12, 12, 3072, 51865),
+            "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+            "rwkv6-3b": (32, 2560, 0, 0, 8960, 65536),
+            "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        }[arch]
+        cfg = configs.get_config(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == spec
+
+
+def test_encdec_consistency():
+    """Whisper decode with cross-KV cache matches teacher-forced decode."""
+    from repro.models import encdec as ed
+    cfg = configs.get_smoke_config("whisper-small")
+    key = jax.random.PRNGKey(0)
+    params = ed.init_encdec(cfg, key)
+    b, s = 2, 6
+    frames = jax.random.normal(key, (b, cfg.frontend_len, cfg.d_model),
+                               jnp.float32).astype(jnp.bfloat16) * 0.1
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    enc = ed.encode(cfg, params, frames)
+    logits_fwd = ed.decode_train(cfg, params, enc, toks)
+    cache = ed.init_encdec_cache(cfg, b, s, cfg.frontend_len)
+    cache = ed.encdec_prefill(cfg, params, frames, cache)
+    outs = []
+    for i in range(s):
+        lg, cache = ed.encdec_decode_step(cfg, params, cache, toks[:, i:i + 1],
+                                          jnp.int32(i))
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(logits_fwd), rtol=0.15, atol=0.15)
+
+
+def test_moe_routes_to_multiple_experts():
+    from repro.models import moe as moe_mod
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, 32, 64, num_experts=8, num_shared=1,
+                         dtype=jnp.float32)
+    x = jax.random.normal(key, (2, 16, 32))
+    y, aux = moe_mod.moe_ffn(p, x, num_experts=8, top_k=2)
+    assert y.shape == x.shape and jnp.isfinite(y).all()
+    assert 0.5 < float(aux) < 8.1      # balanced-ish routing at init
+
+
+def test_param_counts_match_published():
+    published = {
+        "mistral-large-123b": (123e9, 0.06),
+        "deepseek-v2-236b": (236e9, 0.06),
+        "dbrx-132b": (132e9, 0.06),
+        "jamba-1.5-large-398b": (398e9, 0.06),
+    }
+    for arch, (n, tol) in published.items():
+        got = configs.get_config(arch).param_count()
+        assert abs(got - n) / n < tol, f"{arch}: {got / 1e9:.1f}B vs {n / 1e9}B"
+    assert abs(configs.get_config("jamba-1.5-large-398b").active_param_count()
+               - 94e9) / 94e9 < 0.1
+
+
+def test_chunked_attention_matches_naive():
+    from repro.models import attention as attn
+    key = jax.random.PRNGKey(0)
+    b, s, hkv, rep, hd = 2, 256, 2, 3, 16
+    q = jax.random.normal(key, (b, s, hkv, rep, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, hd))
+    out = attn.chunked_causal_attention(q, k, v, q_chunk=64, k_chunk=64)
+    # naive reference
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bhrqk,bkhd->bqhrd", w, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_chunked_attention_ragged_and_kv_valid():
+    from repro.models import attention as attn
+    key = jax.random.PRNGKey(0)
+    b, sq, sk, hkv, hd = 1, 100, 150, 2, 8
+    q = jax.random.normal(key, (b, sq, hkv, 1, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, hkv, hd))
+    out = attn.chunked_causal_attention(q, k, v, causal=False, q_chunk=64,
+                                        k_chunk=64, kv_valid=120)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", q, k[:, :120]) / np.sqrt(hd)
+    w = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bhrqk,bkhd->bqhrd", w, v[:, :120])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)

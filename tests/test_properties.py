@@ -1,0 +1,202 @@
+"""Hypothesis property tests: table semantics vs python reference models,
+and the structural invariants the probing scheme relies on."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import bloom as bf
+from repro.core import bucket_list as bl
+from repro.core import hashing, layouts, probing
+from repro.core import multi_value as mv
+from repro.core import single_value as sv
+from repro.core.common import (
+    EMPTY_KEY,
+    STATUS_INSERTED,
+    STATUS_UPDATED,
+    TOMBSTONE_KEY,
+)
+
+SETTINGS = settings(max_examples=20, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow,
+                                           HealthCheck.data_too_large])
+
+keys_st = st.lists(st.integers(1, 0xFFFF00), min_size=1, max_size=80)
+vals_st = st.integers(0, 0xFFFFFFFF)
+
+
+@st.composite
+def ops_st(draw):
+    """A sequence of (op, key, value) against a small key universe."""
+    n = draw(st.integers(1, 60))
+    ops = []
+    for _ in range(n):
+        op = draw(st.sampled_from(["insert", "insert", "insert", "erase"]))
+        k = draw(st.integers(1, 40))
+        v = draw(st.integers(0, 10 ** 6))
+        ops.append((op, k, v))
+    return ops
+
+
+class TestSingleValueVsDict:
+    @SETTINGS
+    @given(ops=ops_st(), window=st.sampled_from([4, 16, 32]),
+           scheme=st.sampled_from(["cops", "linear"]))
+    def test_matches_dict_model(self, ops, window, scheme):
+        t = sv.create(512, window=window, scheme=scheme)
+        model = {}
+        for op, k, v in ops:
+            ka = jnp.asarray([k], jnp.uint32)
+            if op == "insert":
+                t, stt = sv.insert(t, ka, jnp.asarray([v], jnp.uint32))
+                code = int(stt[0])
+                assert code == (STATUS_UPDATED if k in model
+                                else STATUS_INSERTED)
+                model[k] = v & 0xFFFFFFFF
+            else:
+                t, er = sv.erase(t, ka)
+                assert bool(er[0]) == (k in model)
+                model.pop(k, None)
+        assert int(t.count) == len(model)
+        universe = jnp.arange(1, 41, dtype=jnp.uint32)
+        got, found = sv.retrieve(t, universe)
+        for i, k in enumerate(range(1, 41)):
+            assert bool(found[i]) == (k in model)
+            if k in model:
+                assert int(got[i]) == model[k]
+
+    @SETTINGS
+    @given(keys=keys_st)
+    def test_cops_invariant_lowest_candidate(self, keys):
+        """Every stored key sits at the lowest candidate position of its
+        probe sequence (what makes stop-at-EMPTY retrieval sound)."""
+        t = sv.create(256, window=8)
+        u = np.unique(np.asarray(keys, np.uint32))
+        t, _ = sv.insert(t, jnp.asarray(u), jnp.asarray(u))
+        kp = np.asarray(t.key_planes()[0])          # (p, W)
+        word = hashing.mix_murmur3(jnp.asarray(u))
+        for k in u:
+            row = int(probing.initial_row(jnp.uint32(k), t.num_rows, t.seed))
+            step = int(probing.row_step("cops", jnp.uint32(k), t.num_rows,
+                                        t.seed))
+            for attempt in range(t.num_rows):
+                win = kp[row]
+                if (win == k).any():
+                    lane = int(np.argmax(win == k))
+                    before = win[:lane]
+                    assert not (before == EMPTY_KEY).any(), \
+                        f"key {k} not at lowest candidate lane"
+                    break
+                assert not (win == EMPTY_KEY).any(), \
+                    f"EMPTY window before key {k} was found"
+                row = (row + step) % t.num_rows
+
+
+class TestMultiValueVsMultiDict:
+    @SETTINGS
+    @given(pairs=st.lists(st.tuples(st.integers(1, 20),
+                                    st.integers(0, 10 ** 6)),
+                          min_size=1, max_size=100))
+    def test_multiset_semantics(self, pairs):
+        t = mv.create(1024, window=16)
+        model: dict = {}
+        ks = jnp.asarray([p[0] for p in pairs], jnp.uint32)
+        vs = jnp.asarray([p[1] for p in pairs], jnp.uint32)
+        for k, v in pairs:
+            model.setdefault(k, []).append(v & 0xFFFFFFFF)
+        t, stt = mv.insert(t, ks, vs)
+        assert (np.asarray(stt) == STATUS_INSERTED).all()
+        q = jnp.arange(1, 21, dtype=jnp.uint32)
+        cnt = mv.count_values(t, q)
+        for i, k in enumerate(range(1, 21)):
+            assert int(cnt[i]) == len(model.get(k, []))
+        out, off, _ = mv.retrieve_all(t, q, out_capacity=len(pairs))
+        out, off = np.asarray(out), np.asarray(off)
+        for i, k in enumerate(range(1, 21)):
+            got = sorted(out[off[i]:off[i + 1]].tolist())
+            assert got == sorted(model.get(k, []))
+
+
+class TestBucketListVsMultiDict:
+    @SETTINGS
+    @given(pairs=st.lists(st.tuples(st.integers(1, 15),
+                                    st.integers(0, 10 ** 6)),
+                          min_size=1, max_size=80),
+           growth=st.sampled_from([1.0, 1.1, 2.0]),
+           s0=st.sampled_from([1, 2, 4]))
+    def test_matches_multidict(self, pairs, growth, s0):
+        t = bl.create(256, pool_capacity=4096, s0=s0, growth=growth)
+        model: dict = {}
+        for k, v in pairs:
+            model.setdefault(k, []).append(v & 0xFFFFFFFF)
+        ks = jnp.asarray([p[0] for p in pairs], jnp.uint32)
+        vs = jnp.asarray([p[1] for p in pairs], jnp.uint32)
+        t, stt = bl.insert(t, ks, vs)
+        assert (np.asarray(stt) == STATUS_INSERTED).all()
+        q = jnp.arange(1, 16, dtype=jnp.uint32)
+        out, off, cnt = bl.retrieve_all(t, q, out_capacity=len(pairs))
+        out, off = np.asarray(out), np.asarray(off)
+        for i, k in enumerate(range(1, 16)):
+            assert int(cnt[i]) == len(model.get(k, []))
+            # bucket-list preserves insertion order within a key
+            assert out[off[i]:off[i + 1]].tolist() == model.get(k, [])
+
+
+class TestBloomProperties:
+    @SETTINGS
+    @given(keys=keys_st)
+    def test_never_false_negative(self, keys):
+        f = bf.create(1 << 10, k=3)
+        ka = jnp.asarray(np.asarray(keys, np.uint32))
+        f = bf.insert(f, ka)
+        assert bf.contains(f, ka).all()
+
+    @SETTINGS
+    @given(keys=keys_st)
+    def test_insert_idempotent(self, keys):
+        f = bf.create(1 << 10, k=3)
+        ka = jnp.asarray(np.asarray(keys, np.uint32))
+        f1 = bf.insert(f, ka)
+        f2 = bf.insert(f1, ka)
+        assert (f1.bits == f2.bits).all()
+
+
+class TestMultisplitProperties:
+    @SETTINGS
+    @given(keys=keys_st, parts=st.sampled_from([2, 4, 8]))
+    def test_multisplit_is_stable_partition(self, keys, parts):
+        from repro.core import distributed as dist
+        ka = jnp.asarray(np.asarray(keys, np.uint32))
+        owners = dist.owner_of(ka, parts, 1)
+        so, counts, order, sk = dist.multisplit(owners, parts, ka)
+        so, counts, sk = np.asarray(so), np.asarray(counts), np.asarray(sk)
+        assert sorted(sk.tolist()) == sorted(np.asarray(ka).tolist())
+        assert (np.diff(so) >= 0).all()             # grouped by owner
+        assert counts.sum() == len(keys)
+        # stability: equal-owner keys keep relative order
+        for p in range(parts):
+            orig = [k for k, o in zip(np.asarray(ka), np.asarray(owners))
+                    if o == p]
+            assert sk[so == p].tolist() == orig
+
+
+class TestLayoutEquivalence:
+    @SETTINGS
+    @given(keys=keys_st, window=st.sampled_from([8, 32]))
+    def test_all_layouts_same_results(self, keys, window):
+        u = np.unique(np.asarray(keys, np.uint32))
+        vals = (u * 31 + 7).astype(np.uint32)
+        results = {}
+        for layout in layouts.LAYOUTS:
+            t = sv.create(512, window=window, layout=layout)
+            t, _ = sv.insert(t, jnp.asarray(u), jnp.asarray(vals))
+            got, found = sv.retrieve(t, jnp.asarray(u))
+            results[layout] = (np.asarray(got), np.asarray(found))
+        a = results["soa"]
+        for layout in ("aos", "packed"):
+            assert (results[layout][0] == a[0]).all()
+            assert (results[layout][1] == a[1]).all()

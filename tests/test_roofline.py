@@ -1,0 +1,91 @@
+"""Roofline machinery: HLO census on known programs, collective parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_census, roofline
+
+
+def test_census_counts_scan_trip_multipliers():
+    """A scan of matmuls must be counted trip_count times."""
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def f(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    compiled = jax.jit(f).lower(w, x).compile()
+    cen = hlo_census.census(compiled.as_text())
+    expected = 2 * 8 * 64 * 64 * 10                # 10 matmul trips
+    assert expected * 0.9 <= cen.flops <= expected * 1.3, cen.flops
+    assert 10 in cen.loops
+
+
+def test_census_no_loops_single_matmul():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    cen = hlo_census.census(compiled.as_text())
+    expected = 2 * 128 * 256 * 512
+    assert expected * 0.99 <= cen.flops <= expected * 1.01
+
+
+def test_collective_wire_formulas():
+    hlo = """
+HloModule test
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups=[4,8]<=[32], to_apply=%add
+  ROOT %ag = f32[1024]{0} all-gather(%ar), replica_groups=[4,8]<=[32], dimensions={0}
+}
+"""
+    cen = hlo_census.census(hlo, default_group=8)
+    bytes_ = 1024 * 4
+    want = 2 * bytes_ * 7 / 8 + bytes_ * 7 / 8
+    assert abs(cen.wire_bytes - want) < 1
+    assert cen.coll_counts == {"all-reduce": 1, "all-gather": 1}
+
+
+def test_model_flops_conventions():
+    from repro import configs
+    from repro.configs.base import SHAPES
+    cfg = configs.get_config("smollm-360m")
+    n = cfg.active_param_count()
+    t = SHAPES["train_4k"]
+    assert roofline.model_flops_for(cfg, t) == pytest.approx(
+        6 * n * 4096 * 256)
+    d = SHAPES["decode_32k"]
+    assert roofline.model_flops_for(cfg, d) == pytest.approx(2 * n * 128)
+
+
+def test_moe_uses_active_params():
+    from repro import configs
+    from repro.configs.base import SHAPES
+    cfg = configs.get_config("deepseek-v2-236b")
+    mf = roofline.model_flops_for(cfg, SHAPES["train_4k"])
+    assert mf < 6 * cfg.param_count() * 4096 * 256 * 0.2   # active << total
+
+
+def test_analyze_end_to_end_tiny():
+    """Full analyze() on a tiny jitted train-ish step."""
+    def step(w, x):
+        def loss(w):
+            h = x
+            for _ in range(2):
+                h = jnp.tanh(h @ w)
+            return jnp.sum(h * h)
+        g = jax.grad(loss)(w)
+        return w - 0.1 * g
+
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+    compiled = jax.jit(step).lower(w, x).compile()
+    rl = roofline.analyze(compiled, chips=1, model_flops=1e6)
+    assert rl.compute_s > 0 and rl.memory_s > 0
+    assert rl.bottleneck in ("compute", "memory", "collective")

@@ -1,0 +1,196 @@
+"""Training substrate: optimizers, checkpoint/reshard, compression, data."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import pipeline as dp
+from repro.models import model_zoo as zoo
+from repro.training import checkpoint as ckpt_mod
+from repro.training import compression as comp
+from repro.training import optimizer as opt_mod
+from repro.training import train_loop as tl
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get_smoke_config("smollm-360m")
+    return cfg, zoo.build(cfg)
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name", ["adamw", "adafactor"])
+    def test_reduces_loss(self, name, small_model):
+        cfg, model = small_model
+        ocfg = opt_mod.OptConfig(name=name, lr=3e-3, warmup_steps=1,
+                                 total_steps=40)
+        state = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
+        step = jax.jit(tl.make_train_step(model, ocfg))
+        dcfg = dp.DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                             global_batch=4)
+        batch = dp.get_batch(dcfg, 0)
+        losses = [float(step(state, batch)[1]["loss"])]
+        for _ in range(6):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+    def test_adafactor_memory_factored(self, small_model):
+        cfg, model = small_model
+        params = model.init(jax.random.PRNGKey(0))
+        ada = opt_mod.init(opt_mod.OptConfig(name="adafactor",
+                                             factored_min_dim=8), params)
+        adam = opt_mod.init(opt_mod.OptConfig(name="adamw"), params)
+        assert (opt_mod.state_bytes(ada) < 0.2 * opt_mod.state_bytes(adam))
+
+    def test_grad_clipping(self):
+        g = {"a": jnp.full((10,), 100.0)}
+        clipped, norm = opt_mod.clip_by_global_norm(g, 1.0)
+        assert float(norm) > 300
+        assert abs(float(opt_mod.global_norm(clipped)) - 1.0) < 1e-5
+
+    def test_schedule_warmup_cosine(self):
+        ocfg = opt_mod.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                 min_lr_frac=0.1)
+        lrs = [float(opt_mod.schedule(ocfg, jnp.int32(s)))
+               for s in [0, 5, 10, 55, 100]]
+        assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
+        assert abs(lrs[2] - 1.0) < 1e-6
+        assert 0.1 < lrs[3] < 1.0
+        assert abs(lrs[4] - 0.1) < 1e-2
+
+    def test_accumulation_matches_full_batch(self, small_model):
+        cfg, model = small_model
+        ocfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        dcfg = dp.DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                             global_batch=8)
+        batch = dp.get_batch(dcfg, 0)
+        s0 = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
+        s1, m1 = jax.jit(tl.make_train_step(model, ocfg, accum_steps=1))(s0, batch)
+        s0b = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
+        s4, m4 = jax.jit(tl.make_train_step(model, ocfg, accum_steps=4))(s0b, batch)
+        # same data -> near-identical updates (fp32 accumulation, different order)
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            s1.params, s4.params)
+        assert max(jax.tree.leaves(d)) < 5e-2
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_prune(self, small_model):
+        cfg, model = small_model
+        ocfg = opt_mod.OptConfig()
+        state = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            cm = ckpt_mod.CheckpointManager(d, keep=2)
+            for s in [1, 2, 3]:
+                cm.save(s, state, {"step": s})
+            assert cm.all_steps() == [2, 3]
+            restored, extra = cm.restore(jax.eval_shape(lambda: state))
+            assert extra["step"] == 3
+            for a, b in zip(jax.tree.leaves(state.params),
+                            jax.tree.leaves(restored.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_save(self, small_model):
+        cfg, model = small_model
+        state = tl.init_state(model, opt_mod.OptConfig(),
+                              jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            cm = ckpt_mod.CheckpointManager(d)
+            cm.save_async(7, state, {"step": 7})
+            cm.wait()
+            assert cm.latest_step() == 7
+
+    def test_bf16_preserved(self):
+        tree = {"w": jnp.full((4, 4), 1.5, jnp.bfloat16),
+                "s": jnp.int32(3)}
+        with tempfile.TemporaryDirectory() as d:
+            cm = ckpt_mod.CheckpointManager(d)
+            cm.save(1, tree)
+            restored, _ = cm.restore(jax.eval_shape(lambda: tree))
+            assert restored["w"].dtype == jnp.bfloat16
+            np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                          np.asarray(tree["w"]))
+
+    def test_atomicity_no_partial_dir(self, small_model):
+        cfg, model = small_model
+        state = tl.init_state(model, opt_mod.OptConfig(),
+                              jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            cm = ckpt_mod.CheckpointManager(d)
+            cm.save(1, state)
+            entries = [e for e in os.listdir(d) if not e.startswith("step_")]
+            assert entries == []
+
+
+class TestCompression:
+    def test_int8_error_feedback_converges(self):
+        """With error feedback, repeated compression of a constant gradient
+        must not lose mass (the residual carries the quantization error)."""
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+            size=(64, 64)).astype(np.float32))}
+        cfg = comp.CompressionConfig(kind="int8")
+        st = comp.init_state(cfg, g)
+        acc = jnp.zeros_like(g["w"])
+        for _ in range(20):
+            out, st = comp.compress_decompress(cfg, g, st)
+            acc = acc + out["w"]
+        np.testing.assert_allclose(np.asarray(acc / 20), np.asarray(g["w"]),
+                                   atol=2e-3)
+
+    def test_topk_sparsity(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+            size=(1000,)).astype(np.float32))}
+        cfg = comp.CompressionConfig(kind="topk", topk_frac=0.05)
+        out, _ = comp.compress_decompress(cfg, g, comp.init_state(cfg, g))
+        assert int(jnp.sum(out["w"] != 0)) == 50
+
+    def test_quantize_dequantize_bounds(self):
+        g = jnp.linspace(-3, 3, 1000)
+        q, s = comp.quantize_int8(g)
+        err = jnp.abs(comp.dequantize_int8(q, s) - g)
+        assert float(err.max()) <= float(s) / 2 + 1e-6
+
+
+class TestDataPipeline:
+    def test_deterministic_per_step_and_shard(self):
+        cfg = dp.DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+        b1 = dp.get_batch(cfg, 3, shard=1, num_shards=4)
+        b2 = dp.get_batch(cfg, 3, shard=1, num_shards=4)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        b3 = dp.get_batch(cfg, 3, shard=2, num_shards=4)
+        assert not np.array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b3["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = dp.DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+        b = dp.get_batch(cfg, 0)
+        assert b["tokens"].shape == b["labels"].shape == (2, 8)
+
+    def test_memmap_source(self, tmp_path):
+        data = np.arange(10000, dtype=np.uint16) % 97
+        path = tmp_path / "tokens.bin"
+        data.tofile(path)
+        cfg = dp.DataConfig(vocab_size=97, seq_len=16, global_batch=4,
+                            source="memmap", path=str(path))
+        b1 = dp.get_batch(cfg, 5)
+        b2 = dp.get_batch(cfg, 5)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        assert int(b1["tokens"].max()) < 97
+
+    def test_dedup_filter(self):
+        from repro.core import counting
+        t = counting.create(1024)
+        cfg = dp.DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+        toks = dp.get_batch(cfg, 0)["tokens"]
+        dup = jnp.concatenate([toks, toks[:2]], axis=0)
+        t, keep = dp.dedup_filter(t, dup)
+        assert keep[:4].all() and not keep[4:].any()
