@@ -1,0 +1,91 @@
+"""Fig. 9 (extension) — relational operator throughput on WarpCore tables.
+
+The paper benchmarks raw table ops against cuDF (§V); this figure runs
+the *relational* layer those cuDF numbers stand in for:
+
+  join     : inner hash join throughput (build+probe pairs/s) across
+             build-table load factors (rho) and build:probe ratios
+  join-how : inner vs left vs semi vs anti at a fixed shape
+  groupby  : group-by aggregate throughput across group counts (g) for
+             sum / count / mean
+  distinct : dedup throughput at fixed duplication factor
+
+Same CSV contract as fig5-8 (name,us_per_call,derived,extra); CPU-
+container scale, shape-level comparison (see benchmarks/util.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import row, time_fn
+from repro.configs.warpcore import CONFIG
+from repro.relational import distinct as rdistinct
+from repro.relational import groupby as rgroupby
+from repro.relational import join as rjoin
+
+
+def _keys(rng, n, universe):
+    return jnp.asarray(rng.integers(1, universe, n).astype(np.uint32))
+
+
+def run(out=print):
+    n = CONFIG.n_pairs // 2
+    rng = np.random.default_rng(7)
+
+    # --- join vs build load factor (probe = build size) ---------------------
+    for rho in (0.5, 0.7, 0.85, 0.95):
+        bk = jnp.asarray(rng.choice(np.arange(1, 8 * n, dtype=np.uint32), n,
+                                    replace=False))
+        pk = _keys(rng, n, 8 * n)
+        cap = int(n / rho)
+        f = jax.jit(lambda b, p: rjoin.hash_join(
+            b, p, 2 * n, "inner", capacity=cap))
+        sec = time_fn(f, bk, pk)
+        res = f(bk, pk)
+        out(row(f"fig9.join.inner.rho{rho}", sec, 2 * n,
+                extra=f"pairs={int(res.total)}"))
+
+    # --- join vs build:probe ratio (fixed rho 0.5) --------------------------
+    for ratio in (4, 2, 1):
+        nb, npb = n // ratio, n
+        bk = jnp.asarray(rng.choice(np.arange(1, 8 * nb, dtype=np.uint32), nb,
+                                    replace=False))
+        pk = _keys(rng, npb, 8 * nb)
+        f = jax.jit(lambda b, p: rjoin.hash_join(b, p, 2 * n, "inner"))
+        sec = time_fn(f, bk, pk)
+        res = f(bk, pk)
+        out(row(f"fig9.join.inner.bp1to{ratio}", sec, nb + npb,
+                extra=f"pairs={int(res.total)}"))
+
+    # --- join flavors at a fixed shape --------------------------------------
+    bk = jnp.asarray(rng.choice(np.arange(1, 8 * n, dtype=np.uint32), n,
+                                replace=False))
+    pk = _keys(rng, n, 8 * n)
+    for how in rjoin.HOW:
+        f = jax.jit(lambda b, p, how=how: rjoin.hash_join(b, p, 2 * n, how))
+        sec = time_fn(f, bk, pk)
+        out(row(f"fig9.join.{how}", sec, 2 * n))
+
+    # --- group-by vs group count --------------------------------------------
+    vals = _keys(rng, n, 1 << 16)
+    for g in (64, 1024, n // 4):
+        gk = jnp.asarray(rng.integers(1, g + 1, n).astype(np.uint32))
+        for agg in ("sum", "count", "mean"):
+            f = jax.jit(lambda k, v, agg=agg, g=g: rgroupby.aggregate(
+                k, v, rgroupby.capacity_for(g), agg))
+            sec = time_fn(f, gk, vals)
+            out(row(f"fig9.groupby.{agg}.g{g}", sec, n))
+
+    # --- distinct at duplication factor 8 ------------------------------------
+    dk = jnp.asarray(rng.integers(1, max(n // 8, 2), n).astype(np.uint32))
+    f = jax.jit(lambda k: rdistinct.distinct(k, n))
+    sec = time_fn(f, dk)
+    _, n_unique, _ = f(dk)
+    out(row("fig9.distinct.dup8", sec, n, extra=f"unique={int(n_unique)}"))
+
+
+if __name__ == "__main__":
+    run()

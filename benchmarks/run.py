@@ -4,31 +4,59 @@ Prints ``name,us_per_call,derived`` CSV (plus per-row extras).  Scale note:
 CPU container, batch 2^13-2^14 vs the paper's 2^28 on a GV100; the curves'
 *shapes* (who wins where, how throughput scales with density/multiplicity/
 shards) are the reproduction target — see EXPERIMENTS.md §Paper-claims.
+
+Usage::
+
+    python -m benchmarks.run [fig5|fig6|fig7|fig8|fig9] [--csv PATH]
+
+``--csv PATH`` mirrors every CSV row (header + data, comments excluded)
+into PATH so perf trajectory files (BENCH_*.csv) are produced
+reproducibly instead of by shell redirection.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (fig5_single_value, fig6_weak_scaling,
-                            fig7_multi_value, fig8_metagenomics)
+                            fig7_multi_value, fig8_metagenomics,
+                            fig9_relational)
     figures = {
         "fig5": fig5_single_value.run,
         "fig6": fig6_weak_scaling.run,
         "fig7": fig7_multi_value.run,
         "fig8": fig8_metagenomics.run,
+        "fig9": fig9_relational.run,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived,extra")
-    for name, fn in figures.items():
-        if only and name != only:
-            continue
-        t0 = time.time()
-        fn(print)
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", choices=sorted(figures),
+                    help="run a single figure")
+    ap.add_argument("--csv", metavar="PATH",
+                    help="also write the CSV rows to PATH")
+    args = ap.parse_args(argv)
+
+    sink = open(args.csv, "w") if args.csv else None
+
+    def out(line: str) -> None:
+        print(line, flush=True)
+        if sink and not line.startswith("#"):
+            sink.write(line + "\n")
+            sink.flush()
+
+    try:
+        out("name,us_per_call,derived,extra")
+        for name, fn in figures.items():
+            if args.only and name != args.only:
+                continue
+            t0 = time.time()
+            fn(out)
+            out(f"# {name} done in {time.time() - t0:.1f}s")
+    finally:
+        if sink:
+            sink.close()
 
 
 if __name__ == "__main__":

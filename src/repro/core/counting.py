@@ -29,7 +29,7 @@ def create(min_capacity: int, *, key_words: int = 1, window: int = DEFAULT_WINDO
 def insert(table: CountingHashTable, keys, mask=None,
            ) -> tuple[CountingHashTable, jax.Array]:
     """Count each key occurrence (saturating at 2^32 - 1)."""
-    def bump(old, key):
+    def bump(old, key, new):
         c = old[0]
         return jnp.where(c == _U32_MAX, c, c + jnp.uint32(1))[None]
     return sv.update_values(table, keys, bump, jnp.uint32(1), mask)

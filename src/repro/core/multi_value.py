@@ -157,13 +157,18 @@ def insert(table: MultiValueHashTable, keys, values, mask=None,
 # counting pass + gather pass (both vectorized across the query batch)
 # ---------------------------------------------------------------------------
 
-def count_values(table: MultiValueHashTable, keys) -> jax.Array:
-    """Number of stored values per queried key (the paper's counting pass)."""
+def count_values(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
+    """Number of stored values per queried key (the paper's counting pass).
+
+    ``mask`` drops query elements entirely (count 0, no probe walk) — used by
+    the relational probe path where padded exchange slots carry sentinels.
+    """
     keys = normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
     word = key_hash_word(keys)
     row0 = probing.initial_row(word, table.num_rows, table.seed)
     step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+    done0 = jnp.zeros((n,), bool) if mask is None else ~mask
 
     def cond(st):
         attempt, row, done, cnt = st
@@ -179,13 +184,13 @@ def count_values(table: MultiValueHashTable, keys) -> jax.Array:
         nrow = probing.advance_row(table.scheme, row, step, attempt, table.num_rows)
         return attempt + 1, jnp.where(done, row, nrow), done, cnt
 
-    st = (jnp.zeros((), _I), row0, jnp.zeros((n,), bool), jnp.zeros((n,), _I))
+    st = (jnp.zeros((), _I), row0, done0, jnp.zeros((n,), _I))
     _, _, _, cnt = jax.lax.while_loop(cond, body, st)
     return cnt
 
 
 def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
-                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                 mask=None) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Gather every value for each queried key.
 
     Returns (values, offsets, counts): ``values`` is (out_capacity, value_words)
@@ -197,12 +202,13 @@ def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
     """
     keys = normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
-    counts = count_values(table, keys)
+    counts = count_values(table, keys, mask)
     offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
     word = key_hash_word(keys)
     row0 = probing.initial_row(word, table.num_rows, table.seed)
     step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
     out = jnp.zeros((out_capacity, table.value_words), _U)
+    done0 = jnp.zeros((n,), bool) if mask is None else ~mask
 
     def cond(st):
         attempt, row, done, seen, out = st
@@ -227,7 +233,7 @@ def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
         nrow = probing.advance_row(table.scheme, row, step, attempt, table.num_rows)
         return attempt + 1, jnp.where(done, row, nrow), done, seen, out
 
-    st = (jnp.zeros((), _I), row0, jnp.zeros((n,), bool), jnp.zeros((n,), _I), out)
+    st = (jnp.zeros((), _I), row0, done0, jnp.zeros((n,), _I), out)
     _, _, _, _, out = jax.lax.while_loop(cond, body, st)
     if table.value_words == 1:
         return out[:, 0], offsets, counts

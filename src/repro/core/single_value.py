@@ -333,9 +333,16 @@ def for_all(table: SingleValueHashTable, fn: Callable) -> Any:
 
 
 def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
-                  init, mask=None) -> tuple[SingleValueHashTable, jax.Array]:
-    """Sequential read-modify-write upsert: present -> update_fn(old, key),
-    absent -> insert ``init``.  Substrate for CountingHashTable."""
+                  init, mask=None, values=None,
+                  ) -> tuple[SingleValueHashTable, jax.Array]:
+    """Sequential read-modify-write upsert: present -> update_fn(old, key, new),
+    absent -> insert ``init``.  Substrate for CountingHashTable and the
+    group-by aggregates in repro.relational.
+
+    ``values`` optionally carries a per-element payload into ``update_fn`` as
+    its third argument (the aggregation operand); when omitted the broadcast
+    ``init`` element is passed instead, so counters need no separate stream.
+    """
     keys = normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
     if mask is None:
@@ -344,17 +351,19 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
                                             (n,) if table.value_words == 1
                                             else (n, table.value_words)),
                            table.value_words, "init")
+    values = init if values is None else normalize_words(
+        values, table.value_words, "values")
     words = key_hash_word(keys)
     tstatic = (table.layout, table.key_words, table.num_rows, table.window,
                table.scheme, table.seed, table.max_probes)
 
     def step(carry, inp):
         store, count = carry
-        k, v0, word, m = inp
+        k, v0, vnew_in, word, m = inp
         mode, row, lane = _probe_for_insert(tstatic, store, k, word)
         old = layouts.value_windows(table.layout, store, row[None],
                                     table.key_words, table.value_words)[0, :, lane]
-        upd = update_fn(old, k)
+        upd = update_fn(old, k, vnew_in)
         case = jnp.where(~m, _I(0),
                          jnp.where(mode == 0, _I(1),
                                    jnp.where(mode == 1, _I(2), _I(0))))
@@ -374,5 +383,5 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
         return (store, count), status
 
     (store, count), status = jax.lax.scan(step, (table.store, table.count),
-                                          (keys, init, words, mask))
+                                          (keys, init, values, words, mask))
     return dataclasses.replace(table, store=store, count=count), status

@@ -116,3 +116,71 @@ def dedup_filter(table, tokens: jax.Array):
     fps = sequence_fingerprints(tokens)
     table, status = counting.insert(table, fps)
     return table, status == STATUS_INSERTED
+
+
+# ---------------------------------------------------------------------------
+# relational stage: dedup -> join -> aggregate, entirely on device
+# ---------------------------------------------------------------------------
+
+def build_watchlist(tracked_tokens):
+    """Precompute the deduplicated join build table for a token watchlist.
+
+    ``relational_stage`` accepts the result in place of the raw token
+    array — do this once per run so the per-batch hot path only probes.
+    """
+    from repro.relational import distinct, join
+    tracked = jnp.asarray(tracked_tokens, jnp.uint32)
+    _, fresh = distinct.first_occurrence(
+        distinct.create(max(2 * tracked.shape[0], 32)), tracked)
+    table, _ = join.build(tracked, mask=fresh)
+    return table
+
+
+def relational_stage(dedup_table, tokens: jax.Array, tracked_tokens,
+                     pair_capacity: int | None = None):
+    """Run a batch through a dedup -> join -> aggregate chain on device.
+
+    The paper's pitch is "data processing pipelines entirely on the GPU"
+    (§I); this stage is that pipeline, built from repro.relational:
+
+    1. **dedup** — drop sequences whose fingerprint is already in
+       ``dedup_table`` (cross-batch memory, same table ``dedup_filter``
+       uses);
+    2. **join** — inner hash join of the kept token stream against the
+       ``tracked_tokens`` watchlist (build side): every (tracked token,
+       stream position) hit becomes an output pair;
+    3. **aggregate** — group-by count of the hits per sequence, giving a
+       per-sequence tracked-token count without leaving the device.
+
+    Returns ``(dedup_table, keep_mask, hits_per_seq)`` where
+    ``hits_per_seq`` is (batch,) int32 (zero for dropped sequences).
+    ``pair_capacity`` bounds the join output (default: every stream
+    position matches once — safe because the build side is deduplicated,
+    so each position joins at most one watchlist row).
+
+    ``tracked_tokens`` may be a raw token array (build table constructed
+    in-line, convenient for one-offs) or a prebuilt ``build_watchlist``
+    table (probe-only per batch — use this on the training hot path).
+    """
+    from repro.core.multi_value import MultiValueHashTable
+    from repro.relational import groupby, join
+
+    batch, seq_len = tokens.shape
+    dedup_table, keep = dedup_filter(dedup_table, tokens)
+
+    flat = tokens.reshape(-1).astype(jnp.uint32)
+    stream_mask = jnp.broadcast_to(keep[:, None], tokens.shape).reshape(-1)
+    if pair_capacity is None:
+        pair_capacity = batch * seq_len
+    if not isinstance(tracked_tokens, MultiValueHashTable):
+        tracked_tokens = build_watchlist(tracked_tokens)
+    res = join.probe(tracked_tokens, flat, pair_capacity, "inner",
+                     mask=stream_mask)
+
+    seq_of_pair = jnp.where(res.valid, res.probe_idx // seq_len, 0)
+    table = groupby.create(groupby.capacity_for(batch))
+    table, _ = groupby.update(table, "count", seq_of_pair.astype(jnp.uint32),
+                              mask=res.valid)
+    hits, _ = groupby.lookup(table, "count",
+                             jnp.arange(batch, dtype=jnp.uint32))
+    return dedup_table, keep, hits.astype(jnp.int32)

@@ -1,0 +1,38 @@
+"""repro.relational — relational operators on WarpCore hash tables.
+
+The paper's headline comparison (§V, Fig. 5-7) benchmarks WarpCore
+against NVIDIA RAPIDS **cuDF** — a GPU *relational* engine whose join,
+group-by, and drop-duplicates operators are hash tables under the hood.
+This subsystem closes the loop: the same operators, built from the
+repo's table primitives, so the reproduction covers not just the
+microbenchmark but the workload class cuDF represents ("data processing
+pipelines entirely on the GPU", §I):
+
+====================  ==============================  =====================
+operator              cuDF analogue                   substrate
+====================  ==============================  =====================
+``join.hash_join``    ``cudf.merge`` (inner/left/     MultiValueHashTable +
+                      semi/anti hash join)            counting-pass sizing
+``groupby.aggregate`` ``cudf.groupby().agg`` (sum /   SingleValueHashTable
+                      min / max / count / mean)       RMW upsert
+``distinct.distinct`` ``cudf.drop_duplicates``        HashSet insert status
+``join.shard_join``   dask-cudf shuffle join          ownership exchange
+====================  ==============================  =====================
+
+Every operator is a pure, jittable pytree function and runs on both the
+``"jax"`` and ``"pallas"`` table backends (the build side of a join goes
+through the COPS Pallas kernel when the table says so).  The sharded
+join co-partitions both inputs by the ``hash_owner`` rule via
+``repro.distributed.sharding.ownership_exchange`` — one writer per
+shard, the paper's multi-GPU ownership partitioning (§IV-E) reused as a
+shuffle.
+"""
+
+from repro.relational import distinct, groupby, join
+from repro.relational.groupby import AGGS, aggregate
+from repro.relational.join import HOW, NO_MATCH, JoinResult, hash_join, shard_join
+
+__all__ = [
+    "AGGS", "HOW", "NO_MATCH", "JoinResult",
+    "aggregate", "distinct", "groupby", "hash_join", "join", "shard_join",
+]

@@ -1,0 +1,71 @@
+"""DISTINCT / dedup on a WarpCore HashSet.
+
+``add`` on the set reports per element whether its key claimed a fresh
+slot — the insert-status trick the data pipeline's ``dedup_filter``
+already uses (STATUS_INSERTED <=> first occurrence).  On top of that this
+module offers:
+
+- ``first_occurrence`` — streaming dedup mask against a running set (feed
+  batch after batch; duplicates across batches are caught);
+- ``distinct`` — one-shot compaction of the unique keys into a static
+  ``out_capacity`` output (counting-pass style: the mask's cumulative sum
+  is the output layout).
+
+Pure, jittable, pytree-functional, like the rest of repro.relational.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashset as hs
+from repro.core import single_value as sv
+from repro.core.common import DEFAULT_SEED, DEFAULT_WINDOW
+from repro.relational.util import capacity_for, compact  # compact re-exported
+
+_U = jnp.uint32
+_I = jnp.int32
+
+DistinctSet = hs.HashSet
+
+
+def create(min_capacity: int, *, key_words: int = 1,
+           window: int = DEFAULT_WINDOW, scheme: str = "cops",
+           layout: str = "soa", seed: int = DEFAULT_SEED,
+           max_probes: int | None = None, backend: str = "jax") -> DistinctSet:
+    return hs.create(min_capacity, key_words=key_words, window=window,
+                     scheme=scheme, layout=layout, seed=seed,
+                     max_probes=max_probes, backend=backend)
+
+
+def first_occurrence(dset: DistinctSet, keys, mask=None,
+                     ) -> tuple[DistinctSet, jax.Array]:
+    """Streaming dedup: True where the key was never seen before.
+
+    Duplicates within the batch and against every earlier batch fed into
+    ``dset`` are both marked False (the set is the cross-batch memory).
+    """
+    return hs.add(dset, keys, mask=mask)
+
+
+def distinct(keys, out_capacity: int, *, key_words: int = 1,
+             window: int = DEFAULT_WINDOW, backend: str = "jax",
+             load: float = 0.5, capacity: int | None = None, mask=None,
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-shot DISTINCT: (unique_keys, n_unique, first_occurrence_mask).
+
+    ``unique_keys`` is (out_capacity,) (or (out_capacity, key_words)) in
+    first-occurrence order; entries past ``n_unique`` are zero.
+    """
+    keys_n = sv.normalize_words(keys, key_words, "keys")
+    n = keys_n.shape[0]
+    if capacity is None:
+        capacity = capacity_for(n, load, window)
+    dset = create(capacity, key_words=key_words, window=window,
+                  backend=backend)
+    _, fresh = first_occurrence(dset, keys_n, mask=mask)
+    packed, n_unique = compact(keys_n, fresh, out_capacity)
+    if key_words == 1:
+        packed = packed[:, 0]
+    return packed, n_unique, fresh

@@ -1,0 +1,126 @@
+"""Group-by aggregation on WarpCore tables (sum / min / max / count / mean).
+
+A group-by is a CountingHashTable generalized to carry an aggregation
+operand: every group key owns one slot of a ``SingleValueHashTable`` with
+two value words — plane 0 the aggregate accumulator, plane 1 the group
+cardinality — and each input element performs a read-modify-write upsert
+via ``single_value.update_values`` (absent key -> seed the accumulator,
+present key -> fold the new operand in).  On TPU the scan's
+single-writer-per-shard serialization replaces the CUDA atomics a GPU
+group-by would use (DESIGN.md §2).
+
+All operators are pure pytree functions; ``aggregate`` is the one-shot
+jittable entry point.  ``mean`` finalizes as float32 accumulator/count;
+``sum`` wraps mod 2^32 like the u32 arithmetic it is built on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import single_value as sv
+from repro.relational.util import capacity_for  # re-export (public API)
+from repro.core.common import (
+    DEFAULT_SEED,
+    DEFAULT_WINDOW,
+    EMPTY_KEY,
+    TOMBSTONE_KEY,
+)
+
+_U = jnp.uint32
+_I = jnp.int32
+
+AGGS = ("sum", "min", "max", "count", "mean")
+
+GroupByTable = sv.SingleValueHashTable
+
+
+def create(min_capacity: int, *, key_words: int = 1,
+           window: int = DEFAULT_WINDOW, scheme: str = "cops",
+           layout: str = "soa", seed: int = DEFAULT_SEED,
+           max_probes: int | None = None, backend: str = "jax",
+           ) -> GroupByTable:
+    """An empty group-by table: value plane 0 = accumulator, plane 1 = count."""
+    return sv.create(min_capacity, key_words=key_words, value_words=2,
+                     window=window, scheme=scheme, layout=layout, seed=seed,
+                     max_probes=max_probes, backend=backend)
+
+
+def _fold_fn(agg: str):
+    if agg in ("sum", "mean"):
+        return lambda old, key, new: jnp.stack([old[0] + new[0],
+                                                old[1] + new[1]])
+    if agg == "min":
+        return lambda old, key, new: jnp.stack([jnp.minimum(old[0], new[0]),
+                                                old[1] + new[1]])
+    if agg == "max":
+        return lambda old, key, new: jnp.stack([jnp.maximum(old[0], new[0]),
+                                                old[1] + new[1]])
+    if agg == "count":
+        return lambda old, key, new: jnp.stack([old[0] + 1, old[1] + 1])
+    raise ValueError(f"agg={agg!r} not in {AGGS}")
+
+
+def update(table: GroupByTable, agg: str, keys, values=None, mask=None,
+           ) -> tuple[GroupByTable, jax.Array]:
+    """Fold a batch of (key, value) elements into the running aggregate.
+
+    ``values`` may be omitted for ``count``.  Returns (table, status) with
+    the usual STATUS_* codes per element.
+    """
+    fold = _fold_fn(agg)
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    if values is None:
+        if agg != "count":
+            raise ValueError(f"agg={agg!r} needs a values operand")
+        values = jnp.zeros((n,), _U)
+    v = sv.normalize_words(values, 1, "values")[:, 0]
+    ones = jnp.ones((n,), _U)
+    payload = jnp.stack([ones if agg == "count" else v, ones], axis=1)
+    return sv.update_values(table, keys, fold, payload, mask=mask)
+
+
+def lookup(table: GroupByTable, agg: str, keys) -> tuple[jax.Array, jax.Array]:
+    """Per-key aggregate -> (values, found).  ``mean`` returns float32."""
+    vals, found = sv.retrieve(table, keys)
+    return _finalize_planes(agg, vals[:, 0], vals[:, 1], found), found
+
+
+def _finalize_planes(agg: str, acc, cnt, live):
+    if agg == "mean":
+        out = acc.astype(jnp.float32) / jnp.maximum(cnt, 1).astype(jnp.float32)
+        return jnp.where(live, out, 0.0)
+    out = cnt if agg == "count" else acc
+    return jnp.where(live, out, _U(0))
+
+
+def finalize(table: GroupByTable, agg: str,
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Dump every live group -> (keys, aggregates, live_mask).
+
+    Arrays span the table's full capacity; ``live_mask`` marks real groups
+    (``int(table.count)`` of them).  Keys come back as (capacity,) for
+    1-word keys, else (capacity, key_words).
+    """
+    kp = table.key_planes().reshape(table.key_words, -1)        # (kw, c)
+    vp = table.value_planes().reshape(2, -1)                    # (2, c)
+    live = (kp[0] != EMPTY_KEY) & (kp[0] != TOMBSTONE_KEY)
+    out = _finalize_planes(agg, vp[0], vp[1], live)
+    keys = kp[0] if table.key_words == 1 else kp.T
+    keys = jnp.where(live if table.key_words == 1 else live[:, None],
+                     keys, _U(0))
+    return keys, out, live
+
+
+def aggregate(keys, values, min_capacity: int, agg: str, *,
+              key_words: int = 1, window: int = DEFAULT_WINDOW,
+              backend: str = "jax", mask=None,
+              ) -> tuple[jax.Array, jax.Array, jax.Array, GroupByTable]:
+    """One-shot group-by: returns (group_keys, aggregates, live, table)."""
+    table = create(min_capacity, key_words=key_words, window=window,
+                   backend=backend)
+    table, _ = update(table, agg, keys, values, mask=mask)
+    gk, out, live = finalize(table, agg)
+    return gk, out, live, table

@@ -1,0 +1,294 @@
+"""Hash joins on WarpCore tables (inner / left-outer / semi / anti).
+
+Classic two-phase GPU hash join, rendered on the repo's table primitives:
+
+- **build** — insert every build-side row as a ``(key, row_index)`` pair
+  into a ``MultiValueHashTable`` (duplicate build keys occupy distinct
+  slots, so N:M joins fall out of the multi-value semantics for free);
+- **probe** — the probe side runs the paper's counting-pass + prefix-sum
+  output-sizing pattern (§IV-B.4): ``count_values`` sizes the match list
+  per probe row, a cumulative sum lays out the output, and
+  ``retrieve_all`` gathers the matching build row indices into that
+  layout.  ``out_capacity`` is static (jit shape) exactly like the
+  paper's pre-sized output arrays.
+
+All operators are pure pytree functions: jit them, vmap them, or fuse
+them into larger computations.  Tombstoned (erased) build rows drop out
+of every flavor automatically — erased keys never match and never stop
+the probe walk.
+
+The sharded variant (``shard_join`` / ``join_partitioned``) co-partitions
+both sides by key ownership (``repro.distributed.sharding.
+ownership_exchange`` — the same ``hash_owner`` rule the distributed
+tables use), so every shard builds and probes only the keys it owns: one
+writer per shard, no CAS, no cross-shard result merge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import multi_value as mv
+from repro.core import single_value as sv
+from repro.core.common import (
+    DEFAULT_SEED,
+    DEFAULT_WINDOW,
+    register_struct,
+)
+from repro.relational.util import capacity_for, compact
+
+_U = jnp.uint32
+_I = jnp.int32
+
+HOW = ("inner", "left", "semi", "anti")
+
+#: build_idx sentinel for rows with no build-side match (left/semi/anti).
+#: A plain int, NOT a jnp scalar: modules may be first imported inside a
+#: jit trace (lazy imports in jitted pipeline code), where a module-level
+#: jnp constant would be created as a tracer and leak across traces.
+NO_MATCH = -1
+
+
+@register_struct
+@dataclasses.dataclass
+class JoinResult:
+    """Materialized join output (static ``out_capacity`` rows).
+
+    - ``build_idx`` (out_capacity,) i32 — build-side row index per output
+      row; ``NO_MATCH`` for unmatched left-outer rows and for semi/anti
+      (which emit probe rows only).
+    - ``probe_idx`` (out_capacity,) i32 — probe-side row index per output
+      row.
+    - ``valid`` (out_capacity,) bool — which output slots are live; rows
+      past ``total`` are padding.
+    - ``matched`` (n_probe,) bool — per *probe row*: had >= 1 build match.
+    - ``total`` () i32 — number of live output rows (may exceed
+      ``out_capacity``, in which case the overflowed tail was dropped —
+      size via ``count_matches`` exactly like the paper's counting pass).
+    """
+    build_idx: jax.Array
+    probe_idx: jax.Array
+    valid: jax.Array
+    matched: jax.Array
+    total: jax.Array
+
+
+def build(build_keys, *, capacity: int | None = None, key_words: int = 1,
+          window: int = DEFAULT_WINDOW, scheme: str = "cops",
+          layout: str = "soa", seed: int = DEFAULT_SEED,
+          max_probes: int | None = None, backend: str = "jax",
+          load: float = 0.5, mask=None, row_ids=None,
+          ) -> tuple[mv.MultiValueHashTable, jax.Array]:
+    """Build phase: key -> build row index in a MultiValueHashTable.
+
+    ``row_ids`` overrides the stored row indices (the sharded join stores
+    *global* row ids).  Returns (table, insert_status).
+    """
+    keys = sv.normalize_words(build_keys, key_words, "build_keys")
+    n = keys.shape[0]
+    if capacity is None:
+        capacity = capacity_for(n, load, window)
+    table = mv.create(capacity, key_words=key_words, value_words=1,
+                      window=window, scheme=scheme, layout=layout, seed=seed,
+                      max_probes=max_probes, backend=backend)
+    if row_ids is None:
+        row_ids = jnp.arange(n, dtype=_U)
+    return mv.insert(table, keys, row_ids.astype(_U), mask=mask)
+
+
+def count_matches(table: mv.MultiValueHashTable, probe_keys, how: str = "inner",
+                  mask=None) -> jax.Array:
+    """Output rows the probe side will emit — the paper's counting pass.
+
+    Sum this (host-side or via a first jitted call) to size
+    ``out_capacity`` for ``probe``.
+    """
+    keys = sv.normalize_words(probe_keys, table.key_words, "probe_keys")
+    counts = mv.count_values(table, keys, mask=mask)
+    live = jnp.ones(counts.shape, bool) if mask is None else mask
+    if how == "inner":
+        return counts
+    if how == "left":
+        return jnp.where(live, jnp.maximum(counts, 1), 0)
+    if how == "semi":
+        return ((counts > 0) & live).astype(_I)
+    if how == "anti":
+        return ((counts == 0) & live).astype(_I)
+    raise ValueError(f"how={how!r} not in {HOW}")
+
+
+def _segment_of(offsets: jax.Array, out_capacity: int) -> jax.Array:
+    """Probe row owning each output slot: row i owns [offsets[i], offsets[i+1])."""
+    return jnp.searchsorted(offsets[1:], jnp.arange(out_capacity, dtype=_I),
+                            side="right").astype(_I)
+
+
+def probe(table: mv.MultiValueHashTable, probe_keys, out_capacity: int,
+          how: str = "inner", mask=None) -> JoinResult:
+    """Probe phase: emit (build_idx, probe_idx) pairs per ``how`` flavor.
+
+    ``out_capacity`` is static; size it with ``count_matches`` (or an upper
+    bound such as n_probe * max_multiplicity).  ``mask`` drops probe rows
+    entirely (they match nothing and emit nothing, in every flavor).
+    """
+    if how not in HOW:
+        raise ValueError(f"how={how!r} not in {HOW}")
+    keys = sv.normalize_words(probe_keys, table.key_words, "probe_keys")
+    n = keys.shape[0]
+    live = jnp.ones((n,), bool) if mask is None else mask
+
+    if how in ("semi", "anti"):
+        counts = mv.count_values(table, keys, mask=mask)
+        matched = (counts > 0) & live
+        sel = matched if how == "semi" else ((counts == 0) & live)
+        probe_idx, total = compact(jnp.arange(n, dtype=_I), sel,
+                                   out_capacity, fill=NO_MATCH)
+        valid = jnp.arange(out_capacity, dtype=_I) < jnp.minimum(
+            total, out_capacity)
+        build_idx = jnp.full((out_capacity,), NO_MATCH, _I)
+        return JoinResult(build_idx=build_idx, probe_idx=probe_idx,
+                          valid=valid, matched=matched, total=total)
+
+    # inner / left: gather matching build row ids in counting-pass layout
+    vals, offsets, counts = mv.retrieve_all(table, keys, out_capacity,
+                                            mask=mask)
+    matched = (counts > 0) & live
+    if how == "inner":
+        total = offsets[n]
+        seg = _segment_of(offsets, out_capacity)
+        valid = jnp.arange(out_capacity, dtype=_I) < jnp.minimum(
+            total, out_capacity)
+        build_idx = jnp.where(valid, vals.astype(_I), NO_MATCH)
+        probe_idx = jnp.where(valid, seg, NO_MATCH)
+        return JoinResult(build_idx=build_idx, probe_idx=probe_idx,
+                          valid=valid, matched=matched, total=total)
+
+    # left outer: unmatched live probe rows emit one NO_MATCH row
+    counts_lo = jnp.where(live, jnp.maximum(counts, 1), 0)
+    offs_lo = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts_lo)])
+    total = offs_lo[n]
+    seg = _segment_of(offs_lo, out_capacity)
+    rank = jnp.arange(out_capacity, dtype=_I) - offs_lo[seg]
+    has_match = matched[seg] if n else jnp.zeros((out_capacity,), bool)
+    inner_pos = (offsets[seg] if n else jnp.zeros((out_capacity,), _I)) + rank
+    gathered = vals[jnp.clip(inner_pos, 0, max(out_capacity - 1, 0))].astype(_I)
+    valid = jnp.arange(out_capacity, dtype=_I) < jnp.minimum(total,
+                                                             out_capacity)
+    build_idx = jnp.where(valid & has_match, gathered, NO_MATCH)
+    probe_idx = jnp.where(valid, seg, NO_MATCH)
+    return JoinResult(build_idx=build_idx, probe_idx=probe_idx, valid=valid,
+                      matched=matched, total=total)
+
+
+def hash_join(build_keys, probe_keys, out_capacity: int, how: str = "inner",
+              *, key_words: int = 1, window: int = DEFAULT_WINDOW,
+              scheme: str = "cops", backend: str = "jax", load: float = 0.5,
+              capacity: int | None = None, build_mask=None, probe_mask=None,
+              ) -> JoinResult:
+    """One-shot build + probe.  Pure and jittable (out_capacity/how static)."""
+    table, _ = build(build_keys, capacity=capacity, key_words=key_words,
+                     window=window, scheme=scheme, backend=backend, load=load,
+                     mask=build_mask)
+    return probe(table, probe_keys, out_capacity, how=how, mask=probe_mask)
+
+
+def gather_payload(result: JoinResult, build_values=None, probe_values=None,
+                   fill=0):
+    """Materialize joined payload columns from a JoinResult.
+
+    Returns (build_cols, probe_cols) — each ``None`` if the corresponding
+    values were not given; NO_MATCH / padding rows get ``fill``.
+    """
+    def take(values, idx):
+        values = jnp.asarray(values)
+        ok = (idx >= 0) & result.valid
+        got = values[jnp.clip(idx, 0, values.shape[0] - 1)]
+        return jnp.where(ok.reshape((-1,) + (1,) * (got.ndim - 1)), got, fill)
+
+    bcols = None if build_values is None else take(build_values,
+                                                   result.build_idx)
+    pcols = None if probe_values is None else take(probe_values,
+                                                   result.probe_idx)
+    return bcols, pcols
+
+
+# ---------------------------------------------------------------------------
+# sharded join: ownership co-partitioning, one writer per shard
+# ---------------------------------------------------------------------------
+
+def join_partitioned(build_keys, probe_keys, axis: str, out_capacity: int,
+                     how: str = "inner", *, key_words: int = 1,
+                     window: int = DEFAULT_WINDOW, backend: str = "jax",
+                     load: float = 0.5, slack: float = 2.0):
+    """Per-shard body of the sharded hash join (call inside shard_map).
+
+    Both sides are routed to key owners via
+    ``repro.distributed.sharding.ownership_exchange``; each shard builds a
+    local table over the build keys it owns and probes it with the probe
+    keys it owns.  Emitted indices are *global* row ids.  Returns
+    ``(result, overflow)`` where ``result.matched`` is realigned with this
+    shard's original probe slice and ``overflow`` counts exchange drops
+    (size ``slack`` so it is zero, as with the distributed tables).
+    """
+    from repro.distributed import sharding as shd
+    idx = jax.lax.axis_index(axis)
+    bk = sv.normalize_words(build_keys, key_words, "build_keys")
+    pk = sv.normalize_words(probe_keys, key_words, "probe_keys")
+    n_b, n_p = bk.shape[0], pk.shape[0]
+    bgid = (idx * n_b + jnp.arange(n_b)).astype(_U)
+    pgid = (idx * n_p + jnp.arange(n_p)).astype(_I)
+
+    rbk, rbid, rbm, bplan = shd.ownership_exchange(
+        bk, bgid, axis, key_words=key_words, slack=slack)
+    capacity = capacity_for(rbk.shape[0], load, window)
+    table, _ = build(rbk, capacity=capacity, key_words=key_words,
+                     window=window, backend=backend, mask=rbm, row_ids=rbid)
+
+    rpk, rpid, rpm, pplan = shd.ownership_exchange(
+        pk, pgid, axis, key_words=key_words, slack=slack)
+    res = probe(table, rpk, out_capacity, how=how, mask=rpm)
+    # local recv-slot probe indices -> global probe row ids
+    ok = res.probe_idx >= 0
+    pglob = rpid[jnp.clip(res.probe_idx, 0, rpid.shape[0] - 1)]
+    probe_idx = jnp.where(ok, pglob, NO_MATCH)
+    # matched travels the reverse exchange back to the sending shard
+    matched = shd.ownership_return(pplan, res.matched, axis, fill=False)
+    res = dataclasses.replace(res, probe_idx=probe_idx, matched=matched)
+    return res, bplan.overflow + pplan.overflow
+
+
+def shard_join(mesh: Mesh, axis: str, build_keys, probe_keys,
+               out_capacity_per_shard: int, how: str = "inner", *,
+               key_words: int = 1, window: int = DEFAULT_WINDOW,
+               backend: str = "jax", load: float = 0.5, slack: float = 2.0):
+    """Host-level sharded hash join over mesh ``axis``.
+
+    ``build_keys`` / ``probe_keys`` are sharded over ``axis`` (leading dim
+    divisible by the axis size).  Returns a dict with the concatenated
+    per-shard outputs:
+
+    - ``build_idx`` / ``probe_idx`` / ``valid``: (P * out_capacity_per_shard,)
+      global-row-id join pairs (order is per-owner-shard, not input order);
+    - ``matched``: (n_probe,) aligned with the input probe batch;
+    - ``total``: (P,) live rows per shard;
+    - ``overflow``: (P,) exchange drops (zero when slack suffices).
+    """
+    from repro.distributed.sharding import shard_map_compat
+
+    def body(bk, pk):
+        res, ov = join_partitioned(
+            bk, pk, axis, out_capacity_per_shard, how, key_words=key_words,
+            window=window, backend=backend, load=load, slack=slack)
+        return (res.build_idx, res.probe_idx, res.valid, res.matched,
+                res.total[None], ov[None])
+
+    f = shard_map_compat(body, mesh, in_specs=(P(axis), P(axis)),
+                         out_specs=(P(axis),) * 6)
+    build_idx, probe_idx, valid, matched, total, overflow = f(
+        jnp.asarray(build_keys), jnp.asarray(probe_keys))
+    return {"build_idx": build_idx, "probe_idx": probe_idx, "valid": valid,
+            "matched": matched, "total": total, "overflow": overflow}

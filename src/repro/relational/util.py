@@ -1,0 +1,34 @@
+"""Shared sizing/packing helpers for the relational operators."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import DEFAULT_WINDOW
+
+_I = jnp.int32
+
+
+def capacity_for(num_keys: int, load: float = 0.5,
+                 window: int = DEFAULT_WINDOW) -> int:
+    """min_capacity sizing: ``num_keys`` distinct entries at target load."""
+    return max(int(math.ceil(max(num_keys, 1) / load)), window)
+
+
+def compact(values, sel, out_capacity: int, fill=0,
+            ) -> tuple[jax.Array, jax.Array]:
+    """Pack ``values[sel]`` into a static-size output (prefix-sum layout).
+
+    Returns (packed, n_selected); slots past ``n_selected`` hold ``fill``,
+    selections past ``out_capacity`` are dropped.
+    """
+    values = jnp.asarray(values)
+    pos = jnp.cumsum(sel.astype(_I)) - 1
+    slot = jnp.where(sel & (pos < out_capacity), pos, out_capacity)
+    out_shape = (out_capacity,) + values.shape[1:]
+    out = jnp.full(out_shape, fill, values.dtype).at[slot].set(values,
+                                                               mode="drop")
+    return out, jnp.sum(sel, dtype=_I)
