@@ -21,10 +21,10 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core import distributed as dist
 from repro.core import single_value as sv
+from repro.core.compat import axis_size_compat, make_mesh_compat, shard_map_compat
 
 def bench(num_shards, per_shard):
-    mesh = jax.make_mesh((num_shards,), ('x',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((num_shards,), ('x',))
     table = dist.create_sharded(mesh, 'x', per_shard * 2, window=32)
     n = num_shards * per_shard
     keys = jnp.asarray(np.random.default_rng(0).permutation(
@@ -35,7 +35,7 @@ def bench(num_shards, per_shard):
 
     # phase 1+2: partition (multisplit) + all_to_all exchange only
     def route(k, v):
-        num = jax.lax.axis_size('x')
+        num = axis_size_compat('x')
         k2 = sv.normalize_words(k, 1, 'k')
         owners = dist.owner_of(k2, num, 1)
         cap = int(np.ceil(k.shape[0] / num * 2.0))
@@ -44,9 +44,9 @@ def bench(num_shards, per_shard):
         vb = dist.scatter_to_buffer(plan, sv.normalize_words(v, 1, 'v'), num)
         return dist.exchange(kb, 'x'), dist.exchange(vb, 'x')
 
-    froute = jax.jit(jax.shard_map(route, mesh=mesh, in_specs=(P('x'), P('x')),
-                                   out_specs=(P('x'), P('x')),
-                                   check_vma=False))
+    froute = jax.jit(shard_map_compat(route, mesh,
+                                      in_specs=(P('x'), P('x')),
+                                      out_specs=(P('x'), P('x'))))
     fall = jax.jit(lambda t, k, v: dist.shard_insert(mesh, 'x', t, k, v))
 
     def t(f, *a):

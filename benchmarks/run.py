@@ -7,17 +7,37 @@ shards) are the reproduction target — see EXPERIMENTS.md §Paper-claims.
 
 Usage::
 
-    python -m benchmarks.run [fig5|fig6|fig7|fig8|fig9] [--csv PATH]
+    python -m benchmarks.run [fig5|fig6|fig7|fig8|fig9] [--csv PATH] [--json PATH]
 
 ``--csv PATH`` mirrors every CSV row (header + data, comments excluded)
-into PATH so perf trajectory files (BENCH_*.csv) are produced
-reproducibly instead of by shell redirection.
+into PATH; ``--json PATH`` writes the parsed rows — name, us_per_call and
+ops/s — as a perf-trajectory JSON (BENCH_<pr>.json files), so the
+trajectory is machine-readable instead of empty shell redirections.
+Set ``REPRO_BENCH_SMOKE=1`` for the small smoke config (CI).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+
+def parse_row(line: str):
+    """CSV row -> {name, us_per_call, ops_per_s, extra?} (None if header/na)."""
+    parts = line.split(",")
+    if len(parts) < 3 or parts[0] == "name":
+        return None
+    try:
+        us = float(parts[1])
+    except ValueError:
+        return None
+    entry = {"name": parts[0], "us_per_call": us}
+    if parts[2].endswith("Mops/s"):
+        entry["ops_per_s"] = float(parts[2][:-len("Mops/s")]) * 1e6
+    if len(parts) > 3 and parts[3]:
+        entry["extra"] = ",".join(parts[3:])
+    return entry
 
 
 def main(argv=None) -> None:
@@ -36,27 +56,39 @@ def main(argv=None) -> None:
                     help="run a single figure")
     ap.add_argument("--csv", metavar="PATH",
                     help="also write the CSV rows to PATH")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write parsed rows (ops/s per figure) to PATH")
     args = ap.parse_args(argv)
 
     sink = open(args.csv, "w") if args.csv else None
+    records: dict[str, list] = {}
+    current = [None]
 
     def out(line: str) -> None:
         print(line, flush=True)
         if sink and not line.startswith("#"):
             sink.write(line + "\n")
             sink.flush()
+        entry = parse_row(line)
+        if entry is not None and current[0] is not None:
+            records.setdefault(current[0], []).append(entry)
 
     try:
         out("name,us_per_call,derived,extra")
         for name, fn in figures.items():
             if args.only and name != args.only:
                 continue
+            current[0] = name
             t0 = time.time()
             fn(out)
             out(f"# {name} done in {time.time() - t0:.1f}s")
     finally:
         if sink:
             sink.close()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {sum(map(len, records.values()))} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,8 @@ from repro.core import distributed as dist                    # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh_compat
+    mesh = make_mesh_compat((8,), ("x",))
     print(f"mesh: {mesh.devices.size} devices")
 
     # distributed mode: each key owned by exactly one shard

@@ -25,8 +25,11 @@ from repro.core.bloom import BloomFilter
 from repro.core import (
     bloom,
     bucket_list,
+    bulk,
+    compat,
     counting,
     distributed,
+    exchange,
     hashing,
     hashset,
     layouts,
@@ -42,6 +45,7 @@ __all__ = [
     "table_geometry",
     "SingleValueHashTable", "MultiValueHashTable", "BucketListHashTable",
     "HashSet", "CountingHashTable", "BloomFilter",
-    "bloom", "bucket_list", "counting", "distributed", "hashing", "hashset",
-    "layouts", "multi_value", "probing", "single_value",
+    "bloom", "bucket_list", "bulk", "compat", "counting", "distributed",
+    "exchange", "hashing", "hashset", "layouts", "multi_value", "probing",
+    "single_value",
 ]

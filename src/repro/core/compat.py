@@ -1,0 +1,77 @@
+"""jax-version compatibility shims (the container pins jax 0.4.37).
+
+The seed was written against newer jax (``jax.shard_map`` with
+``check_vma=``, ``jax.lax.axis_size``, ``jax.make_mesh(axis_types=...)``,
+``jax.set_mesh``).  These helpers bridge every band back to 0.4.x, where
+shard_map lives in ``jax.experimental.shard_map`` with ``check_rep=`` /
+``auto=``, axis sizes come from a constant-folded ``psum(1, axis)``, mesh
+axis types do not exist, and the Mesh object itself is the ambient-mesh
+context manager.
+
+Lives in ``repro.core`` (not ``repro.distributed``) so the core table
+modules can use the shims without a core -> distributed import cycle;
+``repro.distributed.sharding`` re-exports them for existing callers.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+
+def axis_size_compat(axis) -> int:
+    """Static mesh-axis size inside shard_map, across jax versions
+    (``lax.axis_size`` is recent; ``psum(1, axis)`` constant-folds)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` across jax versions.
+
+    Newest jax exposes ``jax.shard_map(..., check_vma=)``; the 0.6.x band
+    has ``jax.shard_map(..., check_rep=)``; older releases only have
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  Replication
+    checking is disabled either way (table pytrees carry per-shard state on
+    purpose).  ``axis_names`` restricts manual axes (new jax); on old jax
+    it maps to the complementary ``auto=`` set.
+    """
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    kwargs = {("check_vma" if "check_vma" in params else "check_rep"): False}
+    if axis_names is not None:
+        if "axis_names" in params:
+            kwargs["axis_names"] = frozenset(axis_names)
+        else:
+            kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def make_mesh_compat(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the version has them.
+
+    ``jax.sharding.AxisType`` / the ``axis_types=`` kwarg only exist on
+    newer jax; 0.4.x meshes behave like Auto everywhere already.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh_compat(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` is recent; on 0.4.x the Mesh object itself is the
+    context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -26,13 +26,28 @@ def create(min_capacity: int, *, key_words: int = 1, window: int = DEFAULT_WINDO
                      max_probes=max_probes, backend=backend)
 
 
+def _sat_add(a, b):
+    """Saturating u32 add — associative, so duplicate occurrences can be
+    pre-merged by the bulk engine before the single table RMW."""
+    s = a + b
+    return jnp.where(s < a, _U32_MAX, s)
+
+
 def insert(table: CountingHashTable, keys, mask=None,
            ) -> tuple[CountingHashTable, jax.Array]:
-    """Count each key occurrence (saturating at 2^32 - 1)."""
+    """Count each key occurrence (saturating at 2^32 - 1).
+
+    The per-element operand is 1; the fold is a saturating add.  The
+    ``("add",)`` combiner spec lets ``update_values`` take the vectorized
+    bulk path (duplicates in the batch collapse to one RMW of the summed
+    count); plain add is exact here — n operands of 1 cannot wrap u32 —
+    and the saturation lives in the fold, where combined and stepwise
+    increments agree.
+    """
     def bump(old, key, new):
-        c = old[0]
-        return jnp.where(c == _U32_MAX, c, c + jnp.uint32(1))[None]
-    return sv.update_values(table, keys, bump, jnp.uint32(1), mask)
+        return _sat_add(old, new)
+    return sv.update_values(table, keys, bump, jnp.uint32(1), mask,
+                            combine=("add",))
 
 
 def counts(table: CountingHashTable, keys) -> jax.Array:

@@ -14,104 +14,41 @@ Two modes, exactly as in the paper:
 - **independent** — one autonomous table per device; inserts apply locally,
   queries are answered by every shard (caller merges).
 
-The exchange is *padded*: each (src, dst) segment gets ``cap`` slots
-(MoE-capacity-factor style), because fixed shapes are what TPU collectives
-want.  Overflow is counted and returned — callers size ``slack`` so it is
-zero (tests assert this), mirroring how MoE capacity factors are tuned.
-A uniform hash (``hash_owner``) keeps segment sizes balanced, so modest
-slack suffices; ``jax.lax.ragged_all_to_all`` is a drop-in upgrade on
-runtimes that support it (see ``exchange_ragged``).
+The owner-routing block itself (owner_of -> make_plan -> scatter ->
+all_to_all) lives in ``repro.core.exchange`` — one implementation shared
+with the relational operators via ``repro.distributed.sharding`` — and the
+ops here are thin compositions of ``ownership_exchange`` /
+``ownership_return`` with the local table ops.
 
-All functions here run *inside* ``jax.shard_map`` (they use axis names);
-the ``shard_*`` wrappers at the bottom build the shard_map for you.
+All functions here run *inside* shard_map (they use axis names); the
+``shard_*`` wrappers at the bottom build it via
+``repro.core.compat.shard_map_compat``, which bridges jax versions.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import hashing
 from repro.core import single_value as sv
-from repro.core.common import EMPTY_KEY
+from repro.core.compat import axis_size_compat, shard_map_compat
+from repro.core.exchange import (
+    ExchangePlan,
+    exchange,
+    gather_from_buffer,
+    make_plan,
+    multisplit,
+    owner_of,
+    ownership_exchange,
+    ownership_return,
+    scatter_to_buffer,
+)
 
 _U = jnp.uint32
 _I = jnp.int32
-
-
-# ---------------------------------------------------------------------------
-# multisplit (paper [16] — TPU rendering: stable sort by owner)
-# ---------------------------------------------------------------------------
-
-def multisplit(owners: jax.Array, num_parts: int, *arrays: jax.Array):
-    """Partition arrays by ``owners`` (values in [0, num_parts)).
-
-    Returns (sorted_owners, counts, order, *sorted_arrays) where ``order`` is
-    the stable permutation (argsort by owner).
-    """
-    order = jnp.argsort(owners, stable=True)
-    sorted_owners = owners[order]
-    counts = jnp.bincount(owners, length=num_parts)
-    return sorted_owners, counts, order, *[a[order] for a in arrays]
-
-
-def owner_of(keys: jax.Array, num_owners: int, key_words: int) -> jax.Array:
-    """Shard owner per key (independent mixer from probing — DESIGN.md §2)."""
-    word = sv.key_hash_word(sv.normalize_words(keys, key_words, "keys"))
-    return hashing.hash_owner(word, num_owners)
-
-
-# ---------------------------------------------------------------------------
-# padded send-buffer construction + all-to-all exchange
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class ExchangePlan:
-    """Bookkeeping to route a batch to owners and the results back."""
-    slot: jax.Array        # (n,) destination slot in the send buffer (or OOR)
-    valid_send: jax.Array  # (P*cap,) which send slots are populated
-    overflow: jax.Array    # scalar: elements dropped because a segment overflowed
-    cap: int
-
-
-def make_plan(owners: jax.Array, num_parts: int, cap: int) -> ExchangePlan:
-    n = owners.shape[0]
-    counts = jnp.bincount(owners, length=num_parts)
-    start = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])[:-1]
-    # stable rank of each element within its segment
-    order = jnp.argsort(owners, stable=True)
-    rank_sorted = jnp.arange(n) - start[owners[order]]
-    rank = jnp.zeros((n,), rank_sorted.dtype).at[order].set(rank_sorted)
-    ok = rank < cap
-    slot = jnp.where(ok, owners.astype(_I) * cap + rank.astype(_I), num_parts * cap)
-    valid = jnp.zeros((num_parts * cap,), bool).at[slot].set(True, mode="drop")
-    return ExchangePlan(slot=slot, valid_send=valid,
-                        overflow=jnp.sum(~ok, dtype=_I), cap=cap)
-
-
-def scatter_to_buffer(plan: ExchangePlan, x: jax.Array, num_parts: int,
-                      fill=0) -> jax.Array:
-    buf_shape = (num_parts * plan.cap,) + x.shape[1:]
-    buf = jnp.full(buf_shape, fill, dtype=x.dtype)
-    return buf.at[plan.slot].set(x, mode="drop")
-
-
-def gather_from_buffer(plan: ExchangePlan, buf: jax.Array, fill=0) -> jax.Array:
-    slot = jnp.minimum(plan.slot, buf.shape[0] - 1)
-    out = buf[slot]
-    ok = plan.slot < buf.shape[0]
-    return jnp.where(ok.reshape((-1,) + (1,) * (out.ndim - 1)), out, fill)
-
-
-def exchange(buf: jax.Array, axis: str) -> jax.Array:
-    """All-to-all a (P*cap, ...) buffer over mesh axis ``axis``."""
-    return jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=True)
 
 
 # ---------------------------------------------------------------------------
@@ -125,19 +62,11 @@ def insert_distributed(table: sv.SingleValueHashTable, keys, values, axis: str,
     Returns (table, status_of_received, overflow).  ``insert_fn`` lets the
     multi-value / counting variants reuse the same routing.
     """
-    num_parts = jax.lax.axis_size(axis)
-    keys = sv.normalize_words(keys, table.key_words, "keys")
     values = sv.normalize_words(values, table.value_words, "values")
-    n = keys.shape[0]
-    cap = int(np.ceil(n / num_parts * slack))
-    owners = owner_of(keys, num_parts, table.key_words)
-    plan = make_plan(owners, num_parts, cap)
-    kbuf = scatter_to_buffer(plan, keys, num_parts, fill=EMPTY_KEY)
-    vbuf = scatter_to_buffer(plan, values, num_parts)
-    mbuf = scatter_to_buffer(plan, jnp.ones((n,), bool), num_parts, fill=False)
-    rk, rv, rm = exchange(kbuf, axis), exchange(vbuf, axis), exchange(mbuf, axis)
+    recv_keys, recv_values, recv_mask, plan = ownership_exchange(
+        keys, values, axis, key_words=table.key_words, slack=slack)
     fn = insert_fn or sv.insert
-    table, status = fn(table, rk, rv, mask=rm)
+    table, status = fn(table, recv_keys, recv_values, mask=recv_mask)
     return table, status, plan.overflow
 
 
@@ -148,21 +77,13 @@ def retrieve_distributed(table: sv.SingleValueHashTable, keys, axis: str,
     Returns (values, found, overflow) aligned with the local query batch.
     No merge step is needed — single-owner keys (paper §IV-E).
     """
-    num_parts = jax.lax.axis_size(axis)
-    keys = sv.normalize_words(keys, table.key_words, "keys")
-    n = keys.shape[0]
-    cap = int(np.ceil(n / num_parts * slack))
-    owners = owner_of(keys, num_parts, table.key_words)
-    plan = make_plan(owners, num_parts, cap)
-    kbuf = scatter_to_buffer(plan, keys, num_parts, fill=EMPTY_KEY)
-    rk = exchange(kbuf, axis)
-    vals, found = sv.retrieve(table, rk)
+    recv_keys, _, _, plan = ownership_exchange(
+        keys, (), axis, key_words=table.key_words, slack=slack)
+    vals, found = sv.retrieve(table, recv_keys)
     vals = sv.normalize_words(vals, table.value_words, "values")
     # answers travel the reverse path: all_to_all is its own inverse here
-    vback = exchange(vals, axis)
-    fback = exchange(found, axis)
-    out_vals = gather_from_buffer(plan, vback)
-    out_found = gather_from_buffer(plan, fback, fill=False)
+    out_vals = ownership_return(plan, vals, axis)
+    out_found = ownership_return(plan, found, axis, fill=False)
     if table.value_words == 1:
         out_vals = out_vals[:, 0]
     return out_vals, out_found, plan.overflow
@@ -170,18 +91,11 @@ def retrieve_distributed(table: sv.SingleValueHashTable, keys, axis: str,
 
 def erase_distributed(table: sv.SingleValueHashTable, keys, axis: str,
                       slack: float = 2.0):
-    num_parts = jax.lax.axis_size(axis)
-    keys = sv.normalize_words(keys, table.key_words, "keys")
-    n = keys.shape[0]
-    cap = int(np.ceil(n / num_parts * slack))
-    owners = owner_of(keys, num_parts, table.key_words)
-    plan = make_plan(owners, num_parts, cap)
-    kbuf = scatter_to_buffer(plan, keys, num_parts, fill=EMPTY_KEY)
-    mbuf = scatter_to_buffer(plan, jnp.ones((n,), bool), num_parts, fill=False)
-    rk, rm = exchange(kbuf, axis), exchange(mbuf, axis)
-    table, erased = sv.erase(table, rk, mask=rm)
-    eback = exchange(erased, axis)
-    return table, gather_from_buffer(plan, eback, fill=False), plan.overflow
+    recv_keys, _, recv_mask, plan = ownership_exchange(
+        keys, (), axis, key_words=table.key_words, slack=slack)
+    table, erased = sv.erase(table, recv_keys, mask=recv_mask)
+    return table, ownership_return(plan, erased, axis, fill=False), \
+        plan.overflow
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +121,7 @@ def retrieve_independent(table: sv.SingleValueHashTable, keys, axis: str):
     vals = sv.normalize_words(vals, table.value_words, "values")
     # merge: each shard contributes only where it found the key; lowest shard wins
     idx = jax.lax.axis_index(axis)
-    rank = jnp.where(found, idx, jax.lax.axis_size(axis))
+    rank = jnp.where(found, idx, axis_size_compat(axis))
     best = jax.lax.pmin(rank, axis)
     mine = rank == best
     contrib = jnp.where(mine[:, None] & found[:, None], vals, 0)
@@ -260,8 +174,8 @@ def shard_insert(mesh: Mesh, axis: str, table, keys, values, slack: float = 2.0,
         t_loc, s, ov = insert_distributed(_local(t), k, v, axis, slack, insert_fn)
         return _relift(t_loc), s, ov[None]
 
-    f = jax.shard_map(body, mesh=mesh, in_specs=(spec, P(axis), P(axis)),
-                      out_specs=(spec, P(axis), P(axis)), check_vma=False)
+    f = shard_map_compat(body, mesh, in_specs=(spec, P(axis), P(axis)),
+                         out_specs=(spec, P(axis), P(axis)))
     return f(table, keys, values)
 
 
@@ -272,6 +186,6 @@ def shard_retrieve(mesh: Mesh, axis: str, table, keys, slack: float = 2.0):
         v, fnd, ov = retrieve_distributed(_local(t), k, axis, slack)
         return v, fnd, ov[None]
 
-    f = jax.shard_map(body, mesh=mesh, in_specs=(spec, P(axis)),
-                      out_specs=(P(axis), P(axis), P(axis)), check_vma=False)
+    f = shard_map_compat(body, mesh, in_specs=(spec, P(axis)),
+                         out_specs=(P(axis), P(axis), P(axis)))
     return f(table, keys)

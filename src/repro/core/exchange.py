@@ -1,0 +1,147 @@
+"""Owner-routing core: multisplit -> padded buffers -> all-to-all.
+
+Every key is owned by exactly one shard (``hash_owner``); a batch headed
+for the table must be routed to its owners and results routed back.  The
+seed inlined this block (owner_of -> make_plan -> scatter -> all_to_all)
+three times in ``repro.core.distributed`` and once more per relational
+operator; this module is the single home.  ``repro.distributed.sharding``
+re-exports ``ownership_exchange`` / ``ownership_return`` for relational
+callers, and ``repro.core.distributed`` builds its insert/retrieve/erase
+routing on them — without ``repro.core`` ever importing
+``repro.distributed``.
+
+The exchange is *padded*: each (src, dst) segment gets ``cap`` slots
+(MoE-capacity-factor style), because fixed shapes are what TPU collectives
+want.  Overflow is counted and returned — callers size ``slack`` so it is
+zero (tests assert this).  A uniform hash keeps segment sizes balanced;
+``jax.lax.ragged_all_to_all`` is a drop-in upgrade on runtimes that
+support it.
+
+All functions here run *inside* shard_map (they use axis names); build the
+shard_map with ``repro.core.compat.shard_map_compat``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.common import EMPTY_KEY
+from repro.core.compat import axis_size_compat
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# multisplit (paper [16] — TPU rendering: stable sort by owner)
+# ---------------------------------------------------------------------------
+
+def multisplit(owners: jax.Array, num_parts: int, *arrays: jax.Array):
+    """Partition arrays by ``owners`` (values in [0, num_parts)).
+
+    Returns (sorted_owners, counts, order, *sorted_arrays) where ``order``
+    is the stable permutation (argsort by owner).
+    """
+    order = jnp.argsort(owners, stable=True)
+    sorted_owners = owners[order]
+    counts = jnp.bincount(owners, length=num_parts)
+    return sorted_owners, counts, order, *[a[order] for a in arrays]
+
+
+def owner_of(keys: jax.Array, num_owners: int, key_words: int) -> jax.Array:
+    """Shard owner per key (independent mixer from probing — DESIGN.md §2)."""
+    from repro.core import single_value as sv
+    word = sv.key_hash_word(sv.normalize_words(keys, key_words, "keys"))
+    return hashing.hash_owner(word, num_owners)
+
+
+# ---------------------------------------------------------------------------
+# padded send-buffer construction + all-to-all exchange
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExchangePlan:
+    """Bookkeeping to route a batch to owners and the results back."""
+    slot: jax.Array        # (n,) destination slot in the send buffer (or OOR)
+    valid_send: jax.Array  # (P*cap,) which send slots are populated
+    overflow: jax.Array    # scalar: elements dropped because a segment overflowed
+    cap: int
+
+
+def make_plan(owners: jax.Array, num_parts: int, cap: int) -> ExchangePlan:
+    n = owners.shape[0]
+    counts = jnp.bincount(owners, length=num_parts)
+    start = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])[:-1]
+    # stable rank of each element within its segment
+    order = jnp.argsort(owners, stable=True)
+    rank_sorted = jnp.arange(n) - start[owners[order]]
+    rank = jnp.zeros((n,), rank_sorted.dtype).at[order].set(rank_sorted)
+    ok = rank < cap
+    slot = jnp.where(ok, owners.astype(_I) * cap + rank.astype(_I), num_parts * cap)
+    valid = jnp.zeros((num_parts * cap,), bool).at[slot].set(True, mode="drop")
+    return ExchangePlan(slot=slot, valid_send=valid,
+                        overflow=jnp.sum(~ok, dtype=_I), cap=cap)
+
+
+def scatter_to_buffer(plan: ExchangePlan, x: jax.Array, num_parts: int,
+                      fill=0) -> jax.Array:
+    buf_shape = (num_parts * plan.cap,) + x.shape[1:]
+    buf = jnp.full(buf_shape, fill, dtype=x.dtype)
+    return buf.at[plan.slot].set(x, mode="drop")
+
+
+def gather_from_buffer(plan: ExchangePlan, buf: jax.Array, fill=0) -> jax.Array:
+    slot = jnp.minimum(plan.slot, buf.shape[0] - 1)
+    out = buf[slot]
+    ok = plan.slot < buf.shape[0]
+    return jnp.where(ok.reshape((-1,) + (1,) * (out.ndim - 1)), out, fill)
+
+
+def exchange(buf: jax.Array, axis: str) -> jax.Array:
+    """All-to-all a (P*cap, ...) buffer over mesh axis ``axis``."""
+    return jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# the consolidated owner-routing block
+# ---------------------------------------------------------------------------
+
+def ownership_exchange(keys, payload, axis: str, *, key_words: int = 1,
+                       slack: float = 2.0, fill_key=None):
+    """Route (key, payload) batches to their owner shard over mesh ``axis``.
+
+    Call inside shard_map.  Returns ``(recv_keys, recv_payload, recv_mask,
+    plan)`` where the received arrays hold the elements this shard owns
+    (padded segments; ``recv_mask`` marks live slots).  ``payload`` is a
+    pytree of per-element arrays routed alongside the keys.  ``plan`` (an
+    ``ExchangePlan``) carries the overflow count and lets per-received-slot
+    results travel the reverse path (all_to_all is its own inverse here)
+    via ``ownership_return``.  One shard is the sole writer for every key
+    it receives — ownership partitioning as in DESIGN.md §2 / paper §IV-E.
+    """
+    from repro.core import single_value as sv
+    num = axis_size_compat(axis)
+    keys = sv.normalize_words(keys, key_words, "keys")
+    n = keys.shape[0]
+    cap = int(np.ceil(n / num * slack))
+    owners = owner_of(keys, num, key_words)
+    plan = make_plan(owners, num, cap)
+    kbuf = scatter_to_buffer(
+        plan, keys, num, fill=EMPTY_KEY if fill_key is None else fill_key)
+    recv_keys = exchange(kbuf, axis)
+    recv_payload = jax.tree.map(
+        lambda x: exchange(scatter_to_buffer(plan, x, num), axis), payload)
+    recv_mask = exchange(plan.valid_send, axis)
+    return recv_keys, recv_payload, recv_mask, plan
+
+
+def ownership_return(plan: ExchangePlan, per_recv_slot, axis: str, fill=0):
+    """Route a per-received-slot result back to the shard that sent it,
+    realigned with that shard's original batch order."""
+    back = exchange(per_recv_slot, axis)
+    return gather_from_buffer(plan, back, fill=fill)

@@ -86,7 +86,8 @@ def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
 
 
 # ---------------------------------------------------------------------------
-# insertion — sequential over the batch (single writer per shard)
+# insertion — bulk scatter-arbitration engine by default (repro.core.bulk);
+# backend="scan" keeps the sequential single-writer reference
 # ---------------------------------------------------------------------------
 
 def _probe_for_slot(tstatic, store, key_vec, word):
@@ -119,10 +120,26 @@ def _probe_for_slot(tstatic, store, key_vec, word):
 
 def insert(table: MultiValueHashTable, keys, values, mask=None,
            ) -> tuple[MultiValueHashTable, jax.Array]:
-    """Append (key, value) pairs; duplicates of a key occupy distinct slots."""
+    """Append (key, value) pairs; duplicates of a key occupy distinct slots.
+
+    Dispatches on ``table.backend`` like ``single_value.insert``: the
+    default ``"jax"`` path is the vectorized bulk engine (duplicates of a
+    key contend for slots via scatter-min arbitration and resolve over
+    rounds in batch order), ``"scan"`` the sequential reference, and
+    ``"pallas"`` the COPS kernel — all bit-identical.
+    """
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
         return cops_ops.insert_multi(table, keys, values, mask)
+    if table.backend != "scan":
+        from repro.core import bulk
+        return bulk.insert_multi(table, keys, values, mask)
+    return insert_scan(table, keys, values, mask)
+
+
+def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
+                ) -> tuple[MultiValueHashTable, jax.Array]:
+    """Sequential-scan reference append (the bulk engine's parity oracle)."""
     keys = normalize_words(keys, table.key_words, "keys")
     values = normalize_words(values, table.value_words, "values")
     n = keys.shape[0]

@@ -17,10 +17,23 @@ Semantics (paper §IV-B.3–5, adapted):
   live key at-or-before the first EMPTY window of its probe sequence, which
   is what lets retrieval stop at the first EMPTY (paper §IV-B.4).
 - ``erase`` writes TOMBSTONEs (§IV-B.5).
-- Insertion is *sequential over the batch* (lax.scan): on TPU the batch has
-  exactly one writer per table shard (ownership partitioning, DESIGN.md §2),
-  so serialization — not CAS — is the correctness mechanism.  Retrieval has
-  no write hazards and is fully vectorized across the batch.
+- Insertion has two equivalent renderings, selected by ``backend``:
+
+  * ``"jax"`` (default) — the **vectorized bulk-build engine**
+    (``repro.core.bulk``): intra-batch duplicates are pre-merged with
+    sort + segment-combine, then whole-batch rounds of probe →
+    scatter-min slot arbitration → batched scatter resolve the batch in
+    ~max_rounds vectorized sweeps instead of n sequential probe walks.
+  * ``"scan"`` — the sequential reference: ``lax.scan`` over the batch,
+    one probe walk per key.  Within a shard there is exactly one writer
+    (ownership partitioning, DESIGN.md §2), so serial order — not CAS —
+    is the correctness mechanism.  The bulk engine reproduces this order
+    exactly (bit-identical state and statuses); the scan path is kept as
+    the oracle for parity tests and as the fallback for RMW folds with no
+    associative combiner.
+  * ``"pallas"`` — the COPS Pallas kernel (``repro.kernels.cops``).
+
+  Retrieval has no write hazards and is fully vectorized on every backend.
 
 Key/value widths are in 32-bit words (1 => u32, 2 => u64 as hi/lo planes).
 """
@@ -188,6 +201,19 @@ def contains(table: SingleValueHashTable, keys) -> jax.Array:
     return _locate(table, keys)[2]
 
 
+def _distinct_count(keys: jax.Array, sel: jax.Array) -> jax.Array:
+    """Number of distinct key vectors among ``keys[sel]`` (O(n log n) sort)."""
+    n = sel.shape[0]
+    kw = keys.shape[1]
+    ops = [(~sel).astype(_U)] + [keys[:, w] for w in range(kw)]
+    out = jax.lax.sort(tuple(ops), num_keys=kw + 1)
+    flag, skeys = out[0], jnp.stack(out[1:], axis=1)
+    same = jnp.concatenate([jnp.zeros((1,), bool),
+                            jnp.all(skeys[1:] == skeys[:-1], axis=1)
+                            & (flag[1:] == 0) & (flag[:-1] == 0)])
+    return jnp.sum((flag == 0) & ~same, dtype=_I)
+
+
 def erase(table: SingleValueHashTable, keys, mask=None) -> tuple[SingleValueHashTable, jax.Array]:
     """Tombstone matching slots (paper §IV-B.5). Returns (table, erased_mask)."""
     keys = normalize_words(keys, table.key_words, "keys")
@@ -198,15 +224,16 @@ def erase(table: SingleValueHashTable, keys, mask=None) -> tuple[SingleValueHash
     srows = jnp.where(found, rows, _U(table.num_rows))
     store = layouts.scatter_key_word(table.layout, table.store, srows, lanes,
                                      TOMBSTONE_KEY, table.key_words, table.num_rows)
-    # Recount live slots (duplicates in the batch hit one slot; a delta would
-    # double-count them).  One O(capacity) reduce, vector-friendly.
-    kp = layouts.key_planes(table.layout, store, table.key_words)[0]
-    count = jnp.sum((kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY), dtype=_I)
+    # Live-count delta = distinct erased keys (duplicates in the batch hit
+    # one slot, so a first-occurrence dedup — not a per-element sum, and not
+    # the old O(capacity) full-table recount — gives the exact decrement.
+    count = table.count - _distinct_count(keys, found)
     return dataclasses.replace(table, store=store, count=count), found
 
 
 # ---------------------------------------------------------------------------
-# insertion — sequential over the batch (single-writer-per-shard; DESIGN.md §2)
+# insertion — bulk scatter-arbitration engine by default (repro.core.bulk);
+# backend="scan" keeps the sequential-over-the-batch reference
 # ---------------------------------------------------------------------------
 
 def _probe_for_insert(table_static, store, key_vec, word):
@@ -261,14 +288,28 @@ def insert(table: SingleValueHashTable, keys, values, mask=None,
            ) -> tuple[SingleValueHashTable, jax.Array]:
     """Batch upsert. Returns (table, status (n,) i32) — see STATUS_* codes.
 
-    Sequential lax.scan over the batch: within a shard there is exactly one
-    writer, so serial order — not CAS — provides the paper's linearizability
-    (DESIGN.md §2).  Duplicate keys inside one batch behave as consecutive
-    upserts (second occurrence reports STATUS_UPDATED).
+    Duplicate keys inside one batch behave as consecutive upserts (second
+    occurrence reports STATUS_UPDATED).  Dispatches on ``table.backend``:
+    ``"jax"`` runs the vectorized bulk engine, ``"scan"`` the sequential
+    reference, ``"pallas"`` the COPS kernel — all bit-identical.
     """
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
         return cops_ops.insert(table, keys, values, mask)
+    if table.backend != "scan":
+        from repro.core import bulk
+        return bulk.insert_single(table, keys, values, mask)
+    return insert_scan(table, keys, values, mask)
+
+
+def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
+                ) -> tuple[SingleValueHashTable, jax.Array]:
+    """Sequential-scan reference upsert: one probe walk per batch element.
+
+    Within a shard there is exactly one writer, so serial order — not CAS —
+    provides the paper's linearizability (DESIGN.md §2).  Kept as the parity
+    oracle for the bulk engine and the Pallas kernel.
+    """
     keys = normalize_words(keys, table.key_words, "keys")
     values = normalize_words(values, table.value_words, "values")
     n = keys.shape[0]
@@ -333,15 +374,22 @@ def for_all(table: SingleValueHashTable, fn: Callable) -> Any:
 
 
 def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
-                  init, mask=None, values=None,
+                  init, mask=None, values=None, combine: Callable | None = None,
                   ) -> tuple[SingleValueHashTable, jax.Array]:
-    """Sequential read-modify-write upsert: present -> update_fn(old, key, new),
+    """Read-modify-write upsert: present -> update_fn(old, key, new),
     absent -> insert ``init``.  Substrate for CountingHashTable and the
     group-by aggregates in repro.relational.
 
     ``values`` optionally carries a per-element payload into ``update_fn`` as
     its third argument (the aggregation operand); when omitted the broadcast
     ``init`` element is passed instead, so counters need no separate stream.
+
+    ``combine(a, b)`` is the associative pre-aggregation of the operand
+    stream (``update_fn(update_fn(x,k,a),k,b) == update_fn(x,k,combine(a,b))``
+    — e.g. ``+`` for sums, ``minimum`` for min).  When given (and the
+    backend is not ``"scan"``), duplicates are pre-merged and the vectorized
+    bulk engine runs; without it the fold is not reorderable and the
+    sequential scan reference is used.
     """
     keys = normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
@@ -353,6 +401,10 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
                            table.value_words, "init")
     values = init if values is None else normalize_words(
         values, table.value_words, "values")
+    if combine is not None and table.backend != "scan":
+        from repro.core import bulk
+        return bulk.update_single(table, keys, update_fn, combine, init,
+                                  values, mask)
     words = key_hash_word(keys)
     tstatic = (table.layout, table.key_words, table.num_rows, table.window,
                table.scheme, table.seed, table.max_probes)

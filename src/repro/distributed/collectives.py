@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import axis_size_compat, shard_map_compat
 from repro.training import compression as comp
 
 
@@ -36,7 +37,7 @@ def make_grad_sync(mesh: Mesh, cfg: comp.CompressionConfig,
     def sync(grads):
         def body(g):
             if cfg.kind == "none":
-                n = jax.lax.axis_size("pod")
+                n = axis_size_compat("pod")
                 return jax.tree.map(lambda x: jax.lax.psum(x, "pod") / n, g)
             st = {"residual": jax.tree.map(
                 lambda x: jnp.zeros(x.shape, jnp.float32), g)}
@@ -45,9 +46,9 @@ def make_grad_sync(mesh: Mesh, cfg: comp.CompressionConfig,
 
         spec = jax.tree.map(lambda _: P(), grads)
         # manual over 'pod' only; data/model stay GSPMD-automatic
-        return jax.shard_map(body, mesh=mesh, in_specs=(spec,),
-                             out_specs=spec, check_vma=False,
-                             axis_names=frozenset({"pod"}))(grads)
+        return shard_map_compat(body, mesh, in_specs=(spec,),
+                                out_specs=spec,
+                                axis_names=frozenset({"pod"}))(grads)
 
     return sync
 
@@ -56,7 +57,7 @@ def reduce_scatter_grads(grads, axis: str):
     """Per-parameter reduce-scatter along dim0 (ZeRO-style sharded grads) —
     callable inside shard_map when manual gradient placement is wanted."""
     def rs(g):
-        if g.ndim >= 1 and g.shape[0] % jax.lax.axis_size(axis) == 0:
+        if g.ndim >= 1 and g.shape[0] % axis_size_compat(axis) == 0:
             return jax.lax.psum_scatter(g, axis, scatter_dimension=0,
                                         tiled=True)
         return jax.lax.psum(g, axis)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import axis_size_compat, shard_map_compat
+
 
 def stage_params(params_blocks, num_stages: int):
     """Split stacked (L, ...) block params into (S, L/S, ...) stage stacks."""
@@ -44,7 +46,7 @@ def pipelined_apply(block_fn: Callable, staged_params, x_microbatches,
 
     Returns (M, mb, S, D) outputs valid on the LAST stage.
     """
-    num_stages = jax.lax.axis_size(axis)
+    num_stages = axis_size_compat(axis)
     stage = jax.lax.axis_index(axis)
     local_params = jax.tree.map(lambda p: p[0], staged_params)   # (L/S, ...)
     m = x_microbatches.shape[0]
@@ -106,12 +108,10 @@ def make_pipelined_loss(block_fn: Callable, loss_head: Callable,
             staged = stage_params(params["blocks"],
                                   int(mesh.shape[axis]))
             spec_blocks = jax.tree.map(lambda _: P(axis), staged)
-            outs = jax.shard_map(
-                functools.partial(inner),
-                mesh=mesh,
+            outs = shard_map_compat(
+                functools.partial(inner), mesh,
                 in_specs=(spec_blocks, P(), P()),
                 out_specs=P(),
-                check_vma=False,
             )(staged, mbs, 0)
             h_out = outs.reshape(h.shape)
             return loss_head(params, h_out, batch)

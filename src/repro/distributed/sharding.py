@@ -184,36 +184,8 @@ def scalar_sharding(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
-def axis_size_compat(axis) -> int:
-    """Static mesh-axis size inside shard_map, across jax versions
-    (``lax.axis_size`` is recent; ``psum(1, axis)`` constant-folds)."""
-    if hasattr(jax.lax, "axis_size"):
-        return jax.lax.axis_size(axis)
-    return jax.lax.psum(1, axis)
-
-
-def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
-    """``jax.shard_map`` across jax versions.
-
-    Newest jax exposes ``jax.shard_map(..., check_vma=)``; the 0.6.x band
-    has ``jax.shard_map(..., check_rep=)``; older releases only have
-    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  Replication
-    checking is disabled either way (table pytrees carry per-shard state on
-    purpose).
-    """
-    import inspect
-    if hasattr(jax, "shard_map"):
-        sm = jax.shard_map
-    else:
-        from jax.experimental.shard_map import shard_map as sm
-    flag = ("check_vma" if "check_vma" in inspect.signature(sm).parameters
-            else "check_rep")
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              **{flag: False})
-
-
 # ---------------------------------------------------------------------------
-# ownership partitioning for table batches (relational operators)
+# jax-version compat + ownership partitioning (re-exported from repro.core)
 # ---------------------------------------------------------------------------
 #
 # The hash-table side of the system (repro.core.distributed) assigns every
@@ -221,45 +193,20 @@ def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
 # (repro.relational.join) reuse that rule to co-partition *both* sides of a
 # join: route build and probe batches to the key's owner, and each shard
 # joins only the keys it owns — one writer per shard, no CAS, no result
-# merging.  These helpers wrap the padded all-to-all exchange machinery so
-# relational code never touches buffers directly.
+# merging.  The routing block itself (owner_of -> make_plan -> scatter ->
+# all_to_all) lives in ``repro.core.exchange`` — one implementation for the
+# distributed tables AND the relational shuffle — and the version shims in
+# ``repro.core.compat``; both are re-exported here for existing callers
+# (distributed code may import core, never the reverse).
 
-def ownership_exchange(keys, payload, axis: str, *, key_words: int = 1,
-                       slack: float = 2.0, fill_key=None):
-    """Route (key, payload) batches to their owner shard over mesh ``axis``.
-
-    Call inside ``jax.shard_map``.  Returns ``(recv_keys, recv_payload,
-    recv_mask, plan)`` where the received arrays hold the elements this
-    shard owns (padded segments; ``recv_mask`` marks live slots).  ``payload``
-    is a pytree of per-element arrays routed alongside the keys.  ``plan``
-    (an ``ExchangePlan``) carries the overflow count and lets per-received-
-    slot results travel the reverse path (all_to_all is its own inverse
-    here) via ``gather_from_buffer``.  One shard is the sole writer for
-    every key it receives — ownership partitioning as in DESIGN.md §2 /
-    paper §IV-E.
-    """
-    from repro.core import distributed as cdist
-    from repro.core import single_value as sv
-    from repro.core.common import EMPTY_KEY
-    num = axis_size_compat(axis)
-    keys = sv.normalize_words(keys, key_words, "keys")
-    n = keys.shape[0]
-    cap = int(np.ceil(n / num * slack))
-    owners = cdist.owner_of(keys, num, key_words)
-    plan = cdist.make_plan(owners, num, cap)
-    kbuf = cdist.scatter_to_buffer(
-        plan, keys, num, fill=EMPTY_KEY if fill_key is None else fill_key)
-    recv_keys = cdist.exchange(kbuf, axis)
-    recv_payload = jax.tree.map(
-        lambda x: cdist.exchange(cdist.scatter_to_buffer(plan, x, num), axis),
-        payload)
-    recv_mask = cdist.exchange(plan.valid_send, axis)
-    return recv_keys, recv_payload, recv_mask, plan
-
-
-def ownership_return(plan, per_recv_slot, axis: str, fill=0):
-    """Route a per-received-slot result back to the shard that sent it,
-    realigned with that shard's original batch order."""
-    from repro.core import distributed as cdist
-    back = cdist.exchange(per_recv_slot, axis)
-    return cdist.gather_from_buffer(plan, back, fill=fill)
+from repro.core.compat import (  # noqa: E402,F401  (re-exports)
+    axis_size_compat,
+    make_mesh_compat,
+    set_mesh_compat,
+    shard_map_compat,
+)
+from repro.core.exchange import (  # noqa: E402,F401  (re-exports)
+    ExchangePlan,
+    ownership_exchange,
+    ownership_return,
+)

@@ -178,6 +178,138 @@ def insert_call(table_keys, table_vals, keys2d, vals2d, mask2d, *, seed,
 
 
 # ---------------------------------------------------------------------------
+# fused RMW tile — group-by aggregation without leaving VMEM
+# ---------------------------------------------------------------------------
+#
+# The group-by table is a SingleValueHashTable with two value planes
+# (plane 0 = aggregate accumulator, plane 1 = group cardinality).  The scan
+# reference folds one element at a time through update_values; this kernel
+# fuses probe + fold + store per key while the whole table shard stays
+# resident in VMEM — the ROADMAP "group-by on the Pallas kernel path" item.
+# ``agg`` is a static switch: sum/mean accumulate, min/max clamp, count
+# ignores the operand; claims seed the accumulator exactly like the scan
+# path's init write.
+
+AGG_KINDS = ("sum", "mean", "min", "max", "count")
+
+
+def _update_kernel(keys_ref, vals_ref, mask_ref, tk_in, tv0_in, tv1_in,
+                   tk_ref, tv0_ref, tv1_ref, status_ref,
+                   *, num_rows, window, seed, max_probes, scheme, agg):
+    del tk_in, tv0_in, tv1_in
+    tile = keys_ref.shape[1]
+
+    def one_key(j, _):
+        k = keys_ref[0, j]
+        v = vals_ref[0, j]
+        m = mask_ref[0, j] != 0
+        row0, step = _probe_setup(k, num_rows, seed, scheme)
+
+        def cond(st):
+            attempt, row, done, *_ = st
+            return jnp.logical_and(attempt < max_probes, ~done)
+
+        def body(st):
+            (attempt, row, done, crow, clane, have_cand, mrow, mlane,
+             matched) = st
+            win = tk_ref[pl.ds(row.astype(_I), 1), :][0]
+            empty = win == EMPTY_KEY
+            cand = empty | (win == TOMBSTONE_KEY)
+            c_lane = _win_vote(cand)
+            has_empty = jnp.any(empty)
+            m_lane = _win_vote(win == k)
+            hit = m_lane < window
+            new_cand = jnp.logical_and(~have_cand, c_lane < window)
+            crow = jnp.where(new_cand, row, crow)
+            clane = jnp.where(new_cand, c_lane, clane)
+            have_cand = have_cand | (c_lane < window)
+            mrow = jnp.where(hit, row, mrow)
+            mlane = jnp.where(hit, m_lane, mlane)
+            matched = matched | hit
+            done = hit | has_empty
+            nrow = (row + step) % _U(num_rows)
+            return (attempt + 1, jnp.where(done, row, nrow), done, crow,
+                    clane, have_cand, mrow, mlane, matched)
+
+        zu = jnp.zeros((), _U)
+        zi = jnp.zeros((), _I)
+        st = (zi, row0, jnp.zeros((), bool), zu, zi, jnp.zeros((), bool),
+              zu, zi, jnp.zeros((), bool))
+        (_, _, _, crow, clane, have_cand, mrow, mlane, matched) = \
+            jax.lax.while_loop(cond, body, st)
+
+        do_update = m & matched
+        do_claim = m & ~matched & have_cand
+        row = jnp.where(matched, mrow, crow).astype(_I)
+        lane = jnp.where(matched, mlane, clane)
+        lanes = jax.lax.broadcasted_iota(_I, (1, window), 1)[0]
+        sel = lanes == lane
+
+        operand = _U(1) if agg == "count" else v
+
+        @pl.when(do_update | do_claim)
+        def _():
+            acc_row = tv0_ref[pl.ds(row, 1), :][0]
+            cnt_row = tv1_ref[pl.ds(row, 1), :][0]
+            acc = jnp.max(jnp.where(sel, acc_row, _U(0)))
+            if agg in ("sum", "mean", "count"):
+                folded = acc + operand
+            elif agg == "min":
+                folded = jnp.minimum(acc, operand)
+            else:  # max
+                folded = jnp.maximum(acc, operand)
+            cnt = jnp.max(jnp.where(sel, cnt_row, _U(0)))
+            new_acc = jnp.where(do_update, folded, operand)
+            new_cnt = jnp.where(do_update, cnt + _U(1), _U(1))
+            tv0_ref[pl.ds(row, 1), :] = jnp.where(sel, new_acc, acc_row)[None, :]
+            tv1_ref[pl.ds(row, 1), :] = jnp.where(sel, new_cnt, cnt_row)[None, :]
+
+        @pl.when(do_claim)
+        def _():
+            krow = tk_ref[pl.ds(row, 1), :][0]
+            tk_ref[pl.ds(row, 1), :] = jnp.where(sel, k, krow)[None, :]
+
+        status_ref[0, j] = jnp.where(
+            ~m, _I(STATUS_MASKED),
+            jnp.where(do_update, _I(STATUS_UPDATED),
+                      jnp.where(do_claim, _I(STATUS_INSERTED),
+                                _I(STATUS_FULL))))
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def update_call(tk, tv0, tv1, keys2d, vals2d, mask2d, *, seed, max_probes,
+                scheme="cops", agg="sum", interpret=True):
+    """Fused group-by RMW: keys2d/vals2d/mask2d (G, T).
+
+    Returns (tk, tv0, tv1, status2d) with tv0/tv1 the aggregate/count
+    planes updated in place (input/output aliased).
+    """
+    num_rows, window = tk.shape
+    g, tile = keys2d.shape
+    kern = functools.partial(
+        _update_kernel, num_rows=num_rows, window=window, seed=seed,
+        max_probes=max_probes, scheme=scheme, agg=agg)
+    full = pl.BlockSpec((num_rows, window), lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, row_tile, full, full, full],
+        out_specs=[full, full, full, row_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((num_rows, window), _U),
+            jax.ShapeDtypeStruct((g, tile), _I),
+        ],
+        input_output_aliases={3: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )(keys2d, vals2d, mask2d, tk, tv0, tv1)
+
+
+# ---------------------------------------------------------------------------
 # 64-bit keys: two u32 planes (hi, lo) — DESIGN.md §2.  The window match is
 # two vector compares ANDed; sentinels live on plane 0.  This is the kernel
 # path for the paper's "beyond 32-bit" claim (WarpDrive was 32-bit-only).

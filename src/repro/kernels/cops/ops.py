@@ -113,6 +113,54 @@ def insert_multi(table, keys, values, mask=None):
     return _insert_dispatch(table, keys, values, mask, multi_value=True)
 
 
+def _groupby_ok(table) -> bool:
+    return (table.layout == "soa" and table.key_words == 1
+            and table.value_words == 2 and table.scheme in ("cops", "linear"))
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme",
+                                             "tile", "agg", "interpret"))
+def _update_jit(tk, tv0, tv1, keys, vals, mask, *, seed, max_probes, scheme,
+                tile, agg, interpret):
+    k2, n = _tile_batch(keys, tile, EMPTY_KEY)
+    v2, _ = _tile_batch(vals, tile, 0)
+    m2, _ = _tile_batch(mask.astype(_I), tile, 0)
+    tk, tv0, tv1, st2 = K.update_call(tk, tv0, tv1, k2, v2, m2, seed=seed,
+                                      max_probes=max_probes, scheme=scheme,
+                                      agg=agg, interpret=interpret)
+    return tk, tv0, tv1, st2.reshape(-1)[:n]
+
+
+def update_groupby(table, agg, keys, payload, mask=None):
+    """Fused group-by RMW via the Pallas tile (probe + fold + store while
+    the table shard stays in VMEM) — the kernel path that replaces the
+    update_values scan fallback for aggregates.  ``payload`` is the
+    (n, 2) [operand, weight] plane pair built by relational.groupby.
+    Wider configurations fall back to the vectorized jax path.
+    """
+    from repro.core import single_value as sv
+    from repro.relational import groupby as gb
+    if not _groupby_ok(table):
+        jx = dataclasses.replace(table, backend="jax")
+        t, status = sv.update_values(jx, keys, gb._fold_fn(agg), payload,
+                                     mask=mask, combine=gb._combine_fn(agg))
+        return dataclasses.replace(t, backend=table.backend), status
+    keys = sv.normalize_words(keys, 1, "keys")[:, 0]
+    vals = payload[:, 0]
+    if mask is None:
+        mask = jnp.ones(keys.shape, bool)
+    tile = min(K.DEFAULT_TILE, keys.shape[0])
+    tk = table.store["keys"][0]
+    tv0, tv1 = table.store["values"][0], table.store["values"][1]
+    tk, tv0, tv1, status = _update_jit(
+        tk, tv0, tv1, keys, vals, mask, seed=table.seed,
+        max_probes=table.max_probes, scheme=table.scheme, tile=tile, agg=agg,
+        interpret=should_interpret())
+    store = {"keys": tk[None], "values": jnp.stack([tv0, tv1])}
+    count = table.count + jnp.sum(status == STATUS_INSERTED, dtype=_I)
+    return dataclasses.replace(table, store=store, count=count), status
+
+
 @functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme", "tile", "interpret"))
 def _lookup_jit(tk, tv, keys, *, seed, max_probes, scheme, tile, interpret):
     k2, n = _tile_batch(keys, tile, EMPTY_KEY)

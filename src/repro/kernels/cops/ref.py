@@ -1,11 +1,13 @@
 """Pure-jnp oracle for the COPS kernel.
 
 The reference semantics are the sequential-scan implementation in
-``repro.core.single_value`` / ``repro.core.multi_value`` (backend="jax") —
-a completely separate code path from the Pallas kernel (lax.scan over the
-batch + gather-based windows vs. in-kernel fori_loop over VMEM refs).
-Tests assert the kernel's table state and outputs match this oracle
-bit-for-bit across shape/width/load-factor sweeps.
+``repro.core.single_value`` / ``repro.core.multi_value`` (backend="scan")
+— a completely separate code path from the Pallas kernel (lax.scan over
+the batch + gather-based windows vs. in-kernel fori_loop over VMEM refs)
+and from the default vectorized bulk engine (repro.core.bulk), which is
+itself parity-tested against the same scan.  Tests assert the kernel's
+table state and outputs match this oracle bit-for-bit across
+shape/width/load-factor sweeps.
 """
 
 from __future__ import annotations
@@ -17,7 +19,7 @@ from repro.core import single_value as sv
 
 
 def _as_jax(table):
-    return dataclasses.replace(table, backend="jax")
+    return dataclasses.replace(table, backend="scan")
 
 
 def insert(table, keys, values, mask=None):

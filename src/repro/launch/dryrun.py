@@ -27,6 +27,8 @@ import time
 import traceback
 
 import jax
+
+from repro.core.compat import set_mesh_compat
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -146,7 +148,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     batch_shape = zoo.input_specs(cfg, cell)
     batch_sh = sharding.batch_shardings(batch_shape, mesh)
 
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         if cell.kind == "train":
             ocfg = _opt_config(arch, overrides)
             accum = o.get("accum_steps", TRAIN_SETTINGS[arch].accum_steps)

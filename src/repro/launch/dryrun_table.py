@@ -20,6 +20,8 @@ import sys
 import time
 
 import jax
+
+from repro.core.compat import set_mesh_compat, shard_map_compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -67,11 +69,11 @@ def lower_table_ops(multi_pod: bool, log_batch: int, log_capacity: int,
         return v, f, ov[None]
 
     results = {}
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         fins = jax.jit(
-            jax.shard_map(ins, mesh=mesh, in_specs=(spec, P(axes), P(axes)),
-                          out_specs=(spec, P(axes), P(axes)),
-                          check_vma=False),
+            shard_map_compat(ins, mesh,
+                             in_specs=(spec, P(axes), P(axes)),
+                             out_specs=(spec, P(axes), P(axes))),
             in_shardings=(shardings, batch_sh, batch_sh),
             donate_argnums=(0,))
         t0 = time.time()
@@ -79,9 +81,8 @@ def lower_table_ops(multi_pod: bool, log_batch: int, log_capacity: int,
         results["insert"] = (compiled, time.time() - t0)
 
         fret = jax.jit(
-            jax.shard_map(ret, mesh=mesh, in_specs=(spec, P(axes)),
-                          out_specs=(P(axes), P(axes), P(axes)),
-                          check_vma=False),
+            shard_map_compat(ret, mesh, in_specs=(spec, P(axes)),
+                             out_specs=(P(axes), P(axes), P(axes))),
             in_shardings=(shardings, batch_sh))
         t0 = time.time()
         compiled = fret.lower(template, keys).compile()

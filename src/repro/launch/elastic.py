@@ -20,6 +20,8 @@ import sys
 import tempfile
 
 import jax
+
+from repro.core.compat import set_mesh_compat
 import jax.numpy as jnp
 
 from repro import configs
@@ -39,7 +41,7 @@ def train_segment(arch: str, mesh, steps: range, dcfg, ckpt_dir: str,
     ocfg = opt_mod.OptConfig(lr=3e-3, warmup_steps=2, total_steps=steps.stop)
     step_fn = jax.jit(tl.make_train_step(model, ocfg), donate_argnums=(0,))
     manager = ckpt_mod.CheckpointManager(ckpt_dir)
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         state = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
         state_sh = sharding.tree_shardings(state, mesh)
         if resume:

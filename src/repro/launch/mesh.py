@@ -11,20 +11,20 @@ module never touches jax device initialization; the dry-run sets
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core.compat import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(num_devices: int | None = None, axis: str = "data"):
     """1-D mesh over whatever devices exist (tests, examples, benchmarks)."""
     n = num_devices or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+    return make_mesh_compat((n,), (axis,))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

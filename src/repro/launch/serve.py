@@ -17,6 +17,8 @@ import sys
 import time
 
 import jax
+
+from repro.core.compat import set_mesh_compat
 import jax.numpy as jnp
 
 from repro import configs
@@ -40,7 +42,7 @@ def main(argv=None) -> int:
     model = zoo.build(cfg)
     mesh = make_host_mesh()
 
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         key = jax.random.PRNGKey(0)
         params = model.init(key)
         prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,

@@ -22,6 +22,8 @@ import sys
 import time
 
 import jax
+
+from repro.core.compat import set_mesh_compat
 import jax.numpy as jnp
 
 from repro import configs
@@ -70,7 +72,7 @@ def main(argv=None) -> int:
     step_fn = tl.make_train_step(model, ocfg, accum_steps=args.accum,
                                  grad_transform=grad_sync)
 
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         state = tl.init_state(model, ocfg, jax.random.PRNGKey(0))
         state_sh = sharding.tree_shardings(state, mesh)
         state = jax.device_put(state, state_sh)

@@ -3,11 +3,14 @@
 A group-by is a CountingHashTable generalized to carry an aggregation
 operand: every group key owns one slot of a ``SingleValueHashTable`` with
 two value words — plane 0 the aggregate accumulator, plane 1 the group
-cardinality — and each input element performs a read-modify-write upsert
+cardinality — and each input batch performs a read-modify-write upsert
 via ``single_value.update_values`` (absent key -> seed the accumulator,
-present key -> fold the new operand in).  On TPU the scan's
-single-writer-per-shard serialization replaces the CUDA atomics a GPU
-group-by would use (DESIGN.md §2).
+present key -> fold the new operand in).  Every fold ships an associative
+``combine`` so the vectorized bulk engine (repro.core.bulk) pre-merges
+duplicate keys and applies one RMW per distinct group — batch-level
+conflict resolution instead of the CUDA atomics a GPU group-by would use
+(DESIGN.md §2).  On the ``"pallas"`` backend the fused COPS RMW tile
+(repro.kernels.cops) folds in-VMEM instead of falling back to the scan.
 
 All operators are pure pytree functions; ``aggregate`` is the one-shot
 jittable entry point.  ``mean`` finalizes as float32 accumulator/count;
@@ -48,17 +51,29 @@ def create(min_capacity: int, *, key_words: int = 1,
 
 
 def _fold_fn(agg: str):
-    if agg in ("sum", "mean"):
-        return lambda old, key, new: jnp.stack([old[0] + new[0],
-                                                old[1] + new[1]])
+    """(old, key, new) -> new slot value; new = (operand, weight) planes."""
+    if agg in ("sum", "mean", "count"):
+        return lambda old, key, new: old + new
     if agg == "min":
         return lambda old, key, new: jnp.stack([jnp.minimum(old[0], new[0]),
                                                 old[1] + new[1]])
     if agg == "max":
         return lambda old, key, new: jnp.stack([jnp.maximum(old[0], new[0]),
                                                 old[1] + new[1]])
-    if agg == "count":
-        return lambda old, key, new: jnp.stack([old[0] + 1, old[1] + 1])
+    raise ValueError(f"agg={agg!r} not in {AGGS}")
+
+
+def _combine_fn(agg: str):
+    """Associative pre-merge of operand pairs — the bulk engine's segment
+    combiner, as a per-value-word spec (plane 0 = aggregate, plane 1 =
+    weight), so duplicate group keys fold via scatter-reduce before any
+    table RMW."""
+    if agg in ("sum", "mean", "count"):
+        return ("add", "add")
+    if agg == "min":
+        return ("min", "add")
+    if agg == "max":
+        return ("max", "add")
     raise ValueError(f"agg={agg!r} not in {AGGS}")
 
 
@@ -67,9 +82,11 @@ def update(table: GroupByTable, agg: str, keys, values=None, mask=None,
     """Fold a batch of (key, value) elements into the running aggregate.
 
     ``values`` may be omitted for ``count``.  Returns (table, status) with
-    the usual STATUS_* codes per element.
+    the usual STATUS_* codes per element.  Backend routing: ``"pallas"``
+    runs the fused COPS RMW tile when the table qualifies; otherwise the
+    associative combiner sends the fold down the vectorized bulk path
+    (``backend="scan"`` keeps the sequential reference).
     """
-    fold = _fold_fn(agg)
     keys = sv.normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
     if values is None:
@@ -79,7 +96,11 @@ def update(table: GroupByTable, agg: str, keys, values=None, mask=None,
     v = sv.normalize_words(values, 1, "values")[:, 0]
     ones = jnp.ones((n,), _U)
     payload = jnp.stack([ones if agg == "count" else v, ones], axis=1)
-    return sv.update_values(table, keys, fold, payload, mask=mask)
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.update_groupby(table, agg, keys, payload, mask)
+    return sv.update_values(table, keys, _fold_fn(agg), payload, mask=mask,
+                            combine=_combine_fn(agg))
 
 
 def lookup(table: GroupByTable, agg: str, keys) -> tuple[jax.Array, jax.Array]:

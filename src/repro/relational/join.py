@@ -4,7 +4,12 @@ Classic two-phase GPU hash join, rendered on the repo's table primitives:
 
 - **build** — insert every build-side row as a ``(key, row_index)`` pair
   into a ``MultiValueHashTable`` (duplicate build keys occupy distinct
-  slots, so N:M joins fall out of the multi-value semantics for free);
+  slots, so N:M joins fall out of the multi-value semantics for free).
+  The default ``backend="jax"`` build runs the vectorized bulk engine
+  (``repro.core.bulk``: one placement fixpoint instead of a per-row scan);
+  ``backend="scan"`` selects the sequential reference and
+  ``backend="pallas"`` the COPS kernel — all bit-identical, so join
+  results never depend on the build backend;
 - **probe** — the probe side runs the paper's counting-pass + prefix-sum
   output-sizing pattern (§IV-B.4): ``count_values`` sizes the match list
   per probe row, a cumulative sum lays out the output, and

@@ -22,6 +22,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size_compat
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
@@ -103,7 +105,7 @@ def compressed_psum(cfg: CompressionConfig, grads, axis: str, state):
     Quantizes, psums the int8 payload in int32 (no overflow up to 2^23
     shards), and dequantizes with the max scale — then mean-normalizes.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size_compat(axis)
     if cfg.kind == "none":
         return jax.tree.map(lambda g: jax.lax.psum(g, axis) / n, grads), state
 

@@ -1,5 +1,10 @@
 """Multi-device tests (8 host devices, run in subprocesses so the main
-pytest process keeps its single real device — see conftest note)."""
+pytest process keeps its single real device — see conftest note).
+
+All mesh/shard_map construction goes through the jax-version shims in
+``repro.core.compat`` (re-exported by ``repro.distributed.sharding``) so
+the same tests pass on the container's jax 0.4.x and on current jax.
+"""
 
 import json
 import os
@@ -28,8 +33,8 @@ class TestDistributedTables:
         out = _run("""
             import jax, jax.numpy as jnp, numpy as np
             from repro.core import distributed as dist
-            mesh = jax.make_mesh((8,), ('x',),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.core.compat import make_mesh_compat
+            mesh = make_mesh_compat((8,), ('x',))
             table = dist.create_sharded(mesh, 'x', 2048, window=16)
             n = 8 * 512
             keys = jnp.asarray(np.random.default_rng(0).permutation(
@@ -54,8 +59,8 @@ class TestDistributedTables:
             import jax, jax.numpy as jnp, numpy as np
             from repro.core import distributed as dist
             from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
-            mesh = jax.make_mesh((8,), ('x',),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.core.compat import make_mesh_compat
+            mesh = make_mesh_compat((8,), ('x',))
             table = dist.create_sharded(mesh, 'x', 1024, window=16)
             keys = jnp.arange(1, 2001, dtype=jnp.uint32)
             table, _, ov = dist.shard_insert(mesh, 'x', table, keys, keys)
@@ -83,8 +88,8 @@ class TestDistributedTables:
             import jax, jax.numpy as jnp, numpy as np
             from jax.sharding import PartitionSpec as P
             from repro.core import distributed as dist, single_value as sv
-            mesh = jax.make_mesh((8,), ('x',),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.core.compat import make_mesh_compat, shard_map_compat
+            mesh = make_mesh_compat((8,), ('x',))
             table = dist.create_sharded(mesh, 'x', 1024, window=16)
             n = 8 * 64
             keys = jnp.arange(1, n + 1, dtype=jnp.uint32)
@@ -94,16 +99,47 @@ class TestDistributedTables:
                 tl = dist._local(t)
                 tl, st = dist.insert_independent(tl, k, v)
                 return dist._relift(tl), st
-            f = jax.shard_map(ins, mesh=mesh, in_specs=(spec, P('x'), P('x')),
-                              out_specs=(spec, P('x')), check_vma=False)
+            f = shard_map_compat(ins, mesh, in_specs=(spec, P('x'), P('x')),
+                                 out_specs=(spec, P('x')))
             table, st = f(table, keys, vals)
             def ret(t, k):
                 return dist.retrieve_independent(dist._local(t), k, 'x')
-            g = jax.shard_map(ret, mesh=mesh, in_specs=(spec, P('x')),
-                              out_specs=(P('x'), P('x')), check_vma=False)
+            g = shard_map_compat(ret, mesh, in_specs=(spec, P('x')),
+                                 out_specs=(P('x'), P('x')))
             got, found = g(table, keys)
             assert np.asarray(found).all()
             assert (np.asarray(got) == np.asarray(vals)).all()
+            print('OK')
+        """)
+        assert "OK" in out
+
+    def test_erase_distributed(self):
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.core import distributed as dist
+            from repro.core.compat import make_mesh_compat, shard_map_compat
+            mesh = make_mesh_compat((8,), ('x',))
+            table = dist.create_sharded(mesh, 'x', 1024, window=16)
+            n = 8 * 128
+            keys = jnp.arange(1, n + 1, dtype=jnp.uint32)
+            table, _, ov = dist.shard_insert(mesh, 'x', table, keys, keys)
+            assert int(np.asarray(ov).sum()) == 0
+            spec = jax.tree.map(lambda _: P('x'), table)
+            def er(t, k):
+                tl, erased, ov = dist.erase_distributed(dist._local(t), k, 'x')
+                return dist._relift(tl), erased, ov[None]
+            f = shard_map_compat(er, mesh, in_specs=(spec, P('x')),
+                                 out_specs=(spec, P('x'), P('x')))
+            half = keys[:n // 2]
+            pad = jnp.concatenate([half, jnp.arange(
+                2 * n, 2 * n + n // 2, dtype=jnp.uint32)])
+            table, erased, ov = f(table, pad)
+            assert int(np.asarray(ov).sum()) == 0
+            assert np.asarray(erased)[:n // 2].all()
+            got, found, _ = dist.shard_retrieve(mesh, 'x', table, keys)
+            found = np.asarray(found)
+            assert not found[:n // 2].any() and found[n // 2:].all()
             print('OK')
         """)
         assert "OK" in out
@@ -115,13 +151,13 @@ class TestGradSyncCompression:
             import jax, jax.numpy as jnp, numpy as np
             from repro.distributed import collectives
             from repro.training import compression as comp
-            mesh = jax.make_mesh((2, 4), ('pod', 'data'),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.core.compat import make_mesh_compat, set_mesh_compat
+            mesh = make_mesh_compat((2, 4), ('pod', 'data'))
             sync = collectives.make_grad_sync(
                 mesh, comp.CompressionConfig(kind='int8'))
             g = {'w': jnp.asarray(np.random.default_rng(0).normal(
                 size=(64, 64)).astype(np.float32))}
-            with jax.set_mesh(mesh):
+            with set_mesh_compat(mesh):
                 out = jax.jit(sync)(g)
             np.testing.assert_allclose(np.asarray(out['w']),
                                        np.asarray(g['w']), atol=0.05)
@@ -134,12 +170,12 @@ class TestGradSyncCompression:
             import jax, jax.numpy as jnp, numpy as np
             from repro.distributed import collectives
             from repro.training import compression as comp
-            mesh = jax.make_mesh((2, 4), ('pod', 'data'),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.core.compat import make_mesh_compat, set_mesh_compat
+            mesh = make_mesh_compat((2, 4), ('pod', 'data'))
             sync = collectives.make_grad_sync(
                 mesh, comp.CompressionConfig(kind='none'))
             g = {'w': jnp.ones((8, 8), jnp.float32)}
-            with jax.set_mesh(mesh):
+            with set_mesh_compat(mesh):
                 out = jax.jit(sync)(g)
             np.testing.assert_allclose(np.asarray(out['w']), 1.0)
             print('OK')
@@ -163,8 +199,8 @@ class TestPipelineParallel:
             import jax, jax.numpy as jnp, numpy as np
             from jax.sharding import PartitionSpec as P
             from repro.distributed import pipeline_parallel as pp
-            mesh = jax.make_mesh((4,), ('pod',),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.core.compat import make_mesh_compat, shard_map_compat
+            mesh = make_mesh_compat((4,), ('pod',))
             L, D, M, mb = 8, 16, 8, 4
             key = jax.random.PRNGKey(0)
             blocks = {'w': jax.random.normal(key, (L, D, D)) * 0.1}
@@ -177,10 +213,9 @@ class TestPipelineParallel:
                 ref = block_fn({'w': blocks['w'][i]}, ref)
             staged = pp.stage_params(blocks, 4)
             spec = jax.tree.map(lambda _: P('pod'), staged)
-            f = jax.shard_map(
+            f = shard_map_compat(
                 lambda s, xx: pp.pipelined_apply(block_fn, s, xx, 'pod'),
-                mesh=mesh, in_specs=(spec, P()), out_specs=P(),
-                check_vma=False)
+                mesh, in_specs=(spec, P()), out_specs=P())
             out = f(staged, x)
             np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                        rtol=1e-4, atol=1e-4)
