@@ -16,6 +16,14 @@ sequential ``backend="scan"`` reference at n = 2^14: the PR-trajectory
 number for the scatter-arbitration build (its speedup is recorded in
 BENCH_*.json via ``--json``).
 
+The ``fused-vs-twowalk`` retrieval section does the same for the fused
+bulk-retrieval engine (repro.core.bulk_retrieve): multi-value
+``retrieve_all`` with the single fused walk (``backend="jax"``) against
+the paper's count-pass + gather-re-probe two-walk reference
+(``backend="scan"``), same table, same probe batch.  The comparison
+FAILS (raises) on any fused/scan output mismatch, so every benchmark run
+— including the CI smoke step — doubles as a parity gate.
+
 Set ``REPRO_BENCH_SMOKE=1`` to run the small SMOKE config (CI smoke step).
 """
 
@@ -30,6 +38,7 @@ import numpy as np
 
 from benchmarks.util import row, time_fn
 from repro.configs.warpcore import CONFIG, SMOKE
+from repro.core import multi_value as mv
 from repro.core import single_value as sv
 
 VARIANTS = {
@@ -107,6 +116,44 @@ def run(out=print):
     out(row(f"fig5.insert.wc-cops.bulk.rho{rho}", sec_b, n,
             extra=f"speedup-vs-scan={sec_s / sec_b:.2f}x"))
     out(row(f"fig5.insert.wc-cops.scan.rho{rho}", sec_s, n))
+
+    # fused single-walk retrieval vs the paper's count+gather two walks
+    # (PR-trajectory comparison + parity gate).  Multi-value table with
+    # multiplicity 4 — the workload whose output sizing needs the
+    # counting pass — probed by the full batch incl. duplicates/misses.
+    # default max_probes (= num_rows): the fused arena path requires a
+    # revisit-free walk (bulk_retrieve.fused_ok)
+    mult = 4
+    mt_fused = mv.create(capacity, window=32)
+    mt_scan = mv.create(capacity, window=32, backend="scan")
+    mkeys = jnp.tile(keys[: n // mult], mult)
+    mvals = jnp.arange(mkeys.shape[0], dtype=jnp.uint32)
+    mt_fused, _ = mv.insert(mt_fused, mkeys, mvals)
+    mt_scan, _ = mv.insert(mt_scan, mkeys, mvals)
+    out_cap = int(jnp.sum(mv.count_values(mt_scan, keys)))
+    ret = jax.jit(lambda t, k: mv.retrieve_all(t, k, out_cap))
+    jax.block_until_ready(ret(mt_fused, keys))
+    jax.block_until_ready(ret(mt_scan, keys))
+    tf, tw = [], []
+    for _ in range(9):
+        a = _t.perf_counter()
+        jax.block_until_ready(ret(mt_fused, keys))
+        tf.append(_t.perf_counter() - a)
+        a = _t.perf_counter()
+        jax.block_until_ready(ret(mt_scan, keys))
+        tw.append(_t.perf_counter() - a)
+    sec_f, sec_w = min(tf), min(tw)
+    # parity gate: the CI smoke step fails on any fused/scan mismatch
+    vf, of, cf = ret(mt_fused, keys)
+    vw_, ow, cw = ret(mt_scan, keys)
+    for name_, a, b in (("values", vf, vw_), ("offsets", of, ow),
+                        ("counts", cf, cw)):
+        if not bool(jnp.array_equal(a, b)):
+            raise AssertionError(
+                f"fused/scan retrieval parity mismatch on {name_}")
+    out(row(f"fig5.retrieve.wc-cops.fused.rho{rho}", sec_f, n,
+            extra=f"speedup-vs-twowalk={sec_w / sec_f:.2f}x,parity=ok"))
+    out(row(f"fig5.retrieve.wc-cops.twowalk.rho{rho}", sec_w, n))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,371 @@
+"""Vectorized bulk-retrieval engine — one fused probe walk per query batch.
+
+The retrieval counterpart of the bulk-build engine (``repro.core.bulk``).
+The paper's §IV-B.4 pattern sizes multi-value output with a *counting
+pass* and then re-probes to gather — two full walks over the store — and
+the scan-reference paths in ``multi_value`` keep exactly that shape.  GPU
+hash-table throughput is dominated by passes over the store (cache-line
+efficiency — Compact Parallel Hash Tables, 2406.09255), so this module
+collapses count + gather into ONE walk:
+
+1. **Dedup front-end** — duplicate probe keys are grouped (the bulk
+   engine's sort + ``searchsorted`` fast lane for 1-word keys, the stable
+   payload sort for wide keys) and only one *representative* per distinct
+   live key walks the table; results fan back out to every duplicate by
+   segment at the end.
+2. **Fused walk** — representatives run a single vectorized COPS walk
+   that simultaneously accumulates per-query match *counts* and records
+   every matching slot in a slot-space *arena*: ``arena[slot] = (query,
+   local_rank)`` where ``local_rank`` is the match's position in walk
+   order (window by window, lane order within a window — exactly the
+   order the reference gather pass emits).  A slot holds one key, and
+   representatives are distinct keys, so arena writes never collide.
+3. **Compact** — per-query counts produce the output offsets (the
+   prefix-sum layout callers already rely on); one batched scatter packs
+   the arena into a representative-dense slot list, and one batched
+   gather reads ``values[offsets[i] + j]`` straight from the store planes
+   through that list.  Duplicate queries replicate their representative's
+   segment for free (a gather has no write hazards).
+
+The walk also drives **bulk erase**: the arena's occupied-slot mask IS
+the set of slots to tombstone, applied as one dense batched write after
+the walk instead of a scatter per probe window (WarpSpeed, 2509.16407,
+makes the case that bulk erase belongs in the same engine as bulk build).
+Tombstoning after the walk is bit-equivalent to the reference's in-walk
+scatters: a tombstone never matches another live query key and never
+creates an EMPTY, so no other query's walk can observe the difference.
+
+Everything here is bit-exact against the ``backend="scan"`` reference
+paths (the pre-PR while-loop walks kept in ``single_value`` /
+``multi_value``): identical values, offsets, counts, found/erased masks,
+and post-erase store planes.  ``tests/test_retrieve.py`` asserts this on
+adversarial batches (duplicates, masks, tombstone-riddled tables,
+``out_capacity`` overflow, u64 keys, empty batches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layouts, probing
+from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+def _tstatic(table):
+    return (table.layout, table.key_words, table.num_rows, table.window,
+            table.scheme, table.seed, table.max_probes)
+
+
+def fused_ok(table) -> bool:
+    """Static predicate: can the slot arena represent this table's walks?
+
+    The arena maps each store slot to at most one (query, rank) pair, so
+    the fused gather/erase requires *revisit-free* walks — no probe row
+    visited twice.  cops (double hashing, step in [1, p-1], p prime) and
+    linear visit distinct rows for the first ``num_rows`` attempts;
+    quadratic may cycle back sooner, and ``max_probes > num_rows`` wraps
+    every scheme.  On a saturated table (no EMPTY frontier) a revisiting
+    reference walk re-emits the same slots each pass — semantics only the
+    two-walk reference can produce, so dispatchers fall back to it.
+    Counting is unaffected (same loop, no arena): ``count_multi`` stays
+    fused regardless.
+    """
+    return (table.scheme in ("cops", "linear")
+            and table.max_probes <= table.num_rows)
+
+
+# ---------------------------------------------------------------------------
+# dedup front-end — one representative walk per distinct live key
+# ---------------------------------------------------------------------------
+
+def group_queries(keys, live):
+    """Group duplicate query keys; returns (is_rep, rep_of) in batch order.
+
+    ``is_rep`` marks the first live occurrence of each distinct live key
+    (the element that walks the table); ``rep_of[i]`` is the batch index
+    of element i's representative — ``n`` when i's key has no live
+    occurrence (only possible for masked elements, which never read it).
+    Reuses the bulk-build engine's group machinery: the payload-free sort
+    fast lane for 1-word keys, the stable (masked, key words, index) sort
+    for wide keys.
+    """
+    from repro.core import bulk
+    n, kw = keys.shape
+    if kw == 1:
+        is_rep, rep_of, _, _, _ = bulk._group_fast(keys[:, 0], live)
+        return is_rep, rep_of.astype(_I)
+    flag, skeys, sidx, _ = bulk._sort_batch(keys, live, [])
+    live_s, is_rep_s, first_pos, _ = bulk._group_structure(flag, skeys)
+    rep_s = jnp.where(live_s, sidx[first_pos].astype(_I), _I(n))
+    rep_of = jnp.zeros((n,), _I).at[sidx].set(rep_s)
+    is_rep = jnp.zeros((n,), bool).at[sidx].set(is_rep_s)
+    return is_rep, rep_of
+
+
+# ---------------------------------------------------------------------------
+# the fused walk — counts + slot arena in a single pass over the store
+# ---------------------------------------------------------------------------
+
+def fused_walk(tstatic, store, keys, words, active, *, collect, count=None):
+    """One COPS walk for every active element, emitting counts AND matches.
+
+    Returns ``(cnt, qarena, rank_arena)``: per-element match counts (0 for
+    inactive elements), and — when ``collect`` — two flat (capacity,)
+    arenas giving, per store slot, the matching element's batch index
+    (sentinel ``n`` if none) and the match's walk-order rank within that
+    element's result segment.  Stops per element at the first window
+    containing EMPTY (the absence frontier; tombstones do not stop the
+    walk) or after ``max_probes`` windows, exactly like the reference
+    counting/gather walks.  ``count`` (the table's live count) short-cuts
+    the walk on an empty store.
+
+    Distinct active keys can never match the same slot, so arena writes
+    are collision-free by construction — the retrieval-side analogue of
+    the build engine's unique (row, rank) placement invariant.
+    """
+    layout, key_words, num_rows, w, scheme, seed, max_probes = tstatic
+    n = keys.shape[0]
+    cap = num_rows * w
+    ashape = (cap,) if collect else (1,)
+    # pack (query, rank) into one i32 arena when it cannot overflow —
+    # halves the per-window scatter traffic on the hot path
+    packed = collect and n * cap < 2 ** 31
+    row0 = probing.initial_row(words, num_rows, seed)
+    step = probing.row_step(scheme, words, num_rows, seed)
+    qa0 = jnp.full(ashape, _I(-1) if packed else _I(n), _I)
+    ra0 = jnp.zeros(ashape if not packed else (1,), _I)
+    idx = jnp.arange(n, dtype=_I)
+
+    def empty(_):
+        return jnp.zeros((n,), _I), qa0, ra0
+
+    def walk(_):
+        def cond(st):
+            attempt, row, done, seen, qa, ra = st
+            return jnp.logical_and(attempt < max_probes, ~jnp.all(done))
+
+        def body(st):
+            attempt, row, done, seen, qa, ra = st
+            win = layouts.key_windows(layout, store, row, key_words)
+            match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]
+            has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
+            if collect:
+                lanes = jax.lax.broadcasted_iota(_I, match.shape, 1)
+                slot = row.astype(_I)[:, None] * w + lanes
+                slot = jnp.where(match, slot, cap).reshape(-1)
+                rank = jnp.cumsum(match.astype(_I), axis=1) - 1
+                local = jnp.broadcast_to(seen[:, None] + rank, match.shape)
+                qcol = jnp.broadcast_to(idx[:, None], match.shape)
+                if packed:
+                    qa = qa.at[slot].set(
+                        (qcol * cap + local).reshape(-1), mode="drop")
+                else:
+                    qa = qa.at[slot].set(qcol.reshape(-1), mode="drop")
+                    ra = ra.at[slot].set(local.reshape(-1), mode="drop")
+            seen = seen + probing.vote_count(match)
+            done = done | has_empty
+            nrow = probing.advance_row(scheme, row, step, attempt, num_rows)
+            return attempt + 1, jnp.where(done, row, nrow), done, seen, qa, ra
+
+        st = (jnp.zeros((), _I), row0, ~active, jnp.zeros((n,), _I), qa0, ra0)
+        _, _, _, seen, qa, ra = jax.lax.while_loop(cond, body, st)
+        return seen, qa, ra
+
+    if count is None:
+        cnt, qa, ra = walk(None)
+    else:
+        cnt, qa, ra = jax.lax.cond(count == 0, empty, walk, None)
+    if packed:
+        ra = jnp.where(qa >= 0, qa % cap, 0)
+        qa = jnp.where(qa >= 0, qa // cap, n)
+    return cnt, qa, ra
+
+
+# ---------------------------------------------------------------------------
+# compaction — arena + counts -> the paper's (values, offsets, counts)
+# ---------------------------------------------------------------------------
+
+def _fan_out(rcnt, rep_of, live, n):
+    """Per-query counts from representative counts (masked queries -> 0)."""
+    safe = jnp.clip(rep_of, 0, max(n - 1, 0))
+    return jnp.where(live, rcnt[safe], 0)
+
+
+def _emit(table, out_capacity, counts, is_rep, rep_of, rcnt, qarena,
+          rank_arena):
+    """Pack the walk's arena into the prefix-sum output layout.
+
+    One scatter orders matched slots representative-dense (walk order
+    within each representative), one gather fans the slot values out into
+    every query's segment.  Entries past each segment — and everything
+    past the true total when ``out_capacity`` truncates — stay zero,
+    matching the reference's drop-scatter semantics bit for bit.
+    """
+    n = rep_of.shape[0]
+    vw = table.value_words
+    cap = table.num_rows * table.window
+    offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
+    # representative-dense base offsets, in batch order of representatives
+    repc = jnp.where(is_rep, rcnt, 0)
+    rep_base = jnp.cumsum(repc) - repc
+    okslot = qarena < n
+    safe_q = jnp.clip(qarena, 0, max(n - 1, 0))
+    pos = jnp.where(okslot, rep_base[safe_q] + rank_arena, cap)
+    rep_dense = jnp.full((cap,), cap, _I).at[pos].set(
+        jnp.arange(cap, dtype=_I), mode="drop")
+    # gather into the query layout
+    j = jnp.arange(out_capacity, dtype=_I)
+    seg = jnp.searchsorted(offsets[1:], j, side="right").astype(_I)
+    segc = jnp.clip(seg, 0, max(n - 1, 0))
+    local = j - offsets[segc]
+    valid = j < offsets[n]
+    gpos = jnp.clip(rep_base[jnp.clip(rep_of[segc], 0, max(n - 1, 0))] + local,
+                    0, cap - 1)
+    slot = jnp.clip(rep_dense[gpos], 0, cap - 1)
+    vp = layouts.value_planes(table.layout, table.store, table.key_words, vw)
+    svals = vp.reshape(vw, cap)[:, slot].T                  # (out_capacity, vw)
+    out = jnp.where(valid[:, None], svals, 0)
+    return out, offsets, counts
+
+
+# ---------------------------------------------------------------------------
+# multi-value entry points
+# ---------------------------------------------------------------------------
+
+def count_multi(table, keys, mask=None):
+    """Fused path for ``multi_value.count_values`` (dedup + one walk)."""
+    from repro.core import single_value as sv
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), _I)
+    live = jnp.ones((n,), bool) if mask is None else mask
+    is_rep, rep_of = group_queries(keys, live)
+    words = sv.key_hash_word(keys)
+    cnt, _, _ = fused_walk(_tstatic(table), table.store, keys, words, is_rep,
+                           collect=False, count=table.count)
+    return _fan_out(cnt, rep_of, live, n)
+
+
+def retrieve_all_multi(table, keys, out_capacity, mask=None):
+    """Fused path for ``multi_value.retrieve_all``: the single-walk
+    count+gather this engine exists for."""
+    from repro.core import single_value as sv
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    vw = table.value_words
+    if n == 0:
+        out = jnp.zeros((out_capacity, vw), _U)
+        return ((out[:, 0] if vw == 1 else out), jnp.zeros((1,), _I),
+                jnp.zeros((0,), _I))
+    live = jnp.ones((n,), bool) if mask is None else mask
+    is_rep, rep_of = group_queries(keys, live)
+    words = sv.key_hash_word(keys)
+    rcnt, qarena, rank_arena = fused_walk(
+        _tstatic(table), table.store, keys, words, is_rep, collect=True,
+        count=table.count)
+    counts = _fan_out(rcnt, rep_of, live, n)
+    out, offsets, counts = _emit(table, out_capacity, counts, is_rep, rep_of,
+                                 rcnt, qarena, rank_arena)
+    if vw == 1:
+        return out[:, 0], offsets, counts
+    return out, offsets, counts
+
+
+def erase_multi(table, keys):
+    """Fused path for ``multi_value.erase``: the walk's occupied-arena mask
+    drives one dense batched tombstone write."""
+    from repro.core import single_value as sv
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    if n == 0:
+        return table, jnp.zeros((0,), _I)
+    live = jnp.ones((n,), bool)
+    is_rep, rep_of = group_queries(keys, live)
+    words = sv.key_hash_word(keys)
+    rcnt, qarena, _ = fused_walk(_tstatic(table), table.store, keys, words,
+                                 is_rep, collect=True, count=table.count)
+    tomb = (qarena < n).reshape(table.num_rows, table.window)
+    store = layouts.tombstone_where(table.layout, table.store, tomb,
+                                    table.key_words)
+    counts = _fan_out(rcnt, rep_of, live, n)
+    erased = jnp.sum(jnp.where(is_rep, rcnt, 0), dtype=_I)
+    return dataclasses.replace(table, store=store,
+                               count=table.count - erased), counts
+
+
+# ---------------------------------------------------------------------------
+# single-value entry points (dedup + one located walk, shared with erase)
+# ---------------------------------------------------------------------------
+
+def _locate_reps(table, keys):
+    from repro.core import bulk
+    from repro.core import single_value as sv
+    n = keys.shape[0]
+    live = jnp.ones((n,), bool)
+    is_rep, rep_of = group_queries(keys, live)
+    words = sv.key_hash_word(keys)
+    matched, mrow, mlane = bulk.probe_matches(
+        _tstatic(table), table.store, keys, words, is_rep, table.count)
+    return is_rep, rep_of, matched, mrow, mlane
+
+
+def retrieve_single(table, keys):
+    """Fused path for ``single_value.retrieve``: duplicate probe keys walk
+    once; duplicates read their representative's slot."""
+    from repro.core import single_value as sv
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    vw = table.value_words
+    if n == 0:
+        vals = jnp.zeros((0, vw), _U)
+        return (vals[:, 0] if vw == 1 else vals), jnp.zeros((0,), bool)
+    _, rep_of, matched, mrow, mlane = _locate_reps(table, keys)
+    vp = table.value_planes()                                 # (vw, p, W)
+    rvals = vp[:, mrow, mlane].T                              # (n, vw)
+    found = matched[rep_of]
+    vals = jnp.where(found[:, None], rvals[rep_of], 0)
+    if vw == 1:
+        return vals[:, 0], found
+    return vals, found
+
+
+def contains_single(table, keys):
+    from repro.core import single_value as sv
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    if keys.shape[0] == 0:
+        return jnp.zeros((0,), bool)
+    _, rep_of, matched, _, _ = _locate_reps(table, keys)
+    return matched[rep_of]
+
+
+def erase_single(table, keys, mask=None):
+    """Fused path for ``single_value.erase``: one representative walk, one
+    batched tombstone scatter, count delta from the group structure (no
+    separate distinct-count sort)."""
+    from repro.core import bulk
+    from repro.core import single_value as sv
+    keys = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys.shape[0]
+    if n == 0:
+        return table, jnp.zeros((0,), bool)
+    live = jnp.ones((n,), bool) if mask is None else mask
+    is_rep, rep_of = group_queries(keys, live)
+    words = sv.key_hash_word(keys)
+    matched, mrow, mlane = bulk.probe_matches(
+        _tstatic(table), table.store, keys, words, is_rep, table.count)
+    hit = is_rep & matched
+    srows = jnp.where(hit, mrow, _U(table.num_rows))
+    store = layouts.scatter_key_word(table.layout, table.store, srows, mlane,
+                                     TOMBSTONE_KEY, table.key_words,
+                                     table.num_rows)
+    safe = jnp.clip(rep_of, 0, max(n - 1, 0))
+    erased = live & matched[safe] & (rep_of < n)
+    count = table.count - jnp.sum(hit, dtype=_I)
+    return dataclasses.replace(table, store=store, count=count), erased

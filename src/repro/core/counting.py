@@ -51,6 +51,12 @@ def insert(table: CountingHashTable, keys, mask=None,
 
 
 def counts(table: CountingHashTable, keys) -> jax.Array:
-    """Occurrence count per key (0 when absent)."""
+    """Occurrence count per key (0 when absent).
+
+    Rides ``single_value.retrieve``'s backend dispatch: the default path
+    is the fused bulk-retrieval engine (``repro.core.bulk_retrieve`` —
+    duplicate query keys walk the table once), ``backend="scan"`` keeps
+    the direct reference walk and ``"pallas"`` the lookup kernel.
+    """
     vals, found = sv.retrieve(table, keys)
     return jnp.where(found, vals, jnp.uint32(0))

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.common import EMPTY_KEY
+from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
 
 _U = jnp.uint32
 
@@ -116,6 +116,25 @@ def scatter_key_word(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,
     for w in range(key_words):
         slots = slots.at[rows, lanes, w].set(fill, mode="drop")
     return {"slots": slots}
+
+
+def tombstone_where(kind: str, store: dict, mask2d: jax.Array,
+                    key_words: int) -> dict:
+    """Write TOMBSTONE into every key word of the slots where mask2d (p, W).
+
+    The bulk-erase apply: one dense vectorized select over the key planes
+    instead of a scatter per probe window — the slot mask comes from the
+    fused retrieval walk's match arena.
+    """
+    tomb = jnp.asarray(TOMBSTONE_KEY, _U)
+    if kind == "soa":
+        keys = jnp.where(mask2d[None, :, :], tomb, store["keys"])
+        return {"keys": keys, "values": store["values"]}
+    slots = store["slots"]
+    words = slots.shape[-1]
+    is_key = jnp.arange(words) < key_words
+    sel = mask2d[:, :, None] & is_key[None, None, :]
+    return {"slots": jnp.where(sel, tomb, slots)}
 
 
 def scatter_values(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,

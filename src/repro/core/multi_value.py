@@ -171,7 +171,8 @@ def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
 
 
 # ---------------------------------------------------------------------------
-# counting pass + gather pass (both vectorized across the query batch)
+# retrieval — fused single-walk engine by default (repro.core.bulk_retrieve);
+# backend="scan" keeps the two-walk count+gather reference
 # ---------------------------------------------------------------------------
 
 def count_values(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
@@ -179,7 +180,21 @@ def count_values(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
 
     ``mask`` drops query elements entirely (count 0, no probe walk) — used by
     the relational probe path where padded exchange slots carry sentinels.
+    Dispatches on ``table.backend``: the default runs the fused
+    bulk-retrieval engine (duplicate probe keys walk once), ``"pallas"``
+    the fused COPS walk tile, ``"scan"`` the direct reference walk.
     """
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.count_multi(table, keys, mask)
+    if table.backend != "scan":
+        from repro.core import bulk_retrieve
+        return bulk_retrieve.count_multi(table, keys, mask)
+    return count_values_scan(table, keys, mask)
+
+
+def count_values_scan(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
+    """Reference counting pass: one dedicated probe walk for the counts."""
     keys = normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
     word = key_hash_word(keys)
@@ -216,10 +231,32 @@ def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
     exclusive prefix sum.  ``out_capacity`` is static (jit shape); entries past
     the true total are zero.  Overflow beyond out_capacity is dropped —
     callers size via ``count_values`` exactly as in the paper.
+
+    The default backend runs the fused bulk-retrieval engine: ONE probe
+    walk emits counts and gathered values together (half the store
+    traffic of the paper's count-then-gather pattern).  ``"scan"`` keeps
+    that two-walk shape as the bit-exact reference; ``"pallas"`` drives
+    the same compaction from the fused COPS walk tile.  Walks that may
+    revisit probe rows (see ``bulk_retrieve.fused_ok``) always take the
+    reference path — only it can re-emit a slot per visit.
     """
+    from repro.core import bulk_retrieve
+    if table.backend != "scan" and bulk_retrieve.fused_ok(table):
+        if table.backend == "pallas":
+            from repro.kernels.cops import ops as cops_ops
+            return cops_ops.retrieve_all_multi(table, keys, out_capacity,
+                                               mask)
+        return bulk_retrieve.retrieve_all_multi(table, keys, out_capacity,
+                                                mask)
+    return retrieve_all_scan(table, keys, out_capacity, mask)
+
+
+def retrieve_all_scan(table: MultiValueHashTable, keys, out_capacity: int,
+                      mask=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference two-walk retrieval: counting pass, then a gather re-probe."""
     keys = normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
-    counts = count_values(table, keys, mask)
+    counts = count_values_scan(table, keys, mask)
     offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
     word = key_hash_word(keys)
     row0 = probing.initial_row(word, table.num_rows, table.seed)
@@ -258,7 +295,22 @@ def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
 
 
 def erase(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, jax.Array]:
-    """Tombstone every pair whose key matches. Returns (table, erased_counts)."""
+    """Tombstone every pair whose key matches. Returns (table, erased_counts).
+
+    The default path reuses the fused retrieval walk: its match arena is
+    the exact slot set to delete, applied as one batched tombstone write.
+    ``backend="scan"`` keeps the scatter-per-window reference walk, and
+    possibly-revisiting walks (``bulk_retrieve.fused_ok``) fall back to
+    it — in-walk tombstoning is what stops a revisit from re-counting.
+    """
+    from repro.core import bulk_retrieve
+    if table.backend != "scan" and bulk_retrieve.fused_ok(table):
+        return bulk_retrieve.erase_multi(table, keys)
+    return erase_scan(table, keys)
+
+
+def erase_scan(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, jax.Array]:
+    """Reference erase: in-walk tombstone scatters + full live recount."""
     keys = normalize_words(keys, table.key_words, "keys")
     n = keys.shape[0]
     word = key_hash_word(keys)

@@ -185,7 +185,25 @@ def _locate(table: SingleValueHashTable, keys: jax.Array):
 
 
 def retrieve(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
-    """Batch lookup -> (values (n, value_words) [or (n,) if 1 word], found (n,) bool)."""
+    """Batch lookup -> (values (n, value_words) [or (n,) if 1 word], found (n,) bool).
+
+    Dispatches on ``table.backend`` like ``insert``: the default ``"jax"``
+    path is the fused bulk-retrieval engine (``repro.core.bulk_retrieve``
+    — duplicate probe keys walk the table once and fan out by group),
+    ``"scan"`` keeps the direct per-element walk as the bit-exact
+    reference, and ``"pallas"`` runs the COPS lookup kernel.
+    """
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.retrieve(table, keys)
+    if table.backend != "scan":
+        from repro.core import bulk_retrieve
+        return bulk_retrieve.retrieve_single(table, keys)
+    return retrieve_scan(table, keys)
+
+
+def retrieve_scan(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
+    """Reference lookup: one direct probe walk per batch (no dedup)."""
     keys = normalize_words(keys, table.key_words, "keys")
     rows, lanes, found = _locate(table, keys)
     vp = table.value_planes()                                     # (vw, p, W)
@@ -198,6 +216,9 @@ def retrieve(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
 
 def contains(table: SingleValueHashTable, keys) -> jax.Array:
     keys = normalize_words(keys, table.key_words, "keys")
+    if table.backend != "scan":
+        from repro.core import bulk_retrieve
+        return bulk_retrieve.contains_single(table, keys)
     return _locate(table, keys)[2]
 
 
@@ -215,7 +236,23 @@ def _distinct_count(keys: jax.Array, sel: jax.Array) -> jax.Array:
 
 
 def erase(table: SingleValueHashTable, keys, mask=None) -> tuple[SingleValueHashTable, jax.Array]:
-    """Tombstone matching slots (paper §IV-B.5). Returns (table, erased_mask)."""
+    """Tombstone matching slots (paper §IV-B.5). Returns (table, erased_mask).
+
+    The default path folds erase into the fused bulk-retrieval engine:
+    one representative walk locates every distinct live key and a single
+    batched scatter writes the tombstones (the count delta falls out of
+    the group structure).  ``backend="scan"`` keeps the direct walk +
+    distinct-count reference.
+    """
+    if table.backend != "scan":
+        from repro.core import bulk_retrieve
+        return bulk_retrieve.erase_single(table, keys, mask)
+    return erase_scan(table, keys, mask)
+
+
+def erase_scan(table: SingleValueHashTable, keys, mask=None,
+               ) -> tuple[SingleValueHashTable, jax.Array]:
+    """Reference erase: direct batch walk + distinct-key count delta."""
     keys = normalize_words(keys, table.key_words, "keys")
     rows, lanes, found = _locate(table, keys)
     if mask is not None:

@@ -310,6 +310,102 @@ def update_call(tk, tv0, tv1, keys2d, vals2d, mask2d, *, seed, max_probes,
 
 
 # ---------------------------------------------------------------------------
+# fused retrieve tile — multi-value counts + match arena in one walk
+# ---------------------------------------------------------------------------
+#
+# The TPU rendering of the bulk-retrieval engine's fused walk
+# (repro.core.bulk_retrieve): per query the tile walks the probe sequence
+# ONCE, accumulating the match count and stamping (query index, walk-order
+# rank) into two slot-shaped arena planes held in VMEM alongside the key
+# plane.  The host-side compaction (`bulk_retrieve._emit`) then turns
+# counts + arena into the paper's (values, offsets, counts) layout — so
+# the kernel replaces both the counting pass and the gather re-probe with
+# a single pass over the store, mirroring how `update_call` fuses the
+# group-by RMW.  Queries are pre-deduped by the caller (mask selects the
+# group representatives), so arena writes never collide.
+
+def _retrieve_kernel(keys_ref, mask_ref, tk_ref, qa_in, ra_in,
+                     qa_ref, ra_ref, cnt_ref,
+                     *, num_rows, window, seed, max_probes, scheme, collect):
+    del qa_in, ra_in
+    tile = keys_ref.shape[1]
+    i = pl.program_id(0)
+
+    def one_key(j, _):
+        k = keys_ref[0, j]
+        m = mask_ref[0, j] != 0
+        qidx = i * tile + j
+        row0, step = _probe_setup(k, num_rows, seed, scheme)
+
+        def cond(st):
+            attempt, row, done, seen = st
+            return jnp.logical_and(attempt < max_probes, ~done)
+
+        def body(st):
+            attempt, row, done, seen = st
+            ri = row.astype(_I)
+            win = tk_ref[pl.ds(ri, 1), :][0]
+            match = win == k
+            nm = jnp.sum(match.astype(_I))
+            has_empty = jnp.any(win == EMPTY_KEY)
+
+            if collect:
+                rank = jnp.cumsum(match.astype(_I)) - 1 + seen
+
+                @pl.when(nm > 0)
+                def _():
+                    qrow = qa_ref[pl.ds(ri, 1), :][0]
+                    qa_ref[pl.ds(ri, 1), :] = jnp.where(match, qidx,
+                                                        qrow)[None, :]
+                    rrow = ra_ref[pl.ds(ri, 1), :][0]
+                    ra_ref[pl.ds(ri, 1), :] = jnp.where(match, rank,
+                                                        rrow)[None, :]
+
+            seen = seen + nm
+            done = has_empty
+            nrow = (row + step) % _U(num_rows)
+            return attempt + 1, jnp.where(done, row, nrow), done, seen
+
+        st = (jnp.zeros((), _I), row0, ~m, jnp.zeros((), _I))
+        _, _, _, seen = jax.lax.while_loop(cond, body, st)
+        cnt_ref[0, j] = seen
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def retrieve_multi_call(tk, qa0, ra0, keys2d, mask2d, *, seed, max_probes,
+                        scheme="cops", collect=True, interpret=True):
+    """Fused retrieval walk: keys2d/mask2d (G, T); qa0/ra0 the sentinel-
+    initialized (p, W) arena planes (aliased in/out) — pass (1, 1) dummies
+    with ``collect=False`` for the counts-only walk (no arena writes).
+
+    Returns (qarena, rank_arena, counts2d).
+    """
+    num_rows, window = tk.shape
+    g, tile = keys2d.shape
+    kern = functools.partial(
+        _retrieve_kernel, num_rows=num_rows, window=window, seed=seed,
+        max_probes=max_probes, scheme=scheme, collect=collect)
+    full = pl.BlockSpec((num_rows, window), lambda i: (0, 0))
+    arena = pl.BlockSpec(qa0.shape, lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, full, arena, arena],
+        out_specs=[arena, arena, row_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct(qa0.shape, _I),
+            jax.ShapeDtypeStruct(ra0.shape, _I),
+            jax.ShapeDtypeStruct((g, tile), _I),
+        ],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(keys2d, mask2d, tk, qa0, ra0)
+
+
+# ---------------------------------------------------------------------------
 # 64-bit keys: two u32 planes (hi, lo) — DESIGN.md §2.  The window match is
 # two vector compares ANDed; sentinels live on plane 0.  This is the kernel
 # path for the paper's "beyond 32-bit" claim (WarpDrive was 32-bit-only).

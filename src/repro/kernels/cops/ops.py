@@ -180,6 +180,79 @@ def _lookup64_jit(tk0, tk1, tv, k0, k1, *, seed, max_probes, scheme, tile,
     return v2.reshape(-1)[:n], f2.reshape(-1)[:n] != 0
 
 
+# ---------------------------------------------------------------------------
+# fused multi-value retrieval — the walk tile + the engine's compaction
+# ---------------------------------------------------------------------------
+
+def _retrieve_ok(table) -> bool:
+    return (table.layout == "soa" and table.key_words == 1
+            and table.scheme in ("cops", "linear"))
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme",
+                                             "tile", "sentinel", "collect",
+                                             "interpret"))
+def _retrieve_walk_jit(tk, keys, active, *, seed, max_probes, scheme, tile,
+                       sentinel, collect, interpret):
+    num_rows, window = tk.shape
+    k2, n = _tile_batch(keys, tile, EMPTY_KEY)
+    m2, _ = _tile_batch(active.astype(_I), tile, 0)
+    ashape = (num_rows, window) if collect else (1, 1)
+    qa0 = jnp.full(ashape, _I(sentinel), _I)
+    ra0 = jnp.zeros(ashape, _I)
+    qa, ra, cnt2 = K.retrieve_multi_call(tk, qa0, ra0, k2, m2, seed=seed,
+                                         max_probes=max_probes, scheme=scheme,
+                                         collect=collect, interpret=interpret)
+    return cnt2.reshape(-1)[:n], qa.reshape(-1), ra.reshape(-1)
+
+
+def _fused_walk_pallas(table, keys_n, live, collect=True):
+    """Dedup front-end + kernel walk; returns (is_rep, rep_of, rcnt, qa, ra)."""
+    from repro.core import bulk_retrieve as br
+    n = keys_n.shape[0]
+    is_rep, rep_of = br.group_queries(keys_n, live)
+    tile = min(K.DEFAULT_TILE, n)
+    rcnt, qa, ra = _retrieve_walk_jit(
+        table.store["keys"][0], keys_n[:, 0], is_rep, seed=table.seed,
+        max_probes=table.max_probes, scheme=table.scheme, tile=tile,
+        sentinel=n, collect=collect, interpret=should_interpret())
+    return is_rep, rep_of, rcnt, qa, ra
+
+
+def count_multi(table, keys, mask=None):
+    """MultiValueHashTable counting pass via the counts-only walk tile
+    (no arena planes allocated or written)."""
+    from repro.core import bulk_retrieve as br
+    from repro.core import single_value as sv
+    keys_n = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys_n.shape[0]
+    if n == 0 or not _retrieve_ok(table):
+        return br.count_multi(table, keys_n, mask)
+    live = jnp.ones((n,), bool) if mask is None else mask
+    _, rep_of, rcnt, _, _ = _fused_walk_pallas(table, keys_n, live,
+                                               collect=False)
+    return br._fan_out(rcnt, rep_of, live, n)
+
+
+def retrieve_all_multi(table, keys, out_capacity, mask=None):
+    """MultiValueHashTable retrieve_all: one kernel walk, then the
+    bulk-retrieval engine's scatter/gather compaction."""
+    from repro.core import bulk_retrieve as br
+    from repro.core import single_value as sv
+    keys_n = sv.normalize_words(keys, table.key_words, "keys")
+    n = keys_n.shape[0]
+    if n == 0 or not _retrieve_ok(table):
+        return br.retrieve_all_multi(table, keys_n, out_capacity, mask)
+    live = jnp.ones((n,), bool) if mask is None else mask
+    is_rep, rep_of, rcnt, qa, ra = _fused_walk_pallas(table, keys_n, live)
+    counts = br._fan_out(rcnt, rep_of, live, n)
+    out, offsets, counts = br._emit(table, out_capacity, counts, is_rep,
+                                    rep_of, rcnt, qa, ra)
+    if table.value_words == 1:
+        return out[:, 0], offsets, counts
+    return out, offsets, counts
+
+
 def retrieve(table, keys):
     """Batch lookup via the Pallas kernel -> (values, found)."""
     from repro.core import single_value as sv

@@ -54,6 +54,18 @@ _CALLS_RE = re.compile(r"(?:body|calls)=(%[\w.\-]+)")
 _COND_RE = re.compile(r"condition=(%[\w.\-]+)")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERAND_NAME_RE = re.compile(r"%[\w.\-]+")
+
+
+def _operand_names(operands: str) -> list[str]:
+    """Operand names of an instruction, tolerating both HLO text shapes.
+
+    Older XLA prints bare names (``dot(%a, %b)``); 0.4.x-era XLA prefixes
+    each operand with its type (``dot(f32[8,64]{1,0} %a, ...)``), where a
+    naive comma split breaks on the dims inside ``[...]``.  Extracting the
+    ``%name`` tokens handles both.
+    """
+    return _OPERAND_NAME_RE.findall(operands)
 
 
 def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
@@ -139,7 +151,7 @@ def census(hlo_text: str, default_group: int = 1) -> Census:
 
     def _dus_update_bytes(operands: str) -> int | None:
         """Bytes of the update operand (arg 1) of a dynamic-update-slice."""
-        args = [a.strip() for a in operands.split(",")]
+        args = _operand_names(operands)
         if len(args) >= 2 and args[1] in name_type:
             return _shape_elems_bytes(name_type[args[1]])[1]
         return None
@@ -209,11 +221,12 @@ def census(hlo_text: str, default_group: int = 1) -> Census:
             name, rtype, op = im.groups()
             elems, nbytes = _shape_elems_bytes(rtype)
             if op == "dot":
-                ops_m = re.search(r"dot\((%[\w.\-]+), (%[\w.\-]+)\)", ln)
+                ops_m = re.search(r"dot\((.*?)\), ", ln + ", ")
+                dot_args = _operand_names(ops_m.group(1)) if ops_m else []
                 k = 1
                 cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
-                if ops_m and cd and ops_m.group(1) in name_type:
-                    lhs_dims = _SHAPE_RE.search(name_type[ops_m.group(1)])
+                if dot_args and cd and dot_args[0] in name_type:
+                    lhs_dims = _SHAPE_RE.search(name_type[dot_args[0]])
                     if lhs_dims:
                         dims = [int(d) for d in lhs_dims.group(2).split(",") if d]
                         for i in cd.group(1).split(","):

@@ -12,6 +12,9 @@ module offers:
   is the output layout).
 
 Pure, jittable, pytree-functional, like the rest of repro.relational.
+Membership re-checks (``hs.contains`` on the running set) ride the fused
+bulk-retrieval engine's dedup walk on the default backend, like every
+other retrieval consumer.
 """
 
 from __future__ import annotations

@@ -104,7 +104,12 @@ def update(table: GroupByTable, agg: str, keys, values=None, mask=None,
 
 
 def lookup(table: GroupByTable, agg: str, keys) -> tuple[jax.Array, jax.Array]:
-    """Per-key aggregate -> (values, found).  ``mean`` returns float32."""
+    """Per-key aggregate -> (values, found).  ``mean`` returns float32.
+
+    Rides ``single_value.retrieve``'s backend dispatch: the default path
+    is the fused bulk-retrieval engine (duplicate lookup keys probe the
+    table once), ``backend="scan"`` the direct reference walk.
+    """
     vals, found = sv.retrieve(table, keys)
     return _finalize_planes(agg, vals[:, 0], vals[:, 1], found), found
 

@@ -10,12 +10,15 @@ Classic two-phase GPU hash join, rendered on the repo's table primitives:
   ``backend="scan"`` selects the sequential reference and
   ``backend="pallas"`` the COPS kernel — all bit-identical, so join
   results never depend on the build backend;
-- **probe** — the probe side runs the paper's counting-pass + prefix-sum
-  output-sizing pattern (§IV-B.4): ``count_values`` sizes the match list
-  per probe row, a cumulative sum lays out the output, and
-  ``retrieve_all`` gathers the matching build row indices into that
-  layout.  ``out_capacity`` is static (jit shape) exactly like the
-  paper's pre-sized output arrays.
+- **probe** — the probe side keeps the paper's prefix-sum output layout
+  (§IV-B.4) but, on the default backend, produces it with the fused
+  bulk-retrieval engine (``repro.core.bulk_retrieve``): ONE probe walk
+  emits the per-row match counts *and* the gathered build row indices
+  (inner/left go through ``retrieve_all``, semi/anti through
+  ``count_values`` — all four flavors ride the same engine; duplicate
+  probe keys walk the table once).  ``backend="scan"`` keeps the
+  two-walk count-then-gather reference.  ``out_capacity`` is static
+  (jit shape) exactly like the paper's pre-sized output arrays.
 
 All operators are pure pytree functions: jit them, vmap them, or fuse
 them into larger computations.  Tombstoned (erased) build rows drop out

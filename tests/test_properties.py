@@ -187,6 +187,91 @@ class TestMultisplitProperties:
             assert sk[so == p].tolist() == orig
 
 
+class TestInsertEraseRetrieveRoundTrip:
+    """Round-trip invariants across BOTH backends: after insert -> erase ->
+    retrieve, erased keys retrieve empty, survivors keep their exact value
+    multisets, and the live count matches the distinct live keys."""
+
+    @SETTINGS
+    @given(pairs=st.lists(st.tuples(st.integers(1, 25),
+                                    st.integers(0, 10 ** 6)),
+                          min_size=1, max_size=80),
+           erase_keys=st.lists(st.integers(1, 30), max_size=15),
+           backend=st.sampled_from(["jax", "scan"]),
+           window=st.sampled_from([4, 16]))
+    def test_multi_value_round_trip(self, pairs, erase_keys, backend, window):
+        t = mv.create(1024, window=window, backend=backend)
+        model: dict = {}
+        ks = jnp.asarray([p[0] for p in pairs], jnp.uint32)
+        vs = jnp.asarray([p[1] for p in pairs], jnp.uint32)
+        for k, v in pairs:
+            model.setdefault(k, []).append(v & 0xFFFFFFFF)
+        t, _ = mv.insert(t, ks, vs)
+        if erase_keys:
+            ek = jnp.asarray(erase_keys, jnp.uint32)
+            t, ecnt = mv.erase(t, ek)
+            # every occurrence (duplicates included) reports the key's full
+            # pre-erase multiplicity: the batch walk reads each window once
+            for i, k in enumerate(erase_keys):
+                assert int(ecnt[i]) == len(model.get(k, []))
+            for k in erase_keys:
+                model.pop(k, None)
+        # live pair count == surviving multiset size
+        assert int(t.count) == sum(map(len, model.values()))
+        q = jnp.arange(1, 31, dtype=jnp.uint32)
+        cnt = mv.count_values(t, q)
+        for i, k in enumerate(range(1, 31)):
+            assert int(cnt[i]) == len(model.get(k, []))
+        out, off, _ = mv.retrieve_all(t, q, out_capacity=len(pairs) + 1)
+        out, off = np.asarray(out), np.asarray(off)
+        for i, k in enumerate(range(1, 31)):
+            got = sorted(out[off[i]:off[i + 1]].tolist())
+            assert got == sorted(model.get(k, [])), \
+                f"key {k} multiset mismatch on backend={backend}"
+
+    @SETTINGS
+    @given(ops=ops_st(), backend=st.sampled_from(["jax", "scan"]),
+           window=st.sampled_from([4, 16]))
+    def test_single_value_round_trip(self, ops, backend, window):
+        t = sv.create(512, window=window, backend=backend)
+        model = {}
+        for op, k, v in ops:
+            ka = jnp.asarray([k], jnp.uint32)
+            if op == "insert":
+                t, _ = sv.insert(t, ka, jnp.asarray([v], jnp.uint32))
+                model[k] = v & 0xFFFFFFFF
+            else:
+                t, er = sv.erase(t, ka)
+                assert bool(er[0]) == (k in model)
+                model.pop(k, None)
+        assert int(t.count) == len(model)   # live count == distinct live keys
+        q = jnp.arange(1, 41, dtype=jnp.uint32)
+        got, found = sv.retrieve(t, q)
+        for i, k in enumerate(range(1, 41)):
+            assert bool(found[i]) == (k in model)
+            if k in model:
+                assert int(got[i]) == model[k]
+
+    @SETTINGS
+    @given(keys=st.lists(st.integers(1, 40), min_size=1, max_size=60),
+           backend=st.sampled_from(["jax", "scan"]))
+    def test_erase_then_reinsert_recovers(self, keys, backend):
+        """erase(k); insert(k, v') must behave as if k was never there."""
+        ka = jnp.asarray(np.unique(np.asarray(keys, np.uint32)))
+        t = sv.create(256, backend=backend)
+        t, _ = sv.insert(t, ka, ka)
+        t, er = sv.erase(t, ka)
+        assert np.asarray(er).all()
+        assert int(t.count) == 0
+        _, found = sv.retrieve(t, ka)
+        assert not np.asarray(found).any()  # erased keys retrieve empty
+        t, stt = sv.insert(t, ka, ka * 2)
+        assert (np.asarray(stt) == STATUS_INSERTED).all()
+        got, found = sv.retrieve(t, ka)
+        assert np.asarray(found).all()
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ka) * 2)
+
+
 class TestLayoutEquivalence:
     @SETTINGS
     @given(keys=keys_st, window=st.sampled_from([8, 32]))
