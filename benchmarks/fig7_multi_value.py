@@ -9,30 +9,68 @@ Contestants (paper §V-B):
 Claims validated in shape: OA degrades as r grows (longer probe chains);
 bucket lists stay ~flat and overtake OA at high r; tuned growth (BL-2)
 allocates fewer buckets than default (BL-1).
+
+The ``bulk-vs-scan`` section compares the bucket list's batched engine
+build (``backend="jax"`` — sort/segment dedup + prefix-sum bucket
+allocator + scatter-arbitration handle claims) and its fused chain-walk
+retrieval against the sequential ``backend="scan"`` reference, same
+table, same batch.  The comparison RAISES on any state or output
+mismatch (key-store planes, handles, pool, alloc_top, statuses, values/
+offsets/counts), so every run — including the CI smoke step — doubles as
+the bucket-store parity gate.
+
+Set ``REPRO_BENCH_SMOKE=1`` for the small smoke config (CI).
 """
 
 from __future__ import annotations
+
+import os
+import time as _time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import row, time_fn
-from repro.configs.warpcore import CONFIG
+from repro.configs.warpcore import CONFIG, SMOKE
 from repro.core import bucket_list as bl
 from repro.core import multi_value as mv
 
+PARITY_R = 8                     # multiplicity of the bulk-vs-scan section
+
+
+def _cfg():
+    return SMOKE if os.environ.get("REPRO_BENCH_SMOKE") else CONFIG
+
+
+def _workload(n, r):
+    n_keys = max(1, n // r)
+    base = np.random.default_rng(r).choice(
+        np.arange(1, 8 * n_keys, dtype=np.uint32), n_keys, replace=False)
+    keys = jnp.asarray(np.repeat(base, r))
+    vals = jnp.arange(n_keys * r, dtype=jnp.uint32)
+    return keys, vals, jnp.asarray(base), n_keys
+
+
+def _assert_bl_parity(tb, ts, stb, sts):
+    for pb, ps in zip(jax.tree_util.tree_leaves(tb.key_store.store),
+                      jax.tree_util.tree_leaves(ts.key_store.store)):
+        if not bool(jnp.array_equal(pb, ps)):
+            raise AssertionError("bucket-list bulk/scan key-store mismatch")
+    for name, a, b in (("pool", tb.pool, ts.pool),
+                       ("alloc_top", tb.alloc_top, ts.alloc_top),
+                       ("count", tb.key_store.count, ts.key_store.count),
+                       ("status", stb, sts)):
+        if not bool(jnp.array_equal(a, b)):
+            raise AssertionError(f"bucket-list bulk/scan {name} mismatch")
+
 
 def run(out=print):
-    n = CONFIG.n_pairs // 2
+    cfg = _cfg()
+    n = cfg.n_pairs // 2
     load = 0.8
-    for r in CONFIG.multiplicities:
-        n_keys = max(1, n // r)
-        base = np.random.default_rng(r).choice(
-            np.arange(1, 8 * n_keys, dtype=np.uint32), n_keys, replace=False)
-        keys = jnp.asarray(np.repeat(base, r))
-        vals = jnp.arange(n_keys * r, dtype=jnp.uint32)
-        q = jnp.asarray(base)
+    for r in cfg.multiplicities:
+        keys, vals, q, n_keys = _workload(n, r)
         total = n_keys * r
 
         for name, mk in {
@@ -50,7 +88,7 @@ def run(out=print):
             out(row(f"fig7.retrieve.{name}.r{r}", sec_r, total))
 
         for name, (growth, s0) in {
-            "wc-bl-1": (CONFIG.bl_growth_default[0], CONFIG.bl_growth_default[1]),
+            "wc-bl-1": (cfg.bl_growth_default[0], cfg.bl_growth_default[1]),
             "wc-bl-2": (1.0, r),
         }.items():
             t0 = bl.create(int(n_keys / load), pool_capacity=2 * total + 64,
@@ -64,6 +102,61 @@ def run(out=print):
             out(row(f"fig7.insert.{name}.r{r}", sec_i, total,
                     extra=f"pool_used={used}"))
             out(row(f"fig7.retrieve.{name}.r{r}", sec_r, total))
+
+    # bucket-list engine vs sequential-scan reference (PR-trajectory rows +
+    # parity gate).  Same geometry, same batch; only the backend differs.
+    r = PARITY_R
+    keys, vals, q, n_keys = _workload(n, r)
+    total = n_keys * r
+    mk = lambda backend: bl.create(int(n_keys / load),
+                                   pool_capacity=2 * total + 64, s0=1,
+                                   growth=1.1, backend=backend)
+    t_bulk, t_scan = mk("jax"), mk("scan")
+    ins = jax.jit(lambda t, k, v: bl.insert(t, k, v))
+    jax.block_until_ready(ins(t_bulk, keys, vals))
+    jax.block_until_ready(ins(t_scan, keys, vals))
+    tb_s, ts_s = [], []
+    for _ in range(5):
+        a = _time.perf_counter()
+        jax.block_until_ready(ins(t_bulk, keys, vals))
+        tb_s.append(_time.perf_counter() - a)
+        a = _time.perf_counter()
+        jax.block_until_ready(ins(t_scan, keys, vals))
+        ts_s.append(_time.perf_counter() - a)
+    sec_b, sec_s = min(tb_s), min(ts_s)
+    # parity gate on the full post-insert state + statuses
+    t_bulk, stb = ins(t_bulk, keys, vals)
+    t_scan, sts = ins(t_scan, keys, vals)
+    _assert_bl_parity(t_bulk, t_scan, stb, sts)
+    out(row(f"fig7.insert.wc-bl-1.bulk.r{r}", sec_b, total,
+            extra=f"speedup-vs-scan={sec_s / sec_b:.2f}x,parity=ok"))
+    out(row(f"fig7.insert.wc-bl-1.scan.r{r}", sec_s, total))
+
+    # fused chain-walk retrieval vs the two-pass reference, duplicate- and
+    # miss-riddled probe batch, with the same in-run parity gate
+    probe = jnp.concatenate([keys, q + jnp.uint32(1)])
+    ret = jax.jit(lambda t, k: bl.retrieve_all(t, k, total))
+    jax.block_until_ready(ret(t_bulk, probe))
+    jax.block_until_ready(ret(t_scan, probe))
+    tf, tw = [], []
+    for _ in range(5):
+        a = _time.perf_counter()
+        jax.block_until_ready(ret(t_bulk, probe))
+        tf.append(_time.perf_counter() - a)
+        a = _time.perf_counter()
+        jax.block_until_ready(ret(t_scan, probe))
+        tw.append(_time.perf_counter() - a)
+    sec_f, sec_w = min(tf), min(tw)
+    vf, of, cf = ret(t_bulk, probe)
+    vw_, ow, cw = ret(t_scan, probe)
+    for name, a, b in (("values", vf, vw_), ("offsets", of, ow),
+                       ("counts", cf, cw)):
+        if not bool(jnp.array_equal(a, b)):
+            raise AssertionError(
+                f"bucket-list fused/scan retrieval mismatch on {name}")
+    out(row(f"fig7.retrieve.wc-bl-1.fused.r{r}", sec_f, total,
+            extra=f"speedup-vs-twopass={sec_w / sec_f:.2f}x,parity=ok"))
+    out(row(f"fig7.retrieve.wc-bl-1.twopass.r{r}", sec_w, total))
 
 
 if __name__ == "__main__":

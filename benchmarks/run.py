@@ -7,7 +7,9 @@ shards) are the reproduction target — see EXPERIMENTS.md §Paper-claims.
 
 Usage::
 
-    python -m benchmarks.run [fig5|fig6|fig7|fig8|fig9] [--csv PATH] [--json PATH]
+    python -m benchmarks.run [fig5|fig6|fig7|fig8|fig9 ...] [--csv PATH] [--json PATH]
+
+Any number of figures may be named (e.g. ``fig7 fig8``); none means all.
 
 ``--csv PATH`` mirrors every CSV row (header + data, comments excluded)
 into PATH; ``--json PATH`` writes the parsed rows — name, us_per_call and
@@ -52,8 +54,8 @@ def main(argv=None) -> None:
         "fig9": fig9_relational.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("only", nargs="?", choices=sorted(figures),
-                    help="run a single figure")
+    ap.add_argument("only", nargs="*", choices=sorted(figures),
+                    help="run only the named figure(s); default: all")
     ap.add_argument("--csv", metavar="PATH",
                     help="also write the CSV rows to PATH")
     ap.add_argument("--json", metavar="PATH",
@@ -76,7 +78,7 @@ def main(argv=None) -> None:
     try:
         out("name,us_per_call,derived,extra")
         for name, fn in figures.items():
-            if args.only and name != args.only:
+            if args.only and name not in args.only:
                 continue
             current[0] = name
             t0 = time.time()

@@ -21,6 +21,40 @@ encoding for layout fidelity and cheap invariant checks.
 Because the handle carries the count, ``count_values`` is O(1) per key (no
 probe walk) — one of the structure's practical wins over the pure OA
 multi-value table.
+
+**Engines.**  Like every other table in the library, the bucket store now
+rides the shared bulk engines instead of private walks:
+
+- ``insert`` (default ``backend="jax"``) is the **batched build**: the
+  bulk engine's sort/segment dedup groups the batch per key, a
+  *prefix-sum bucket allocator* turns per-key demand into one
+  bump-allocation sweep over the pool (each bucket-opening element reads
+  its bucket's base address straight off an exclusive prefix sum over the
+  batch — exactly the addresses the sequential bump allocator hands out),
+  and new keys claim their key-store slot through the engine's
+  window-level scatter arbitration (``bulk.place_claims``).  Pool
+  exhaustion and key-store overflow are resolved by a monotone fixpoint
+  that reproduces the sequential element order (see ``_insert_bulk``).
+- ``count_values``/``retrieve_all`` ride the **fused retrieval engine**:
+  the bucket chain is exposed as a *slot arena* over the value pool
+  (``layouts.StoreOps`` arena hook) — one chain walk stamps (query, rank)
+  per pool slot and ``bulk_retrieve._emit`` compacts it into the paper's
+  (values, offsets, counts) layout, duplicate queries walking once.
+- ``backend="scan"`` keeps the sequential ``lax.scan`` insert and the
+  private two-pass retrieval as the bit-exact parity reference;
+  ``backend="pallas"`` runs the chain walk as a COPS bucket-walk tile
+  (``repro.kernels.cops.bucket_walk_call``) with the compaction shared.
+
+Parity: ``backend="jax"`` matches ``backend="scan"`` bit for bit on
+handles, key-store planes, pool planes, alloc_top, statuses and retrieval
+outputs across duplicates, masks, growth schedules and pool exhaustion.
+One documented corner: a *new* key that simultaneously fails its first
+bucket allocation (pool exhausted) AND would find the key store full
+reports ``STATUS_POOL_FULL`` here but ``STATUS_FULL`` from the scan (the
+scan checks the probe first); state is identical either way — neither
+path writes anything.  (The count-field saturation regime at 2^22 values
+per key is likewise not bit-reproduced; the packed handle overflows in
+the reference as well.)
 """
 
 from __future__ import annotations
@@ -33,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import layouts, probing
+from repro.core import bulk, bulk_retrieve
 from repro.core.common import (
     DEFAULT_SEED,
     DEFAULT_WINDOW,
@@ -104,6 +138,10 @@ class BucketListHashTable:
     def key_capacity(self) -> int:
         return self.key_store.capacity
 
+    @property
+    def backend(self) -> str:
+        return self.key_store.backend
+
     def num_keys(self) -> jax.Array:
         return self.key_store.count
 
@@ -138,13 +176,29 @@ def create(key_capacity: int, pool_capacity: int, *, s0: int = 1,
 
 
 # ---------------------------------------------------------------------------
-# insertion — sequential over the batch
+# insertion — batched engine build by default; backend="scan" keeps the
+# sequential reference
 # ---------------------------------------------------------------------------
 
 def insert(table: BucketListHashTable, keys, values, mask=None,
            ) -> tuple[BucketListHashTable, jax.Array]:
     """Insert (key, value): new keys allocate their first bucket; existing keys
-    append to the tail bucket, growing the list when the tail is full."""
+    append to the tail bucket, growing the list when the tail is full.
+
+    Dispatches on the table's backend like every other table:
+    ``"jax"``/``"pallas"`` run the batched engine build (sort/segment
+    dedup + prefix-sum bucket allocator + scatter-arbitration handle
+    claims), ``"scan"`` the sequential reference — bit-identical state.
+    """
+    if table.backend != "scan":
+        return _insert_bulk(table, keys, values, mask)
+    return insert_scan(table, keys, values, mask)
+
+
+def insert_scan(table: BucketListHashTable, keys, values, mask=None,
+                ) -> tuple[BucketListHashTable, jax.Array]:
+    """Sequential-scan reference insert: one probe + alloc step per element
+    (the batched build's parity oracle)."""
     ks = table.key_store
     keys = sv.normalize_words(keys, ks.key_words, "keys")
     values = sv.normalize_words(values, 1, "values")
@@ -154,8 +208,7 @@ def insert(table: BucketListHashTable, keys, values, mask=None,
     words = sv.key_hash_word(keys)
     sizes = jnp.asarray(table.sizes, _I)
     cum = jnp.asarray(table.cum, _I)
-    tstatic = (ks.layout, ks.key_words, ks.num_rows, ks.window,
-               ks.scheme, ks.seed, ks.max_probes)
+    tstatic = (ks.ops, ks.scheme, ks.seed, ks.max_probes)
     pool_cap = table.pool_capacity
 
     def step(carry, inp):
@@ -163,8 +216,7 @@ def insert(table: BucketListHashTable, keys, values, mask=None,
         k, v, word, m = inp
         mode, row, lane = sv._probe_for_insert(tstatic, store, k, word)
         # current handle (valid when mode == 0)
-        old_handle = layouts.value_windows(ks.layout, store, row[None],
-                                           ks.key_words, 2)[0, :, lane]
+        old_handle = ks.ops.value_windows(store, row[None])[0, :, lane]
         ptr, count, bidx, state = unpack_handle(old_handle)
 
         is_new = (mode == 1)
@@ -215,11 +267,10 @@ def insert(table: BucketListHashTable, keys, values, mask=None,
                                    jnp.where(is_new & do_alloc, _I(2), _I(0))))
         oor = _U(ks.num_rows)
         hrow = jnp.where(case >= 1, row, oor)
-        store = layouts.scatter_values(ks.layout, store, hrow[None],
-                                       lane[None], handle[None], ks.key_words)
+        store = ks.ops.scatter_values(store, hrow[None], lane[None],
+                                      handle[None])
         krow = jnp.where(case == 2, row, oor)
-        store = layouts.scatter_keys(ks.layout, store, krow[None],
-                                     lane[None], k[None])
+        store = ks.ops.scatter_keys(store, krow[None], lane[None], k[None])
         kcount = kcount + jnp.where(case == 2, _I(1), _I(0))
 
         status = jnp.where(~m, _I(STATUS_MASKED),
@@ -236,8 +287,192 @@ def insert(table: BucketListHashTable, keys, values, mask=None,
                                alloc_top=top), status
 
 
+def _insert_bulk(table: BucketListHashTable, keys, values, mask,
+                 ) -> tuple[BucketListHashTable, jax.Array]:
+    """Batched build: dedup + prefix-sum bucket allocator + scatter claims.
+
+    Whole-batch rendering of the sequential insert, bit-exact against it:
+
+    1. **Group** — the bulk engine's stable (masked, key, index) sort makes
+       each key's live elements contiguous in batch order; element ``t`` of
+       a key carries running count ``c = count0 + t`` (``count0`` from the
+       pre-batch handle, 0 for new keys).  A value *opens* bucket ``j``
+       exactly when ``c == cum[j]`` — pure static arithmetic per element.
+    2. **Allocate** — bucket-opening elements draw their bucket's base
+       address from an exclusive prefix sum of allocation sizes in batch
+       order over the pool: precisely the addresses the sequential bump
+       allocator hands out.  Pool exhaustion is resolved by a refinement
+       loop: the earliest failing allocation in batch order is exact (its
+       prefix only involves earlier, consistent allocations), the failing
+       key is frozen from that element on (the sequential path retries the
+       same-size bucket against a non-decreasing top, so one failure is
+       terminal for the key), and the sweep repeats — one round per failing
+       key, none in the common no-overflow case.
+    3. **Claim** — new keys whose first allocation succeeded claim their
+       key-store slot through ``bulk.place_claims`` (window-level
+       scatter-min arbitration, priority = batch position).  Keys the
+       arbitration reports FULL never demanded pool, which feeds back into
+       step 2: the outer fixpoint alternates allocate/claim until stable
+       (one extra round at most unless overflow and fullness interact).
+    4. **Apply** — one pool scatter writes every value, one writes the
+       bucket links, one batched store scatter writes claimed keys and
+       final handles (count/bucket/tail-ptr read off the same arithmetic).
+    """
+    ks = table.key_store
+    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    values = sv.normalize_words(values, 1, "values")
+    n = keys.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    if n == 0:
+        return table, jnp.zeros((0,), _I)
+
+    sizes = jnp.asarray(table.sizes, _I)
+    cum = jnp.asarray(table.cum, _I)                    # (n_sizes + 1,)
+    n_sizes = len(table.sizes)
+    pool_cap = table.pool_capacity
+    top0 = table.alloc_top
+    tstat = (ks.ops, ks.scheme, ks.seed, ks.max_probes)
+
+    # ---- 1. group structure in the sorted domain ---------------------------
+    flag, skeys, sidx, vcols = bulk._sort_batch(keys, mask, [values[:, 0]])
+    svals = vcols[0]
+    live, is_rep, first_pos, last_pos = bulk._group_structure(flag, skeys)
+    pos = jnp.arange(n, dtype=_I)
+    t = pos - first_pos                                 # local rank in group
+    lsize = last_pos - first_pos + 1                    # live group size
+
+    swords = sv.key_hash_word(skeys)
+    matched, mrow, mlane = bulk.probe_matches(tstat, ks.store, skeys, swords,
+                                              is_rep, ks.count)
+    hwin = ks.ops.value_windows(ks.store, mrow)         # (n, 2, W)
+    handles = jnp.take_along_axis(
+        hwin, mlane.astype(_I)[:, None, None], axis=2)[:, :, 0]
+    ptr0_r, count0_r, bidx0_r, _ = unpack_handle(handles)
+    exists = matched[first_pos]                         # per element, via rep
+    ptr0 = jnp.where(exists, ptr0_r[first_pos].astype(_I), 0)
+    count0 = jnp.where(exists, count0_r[first_pos], 0)
+    bidx0 = jnp.where(exists, bidx0_r[first_pos], -1)
+
+    # ---- static bucket arithmetic per element ------------------------------
+    c = count0 + t                                      # running count pre-write
+    jr = jnp.searchsorted(cum, c).astype(_I)            # first j with cum[j] >= c
+    boundary = cum[jnp.clip(jr, 0, n_sizes)] == c       # opens bucket jr
+    sched_ok = jr < n_sizes
+    jv = jnp.clip(jr, 0, n_sizes - 1)
+    alloc_sz = sizes[jv] + (jv > 0).astype(_I)          # data + prev-link slot
+    jbkt = jnp.clip(jnp.searchsorted(cum, c, side="right").astype(_I) - 1,
+                    0, n_sizes - 1)                     # bucket holding value c
+    inf = _I(n + 1)
+
+    def _alloc_prefix(gdead, fullk):
+        """Admitted allocations + their bump addresses for the current
+        freeze/full assumption.  Returns (admit, trig, start_s)."""
+        admit = live & ~fullk[first_pos] & (t < gdead[first_pos])
+        trig = admit & boundary
+        size_eff = jnp.where(trig & sched_ok, alloc_sz, 0)
+        size_b = jnp.zeros((n,), _I).at[sidx].set(size_eff)     # batch order
+        start_b = top0 + jnp.cumsum(size_b) - size_b
+        return admit, trig, start_b[sidx]
+
+    def _alloc_fixpoint(fullk):
+        """Freeze keys at their first failing allocation (exact in batch
+        order; see step 2 of the module docstring)."""
+        def cond(st):
+            _, changed = st
+            return changed
+
+        def body(st):
+            gdead, _ = st
+            _, trig, start_s = _alloc_prefix(gdead, fullk)
+            fail = trig & (~sched_ok | (start_s + alloc_sz > pool_cap))
+            fpos = jnp.where(fail, sidx.astype(_I), n)
+            k = jnp.argmin(fpos)                        # earliest batch failure
+            found = fpos[k] < n
+            rp = first_pos[k]
+            gdead = gdead.at[jnp.where(found, rp, n)].min(t[k], mode="drop")
+            return gdead, found
+
+        gdead, _ = jax.lax.while_loop(
+            cond, body, (jnp.full((n,), inf, _I), jnp.ones((), bool)))
+        return gdead
+
+    # ---- 2+3. outer fixpoint: pool allocation <-> key-store arbitration ----
+    def ocond(st):
+        changed, *_ = st
+        return changed
+
+    def obody(st):
+        _, fullk, *_ = st
+        gdead = _alloc_fixpoint(fullk)
+        claim = is_rep & ~matched & (gdead > 0)         # first alloc succeeded
+        placed, crow, clane, full = bulk.place_claims(tstat, ks.store, swords,
+                                                      claim, sidx)
+        changed = jnp.any(full != fullk)
+        return changed, full, gdead, placed, crow, clane
+
+    z = jnp.zeros((n,), bool)
+    zu = jnp.zeros((n,), _U)
+    st0 = (jnp.ones((), bool), z, jnp.full((n,), inf, _I), z, zu, zu)
+    _, fullk, gdead, placed, crow, clane = jax.lax.while_loop(
+        ocond, obody, st0)
+
+    # ---- 4. apply ----------------------------------------------------------
+    admit, trig, start_s = _alloc_prefix(gdead, fullk)
+    size_eff = jnp.where(trig, alloc_sz, 0)             # all admitted trigs fit
+    new_top = top0 + jnp.sum(size_eff, dtype=_I)
+
+    # base address of each element's bucket: pre-existing tail keeps ptr0,
+    # in-batch buckets read the prefix-sum address off their opening element
+    # (sorted position first_pos + (cum[j] - count0) — directly addressable)
+    def bucket_start(j):
+        tpos = jnp.clip(first_pos + cum[jnp.clip(j, 0, n_sizes - 1)] - count0,
+                        0, n - 1)
+        inbatch = ~exists | (j != bidx0)
+        return jnp.where(inbatch, start_s[tpos], ptr0)
+
+    bstart = bucket_start(jbkt)
+    vpos = bstart + (jbkt > 0) + (c - cum[jbkt])
+    pool = table.pool
+    pool = pool.at[jnp.where(admit, vpos, pool_cap)].set(svals, mode="drop")
+    # prev-link writes of in-batch buckets j > 0
+    link = admit & trig & (jbkt > 0)
+    prev_ptr = bucket_start(jbkt - 1)
+    pool = pool.at[jnp.where(link, bstart, pool_cap)].set(
+        prev_ptr.astype(_U), mode="drop")
+
+    # final handle per group (valid at rep positions)
+    nwrit = jnp.where(fullk, 0, jnp.minimum(gdead, lsize))
+    wrote = is_rep & (nwrit > 0)
+    fcount = count0 + nwrit
+    fj = jnp.clip(jnp.searchsorted(cum, jnp.maximum(fcount - 1, 0),
+                                   side="right").astype(_I) - 1,
+                  0, n_sizes - 1)
+    fptr = bucket_start(fj)
+    fhandle = pack_handle(fptr.astype(_U), fcount, fj,
+                          jnp.full((n,), STATE_READY, _I))
+
+    oor = _U(ks.num_rows)
+    upd = matched & wrote                               # in-place handle update
+    row = jnp.where(matched, mrow, crow)
+    lane = jnp.where(matched, mlane, clane)
+    vrow = jnp.where(upd | placed, row, oor)
+    store = ks.ops.scatter_batch(ks.store, vrow, lane, skeys, fhandle, placed)
+    kcount = ks.count + jnp.sum(placed, dtype=_I)
+
+    status_s = jnp.where(~live, _I(STATUS_MASKED),
+                         jnp.where(admit, _I(STATUS_INSERTED),
+                                   jnp.where(fullk[first_pos], _I(STATUS_FULL),
+                                             _I(STATUS_POOL_FULL))))
+    status = jnp.zeros((n,), _I).at[sidx].set(status_s)
+
+    new_ks = dataclasses.replace(ks, store=store, count=kcount)
+    return dataclasses.replace(table, key_store=new_ks, pool=pool,
+                               alloc_top=new_top), status
+
+
 # ---------------------------------------------------------------------------
-# retrieval — O(1) counts from handles; vectorized lockstep bucket walk
+# retrieval — O(1) counts from handles; fused chain walk over the pool arena
 # ---------------------------------------------------------------------------
 
 def count_values(table: BucketListHashTable, keys) -> jax.Array:
@@ -247,15 +482,144 @@ def count_values(table: BucketListHashTable, keys) -> jax.Array:
     return jnp.where(found, count, 0)
 
 
+def _handle_probe(table: BucketListHashTable, keys_n):
+    """Dedup + one representative probe: the fused retrieval front-end.
+
+    Returns (is_rep, rep_of, found, ptr, rcnt, bidx, counts) — handle
+    fields are valid where ``found`` (matched representatives); ``counts``
+    is already fanned out to every duplicate query.
+    """
+    ks = table.key_store
+    n = keys_n.shape[0]
+    live = jnp.ones((n,), bool)
+    is_rep, rep_of = bulk_retrieve.group_queries(keys_n, live)
+    words = sv.key_hash_word(keys_n)
+    tstat = (ks.ops, ks.scheme, ks.seed, ks.max_probes)
+    matched, mrow, mlane = bulk.probe_matches(tstat, ks.store, keys_n, words,
+                                              is_rep, ks.count)
+    hwin = ks.ops.value_windows(ks.store, mrow)
+    handles = jnp.take_along_axis(
+        hwin, mlane.astype(_I)[:, None, None], axis=2)[:, :, 0]
+    ptr, cnt, bidx, _ = unpack_handle(handles)
+    found = is_rep & matched
+    rcnt = jnp.where(found, cnt, 0)
+    counts = bulk_retrieve._fan_out(rcnt, rep_of, live, n)
+    return is_rep, rep_of, found, ptr, rcnt, bidx, counts
+
+
+def chain_arena(table: BucketListHashTable, active, ptr, counts, bidx):
+    """Walk bucket chains tail->head, stamping the pool slot arena.
+
+    The bucket-list rendering of ``bulk_retrieve.fused_walk``'s arena: per
+    active query the chain is walked once (all queries in lockstep, one
+    bucket per round, fixed-width chunked vector reads), and every value
+    slot is stamped with (query index, value rank) — rank being the
+    value's head-first position ``cum[j] + lane``, exactly the order the
+    reference emits.  Distinct queries own disjoint chains, so stamps
+    never collide — the same invariant the OA walk gets from
+    one-key-per-slot.  Returns (qarena, rank_arena) over pool slots.
+    """
+    n = active.shape[0]
+    pool_cap = table.pool_capacity
+    sizes = jnp.asarray(table.sizes, _I)
+    cum = jnp.asarray(table.cum, _I)
+    max_rounds = len(table.sizes)
+    chunk = int(min(max(table.sizes), 128))
+    lanes_c = jnp.arange(chunk, dtype=_I)
+    qa = jnp.full((pool_cap,), _I(n))
+    ra = jnp.zeros((pool_cap,), _I)
+    idx = jnp.arange(n, dtype=_I)
+    j0 = jnp.where(active, bidx, -1)
+
+    def cond(st):
+        r, j, p, qa, ra = st
+        return jnp.logical_and(r < max_rounds, jnp.any(j >= 0))
+
+    def body(st):
+        r, j, p, qa, ra = st
+        act = j >= 0
+        jc = jnp.clip(j, 0, sizes.shape[0] - 1)
+        bsize = sizes[jc]
+        base = cum[jc]                                  # values before bucket j
+        has_link = j > 0
+        data_start = p.astype(_I) + has_link.astype(_I)
+        valid = jnp.minimum(counts - base, bsize)       # tail partially filled
+        maxv = jnp.max(jnp.where(act, valid, 0))
+
+        def ccond(cst):
+            cpos, qa, ra = cst
+            return cpos * chunk < maxv
+
+        def cbody(cst):
+            cpos, qa, ra = cst
+            lanes = cpos * chunk + lanes_c              # (chunk,)
+            gidx = data_start[:, None] + lanes[None, :]
+            ok = (lanes[None, :] < valid[:, None]) & act[:, None]
+            slot = jnp.where(ok, gidx, pool_cap).reshape(-1)
+            qv = jnp.broadcast_to(idx[:, None], gidx.shape).reshape(-1)
+            rv = (base[:, None] + lanes[None, :]).reshape(-1)
+            qa = qa.at[slot].set(qv, mode="drop")
+            ra = ra.at[slot].set(rv, mode="drop")
+            return cpos + 1, qa, ra
+
+        _, qa, ra = jax.lax.while_loop(ccond, cbody,
+                                       (jnp.zeros((), _I), qa, ra))
+        plink = table.pool[jnp.clip(p.astype(_I), 0, pool_cap - 1)]
+        p = jnp.where(act & has_link, plink, p)
+        j = jnp.where(act, j - 1, j)
+        return r + 1, j, p, qa, ra
+
+    _, _, _, qa, ra = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), _I), j0, ptr, qa, ra))
+    return qa, ra
+
+
 def retrieve_all(table: BucketListHashTable, keys, out_capacity: int,
                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Gather every value for each key by walking its bucket list tail->head
-    (Fig. 4).  All queried lists are walked in lockstep, one bucket per round,
-    with the full bucket read as one vector gather — the CG-cooperative
-    coalesced read adapted to the VPU."""
+    (Fig. 4).  Returns the paper's (values, offsets, counts) layout.
+
+    The default backend rides the fused retrieval engine: duplicate probe
+    keys walk once, the chain walk stamps the pool slot arena, and the
+    engine's shared compaction (``bulk_retrieve._emit``) packs the output.
+    ``"pallas"`` runs the chain walk as the COPS bucket-walk tile;
+    ``"scan"`` keeps the private two-pass reference — all bit-identical.
+    """
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.bucket_retrieve_all(table, keys, out_capacity)
+    if table.backend != "scan":
+        return _retrieve_fused(table, keys, out_capacity)
+    return retrieve_all_scan(table, keys, out_capacity)
+
+
+def _retrieve_fused(table: BucketListHashTable, keys, out_capacity: int,
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused path: dedup + one handle probe + one chain walk + shared emit."""
     ks = table.key_store
     keys = sv.normalize_words(keys, ks.key_words, "keys")
     n = keys.shape[0]
+    if n == 0:
+        return (jnp.zeros((out_capacity,), _U), jnp.zeros((1,), _I),
+                jnp.zeros((0,), _I))
+    is_rep, rep_of, found, ptr, rcnt, bidx, counts = _handle_probe(table, keys)
+    qa, ra = chain_arena(table, found, ptr, rcnt, bidx)
+    out, offsets, counts = bulk_retrieve._emit(
+        lambda s: table.pool[s][:, None], table.pool_capacity, out_capacity,
+        counts, is_rep, rep_of, rcnt, qa, ra)
+    return out[:, 0], offsets, counts
+
+
+def retrieve_all_scan(table: BucketListHashTable, keys, out_capacity: int,
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference two-pass retrieval: per-query handle lookup, then every
+    queried list walked in lockstep (no dedup, no shared compaction)."""
+    ks = table.key_store
+    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    n = keys.shape[0]
+    if n == 0:
+        return (jnp.zeros((out_capacity,), _U), jnp.zeros((1,), _I),
+                jnp.zeros((0,), _I))
     handles, found = sv.retrieve(ks, keys)
     ptr, count, bidx, _ = unpack_handle(handles)
     counts = jnp.where(found, count, 0)

@@ -70,7 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import layouts, probing
+from repro.core import probing
 from repro.core.common import (
     EMPTY_KEY,
     STATUS_FULL,
@@ -85,8 +85,8 @@ _I = jnp.int32
 
 
 def _tstatic(table):
-    return (table.layout, table.key_words, table.num_rows, table.window,
-            table.scheme, table.seed, table.max_probes)
+    """(store protocol, scheme, seed, max_probes) — the engines' static tuple."""
+    return (table.ops, table.scheme, table.seed, table.max_probes)
 
 
 # ---------------------------------------------------------------------------
@@ -98,7 +98,13 @@ COMBINE_OPS = {
     "add": (np.uint32(0), lambda a, b: a + b),
     "min": (np.uint32(0xFFFFFFFF), jnp.minimum),
     "max": (np.uint32(0), jnp.maximum),
+    "or": (np.uint32(0), jnp.bitwise_or),
+    "and": (np.uint32(0xFFFFFFFF), jnp.bitwise_and),
+    "xor": (np.uint32(0), jnp.bitwise_xor),
 }
+
+#: specs with no native scatter-reduce method; folded via bit planes
+_BITWISE = ("or", "and", "xor")
 
 
 def combine_callable(spec: Sequence[str]) -> Callable:
@@ -108,16 +114,45 @@ def combine_callable(spec: Sequence[str]) -> Callable:
                                    for w, op in enumerate(ops)])
 
 
+def _bitwise_scatter(name, gid, col, contrib, n):
+    """Per-group bitwise or/and/xor of ``col[contrib]`` via ONE scatter-add.
+
+    ``jnp.ndarray.at`` has no bitwise reducers, but every bitwise fold is a
+    per-bit-plane popcount question: decompose the operands into a (n, 32)
+    bit matrix, scatter-add it per group alongside the contributor count,
+    and read each bit back as any (or), all (and) or parity (xor) of its
+    plane.  Zero-contributor groups fall out as the op's identity (0 for
+    or/xor, 0xFFFFFFFF for and) automatically.
+    """
+    shifts = jnp.arange(32, dtype=_U)
+    bits = ((col[:, None] >> shifts[None, :]) & _U(1)).astype(_I)
+    bits = jnp.where(contrib[:, None], bits, 0)
+    acc = jnp.zeros((n, 32), _I).at[gid].add(bits)
+    if name == "xor":
+        plane = (acc & 1) > 0
+    elif name == "or":
+        plane = acc > 0
+    else:  # and: every contributor set the bit
+        cnt = jnp.zeros((n,), _I).at[gid].add(contrib.astype(_I))
+        plane = acc == cnt[:, None]
+    word = jnp.sum(jnp.where(plane, _U(1) << shifts[None, :], _U(0)), axis=1)
+    return word[gid]
+
+
 def _scatter_combine(spec, gid, vals, contrib):
     """Per-group combine of ``vals[contrib]`` via scatter-reduce -> (n, vw).
 
     Non-contributing elements scatter the op's identity, so each group cell
     holds exactly the fold over its contributors (the fast-lane rendering
-    of the general lane's segmented scan).
+    of the general lane's segmented scan).  add/min/max map directly onto
+    ``.at[]`` reducers; the bitwise specs run the bit-plane scatter-add.
     """
     n = gid.shape[0]
     out = []
     for w, name in enumerate(spec):
+        if name in _BITWISE:
+            out.append(_bitwise_scatter(name, gid, vals[:, w], contrib, n))
+            continue
         ident, _ = COMBINE_OPS[name]
         v = jnp.where(contrib, vals[:, w], ident)
         arena = jnp.full((n,), ident, _U)
@@ -241,7 +276,8 @@ def probe_matches(tstatic, store, keys, words, active, count=None):
     bulk-build-from-fresh case), the walk is skipped: an empty table can
     hold no match even if erases left tombstones behind.
     """
-    layout, key_words, num_rows, w, scheme, seed, max_probes = tstatic
+    ops, scheme, seed, max_probes = tstatic
+    num_rows, w = ops.num_rows, ops.window
     n = keys.shape[0]
     row0 = probing.initial_row(words, num_rows, seed)
     step = probing.row_step(scheme, words, num_rows, seed)
@@ -256,7 +292,7 @@ def probe_matches(tstatic, store, keys, words, active, count=None):
 
         def body(st):
             attempt, row, done, mrow, mlane, matched = st
-            win = layouts.key_windows(layout, store, row, key_words)
+            win = ops.key_windows(store, row)
             has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
             match = jnp.all(win == keys[:, :, None], axis=1)
             m_lane = probing.vote_lowest(match)
@@ -341,9 +377,10 @@ def place_claims(tstatic, store, words, claim, prio, prio_is_iota=False):
     sweep, so the fixpoint converges to the priority-greedy (= sequential)
     assignment.  Returns (placed, row, lane, full).
     """
-    layout, key_words, num_rows, w, scheme, seed, max_probes = tstatic
+    ops, scheme, seed, max_probes = tstatic
+    num_rows, w = ops.num_rows, ops.window
     n = prio.shape[0]
-    kp0 = layouts.key_planes(layout, store, key_words)[0]     # (p, W)
+    kp0 = ops.key_planes(store)[0]                            # (p, W)
     cand = (kp0 == EMPTY_KEY) | (kp0 == TOMBSTONE_KEY)
     if w <= 32:
         # pack each row's candidate lanes into one u32 ballot mask
@@ -428,46 +465,21 @@ def arbitrate(row, lane, claim, prio, num_rows, window):
 # step 4 — batched apply
 # ---------------------------------------------------------------------------
 
-def _scatter_batch(layout, store, rows, lanes, keys, vals, key_mask,
-                   num_rows, window):
-    """Batch scatter of keys (where key_mask) and vals at (rows, lanes).
-
-    SOA planes are scattered through their flattened (p*W,) view — 1-D
-    scatter indices take XLA's fast path; this is safe here because the
-    whole batch is one scatter (the scan path keeps the 2-D form, which
-    XLA updates in place inside the carry).  OOR rows flatten past p*W and
-    drop.
-    """
-    if layout != "soa":
-        oor = _U(num_rows)
-        store = layouts.scatter_values(layout, store, rows, lanes, vals,
-                                       keys.shape[1])
-        krow = jnp.where(key_mask, rows, oor)
-        return layouts.scatter_keys(layout, store, krow, lanes, keys)
-    idx = rows * _U(window) + lanes
-    kw, vw = keys.shape[1], vals.shape[1]
-    flat = num_rows * window
-    kplanes = store["keys"].reshape(kw, flat)
-    kidx = jnp.where(key_mask, idx, _U(flat))
-    for w in range(kw):
-        kplanes = kplanes.at[w, kidx].set(keys[:, w], mode="drop")
-    vplanes = store["values"].reshape(vw, flat)
-    for w in range(vw):
-        vplanes = vplanes.at[w, idx].set(vals[:, w], mode="drop")
-    return {"keys": kplanes.reshape(store["keys"].shape),
-            "values": vplanes.reshape(store["values"].shape)}
-
-
 def _apply(table, keys, matched, mrow, mlane, placed, crow, clane,
            matched_vals, claim_vals):
-    """One write phase: matched value scatters + placed key/value scatters."""
+    """One write phase: matched value scatters + placed key/value scatters.
+
+    The batched scatter itself lives in the store protocol
+    (``StoreOps.scatter_batch``): SOA scatters flattened planes (XLA's 1-D
+    fast path), AOS composes the per-kind scatters.
+    """
     oor = _U(table.num_rows)
     row = jnp.where(matched, mrow, crow)
     lane = jnp.where(matched, mlane, clane)
     vals = jnp.where(matched[:, None], matched_vals, claim_vals)
     vrow = jnp.where(matched | placed, row, oor)
-    store = _scatter_batch(table.layout, table.store, vrow, lane, keys,
-                           vals, placed, table.num_rows, table.window)
+    store = table.ops.scatter_batch(table.store, vrow, lane, keys, vals,
+                                    placed)
     return store, jnp.sum(placed, dtype=_I)
 
 
@@ -568,8 +580,7 @@ def update_single(table, keys, update_fn, combine, init, values, mask=None):
         return values, init
 
     agg_all, claim_vals = jax.lax.cond(has_dups, folded, plain, None)
-    old = layouts.value_windows(table.layout, table.store, mrow,
-                                table.key_words, vw)           # (n, vw, W)
+    old = table.ops.value_windows(table.store, mrow)           # (n, vw, W)
     old = jnp.take_along_axis(
         old, mlane.astype(_I)[:, None, None], axis=2)[:, :, 0]
     matched_vals = vfold(old, keys, agg_all)
@@ -593,8 +604,8 @@ def insert_multi(table, keys, values, mask=None):
                                         jnp.arange(n, dtype=_U),
                                         prio_is_iota=True)
     wrow = jnp.where(placed, row, _U(table.num_rows))
-    store = _scatter_batch(table.layout, table.store, wrow, lane, keys,
-                           values, placed, table.num_rows, table.window)
+    store = table.ops.scatter_batch(table.store, wrow, lane, keys, values,
+                                    placed)
     status = jnp.where(~mask, _I(STATUS_MASKED),
                        jnp.where(placed, _I(STATUS_INSERTED),
                                  _I(STATUS_FULL)))
@@ -668,8 +679,7 @@ def _update_general(table, tstat, keys, update_fn, combine, init, values,
                                          is_rep, table.count)
     placed, crow, clane, _ = place_claims(tstat, table.store, swords,
                                           is_rep & ~matched, sidx)
-    old = layouts.value_windows(table.layout, table.store, mrow,
-                                table.key_words, vw)
+    old = table.ops.value_windows(table.store, mrow)
     old = jnp.take_along_axis(
         old, mlane.astype(_I)[:, None, None], axis=2)[:, :, 0]
     matched_vals = vfold(old, skeys, agg_all)

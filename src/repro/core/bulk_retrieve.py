@@ -50,7 +50,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import layouts, probing
+from repro.core import probing
 from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
 
 _U = jnp.uint32
@@ -58,8 +58,8 @@ _I = jnp.int32
 
 
 def _tstatic(table):
-    return (table.layout, table.key_words, table.num_rows, table.window,
-            table.scheme, table.seed, table.max_probes)
+    """(store protocol, scheme, seed, max_probes) — the engines' static tuple."""
+    return (table.ops, table.scheme, table.seed, table.max_probes)
 
 
 def fused_ok(table) -> bool:
@@ -129,9 +129,10 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None):
     are collision-free by construction — the retrieval-side analogue of
     the build engine's unique (row, rank) placement invariant.
     """
-    layout, key_words, num_rows, w, scheme, seed, max_probes = tstatic
+    ops, scheme, seed, max_probes = tstatic
+    num_rows, w = ops.num_rows, ops.window
     n = keys.shape[0]
-    cap = num_rows * w
+    cap = ops.arena_capacity
     ashape = (cap,) if collect else (1,)
     # pack (query, rank) into one i32 arena when it cannot overflow —
     # halves the per-window scatter traffic on the hot path
@@ -152,7 +153,7 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None):
 
         def body(st):
             attempt, row, done, seen, qa, ra = st
-            win = layouts.key_windows(layout, store, row, key_words)
+            win = ops.key_windows(store, row)
             match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]
             has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
             if collect:
@@ -197,8 +198,8 @@ def _fan_out(rcnt, rep_of, live, n):
     return jnp.where(live, rcnt[safe], 0)
 
 
-def _emit(table, out_capacity, counts, is_rep, rep_of, rcnt, qarena,
-          rank_arena):
+def _emit(arena_values, cap, out_capacity, counts, is_rep, rep_of, rcnt,
+          qarena, rank_arena):
     """Pack the walk's arena into the prefix-sum output layout.
 
     One scatter orders matched slots representative-dense (walk order
@@ -206,10 +207,13 @@ def _emit(table, out_capacity, counts, is_rep, rep_of, rcnt, qarena,
     every query's segment.  Entries past each segment — and everything
     past the true total when ``out_capacity`` truncates — stay zero,
     matching the reference's drop-scatter semantics bit for bit.
+
+    ``arena_values`` is the store's slot-arena hook (``slots -> (m, vw)``,
+    cf. ``layouts.StoreOps.arena_values``) and ``cap`` its capacity: the
+    open-addressing tables expose row*W+lane slot ids, the bucket-list
+    table its value pool — either store shape rides this one compaction.
     """
     n = rep_of.shape[0]
-    vw = table.value_words
-    cap = table.num_rows * table.window
     offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
     # representative-dense base offsets, in batch order of representatives
     repc = jnp.where(is_rep, rcnt, 0)
@@ -228,10 +232,17 @@ def _emit(table, out_capacity, counts, is_rep, rep_of, rcnt, qarena,
     gpos = jnp.clip(rep_base[jnp.clip(rep_of[segc], 0, max(n - 1, 0))] + local,
                     0, cap - 1)
     slot = jnp.clip(rep_dense[gpos], 0, cap - 1)
-    vp = layouts.value_planes(table.layout, table.store, table.key_words, vw)
-    svals = vp.reshape(vw, cap)[:, slot].T                  # (out_capacity, vw)
+    svals = arena_values(slot)                              # (out_capacity, vw)
     out = jnp.where(valid[:, None], svals, 0)
     return out, offsets, counts
+
+
+def _emit_store(table, out_capacity, counts, is_rep, rep_of, rcnt, qarena,
+                rank_arena):
+    """_emit over an open-addressing table's own slot arena."""
+    return _emit(lambda s: table.ops.arena_values(table.store, s),
+                 table.ops.arena_capacity, out_capacity, counts, is_rep,
+                 rep_of, rcnt, qarena, rank_arena)
 
 
 # ---------------------------------------------------------------------------
@@ -271,8 +282,8 @@ def retrieve_all_multi(table, keys, out_capacity, mask=None):
         _tstatic(table), table.store, keys, words, is_rep, collect=True,
         count=table.count)
     counts = _fan_out(rcnt, rep_of, live, n)
-    out, offsets, counts = _emit(table, out_capacity, counts, is_rep, rep_of,
-                                 rcnt, qarena, rank_arena)
+    out, offsets, counts = _emit_store(table, out_capacity, counts, is_rep,
+                                       rep_of, rcnt, qarena, rank_arena)
     if vw == 1:
         return out[:, 0], offsets, counts
     return out, offsets, counts
@@ -291,9 +302,7 @@ def erase_multi(table, keys):
     words = sv.key_hash_word(keys)
     rcnt, qarena, _ = fused_walk(_tstatic(table), table.store, keys, words,
                                  is_rep, collect=True, count=table.count)
-    tomb = (qarena < n).reshape(table.num_rows, table.window)
-    store = layouts.tombstone_where(table.layout, table.store, tomb,
-                                    table.key_words)
+    store = table.ops.arena_tombstone(table.store, qarena < n)
     counts = _fan_out(rcnt, rep_of, live, n)
     erased = jnp.sum(jnp.where(is_rep, rcnt, 0), dtype=_I)
     return dataclasses.replace(table, store=store,
@@ -362,9 +371,8 @@ def erase_single(table, keys, mask=None):
         _tstatic(table), table.store, keys, words, is_rep, table.count)
     hit = is_rep & matched
     srows = jnp.where(hit, mrow, _U(table.num_rows))
-    store = layouts.scatter_key_word(table.layout, table.store, srows, mlane,
-                                     TOMBSTONE_KEY, table.key_words,
-                                     table.num_rows)
+    store = table.ops.scatter_key_word(table.store, srows, mlane,
+                                       TOMBSTONE_KEY)
     safe = jnp.clip(rep_of, 0, max(n - 1, 0))
     erased = live & matched[safe] & (rep_of < n)
     count = table.count - jnp.sum(hit, dtype=_I)

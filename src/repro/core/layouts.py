@@ -1,25 +1,59 @@
-"""Memory-layout abstraction: SOA / AOS / packed (paper §IV-A.1, Fig. 1).
+"""Store protocol: the memory-layout abstraction behind every table.
 
-A *store* is a dict of arrays holding ``key_words + value_words`` uint32
-words per slot, arranged as (num_rows, window) slots:
+The paper's §IV-A.1 layouts (SOA / AOS / packed, Fig. 1) used to live here
+as free functions dispatching on a layout *string*; every engine that
+wanted a new access pattern had to thread that string through and grow
+another ``if kind == "soa"`` ladder.  This module now exposes the layouts
+as a first-class **store protocol**: a small immutable ops object
+(:class:`StoreOps`) that binds the table geometry once and renders each
+access pattern the engines need —
 
-- ``soa``    — one (words, p, W) plane-major array per kind; vector loads of a
-               probe window touch only key words.  **Default on TPU** (the
-               paper itself notes SOA wins when only keys are probed, and the
-               VPU is 32-bit native — DESIGN.md §2).
-- ``aos``    — a single (p, W, key_words + value_words) slot-major array;
-               key+value of one slot are adjacent (paper: better when both are
-               always touched).
-- ``packed`` — AOS restricted to key_words == value_words == 1, the analogue
-               of the paper's 64-bit packed-AOS.  On GPU its point is single-
-               CAS atomicity; on TPU atomicity is moot (ownership
-               partitioning), so it is AOS with an enforced width.
+- **key-plane reads** (``key_planes`` / ``value_planes``): whole-table
+  plane views, the probe engines' row-candidate scans;
+- **window gathers** (``key_windows`` / ``value_windows``): batched probe
+  windows for a vector of rows — one vectorized COPS window per element;
+- **slot writes** (``write_slot`` / ``write_value`` and the batched
+  ``scatter_keys`` / ``scatter_values`` / ``scatter_batch``): functional
+  claims and RMW stores, masked through out-of-range-drop scatters;
+- **tombstones** (``scatter_key_word`` / ``tombstone_where``): the erase
+  paths' in-band deletion writes;
+- the **slot arena** (``arena_capacity`` / ``arena_values`` /
+  ``arena_tombstone``): a flat slot-indexed view of the store.  The fused
+  bulk-retrieval engine records matches as flat slot ids during its single
+  walk and compacts them afterwards; any store that can gather values (and
+  write tombstones) by flat slot id can ride that engine.  For the
+  open-addressing layouts a slot id is ``row * window + lane``; the
+  bucket-list table exposes its value *pool* through the same hook
+  (``repro.core.bucket_list``), which is what lets one walk/compaction
+  implementation serve both store shapes.
 
-All writes are functional (returns a new store).  64-bit keys/values use two
-u32 words (hi, lo ordering: word 0 is the PRIMARY plane carrying sentinels).
+Concrete protocols:
+
+- :class:`SoaOps`    — one (words, p, W) plane-major array per kind;
+  vector loads of a probe window touch only key words.  **Default on TPU**
+  (the paper notes SOA wins when only keys are probed; the VPU is 32-bit
+  native — DESIGN.md §2).  ``planar`` is True: plane arrays can be handed
+  to the Pallas kernels directly.
+- :class:`AosOps`    — a single (p, W, key_words + value_words) slot-major
+  array; key+value of one slot are adjacent (paper: better when both are
+  always touched).
+- :class:`PackedOps` — AOS restricted to 1-word keys and values, the
+  analogue of the paper's 64-bit packed-AOS.  On GPU its point is
+  single-CAS atomicity; on TPU atomicity is moot (ownership partitioning),
+  so it is AOS with an enforced width.
+
+Tables keep a ``layout`` string for construction/serialization, but no
+consumer dispatches on it: ``make_ops(layout, ...)`` (cached) resolves it
+to the protocol object once and everything downstream calls methods.
+All writes are functional (return a new store).  64-bit keys/values use
+two u32 words (hi, lo ordering: word 0 is the PRIMARY plane carrying
+sentinels).
 """
 
 from __future__ import annotations
+
+import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -32,138 +66,258 @@ _U = jnp.uint32
 LAYOUTS = ("soa", "aos", "packed")
 
 
-def _check(kind: str, key_words: int, value_words: int) -> None:
-    if kind not in LAYOUTS:
-        raise ValueError(f"layout {kind!r} not in {LAYOUTS}")
-    if kind == "packed" and (key_words != 1 or value_words != 1):
-        raise ValueError("packed layout requires 1-word keys and values")
+@dataclasses.dataclass(frozen=True)
+class StoreOps:
+    """Base store protocol: geometry-bound layout operations.
+
+    Frozen (hashable) so instances can ride in jit-static table metadata
+    and the engines' ``tstatic`` tuples.  Subclasses implement the SOA and
+    AOS renderings; everything here is layout-independent arithmetic.
+    """
+
+    num_rows: int
+    window: int
+    key_words: int
+    value_words: int
+
+    kind = "base"
+    #: plane arrays individually addressable (SOA) — the Pallas kernels'
+    #: eligibility predicate (they take bare (p, W) planes).
+    planar = False
+
+    # -- slot arena (flat slot-id view; shared by SOA/AOS) -------------------
+    @property
+    def arena_capacity(self) -> int:
+        """Number of flat slot ids: ``num_rows * window``."""
+        return self.num_rows * self.window
+
+    def arena_values(self, store: dict, slots: jax.Array) -> jax.Array:
+        """Gather value vectors (n, value_words) at flat slot ids.
+
+        The fused-retrieval compaction hook: ``slots`` are walk-arena slot
+        ids (callers clip into range; every gathered lane is masked by the
+        caller's validity anyway).
+        """
+        vp = self.value_planes(store)
+        return vp.reshape(self.value_words, self.arena_capacity)[:, slots].T
+
+    def arena_tombstone(self, store: dict, occupied: jax.Array) -> dict:
+        """Tombstone every slot where the flat (capacity,) mask is set."""
+        return self.tombstone_where(
+            store, occupied.reshape(self.num_rows, self.window))
 
 
-def create(kind: str, num_rows: int, window: int, key_words: int,
-           value_words: int) -> dict:
-    _check(kind, key_words, value_words)
-    if kind == "soa":
+@dataclasses.dataclass(frozen=True)
+class SoaOps(StoreOps):
+    kind = "soa"
+    planar = True
+
+    def create(self) -> dict:
         return {
-            "keys": jnp.full((key_words, num_rows, window), EMPTY_KEY, dtype=_U),
-            "values": jnp.zeros((value_words, num_rows, window), dtype=_U),
+            "keys": jnp.full((self.key_words, self.num_rows, self.window),
+                             EMPTY_KEY, dtype=_U),
+            "values": jnp.zeros((self.value_words, self.num_rows, self.window),
+                                dtype=_U),
         }
-    words = key_words + value_words
-    slots = jnp.zeros((num_rows, window, words), dtype=_U)
-    slots = slots.at[:, :, :key_words].set(EMPTY_KEY)
-    return {"slots": slots}
 
-
-def key_planes(kind: str, store: dict, key_words: int) -> jax.Array:
-    """All key words as a (key_words, p, W) view."""
-    if kind == "soa":
+    def key_planes(self, store: dict) -> jax.Array:
+        """All key words as a (key_words, p, W) view."""
         return store["keys"]
-    return jnp.moveaxis(store["slots"][:, :, :key_words], -1, 0)
 
-
-def value_planes(kind: str, store: dict, key_words: int, value_words: int) -> jax.Array:
-    if kind == "soa":
+    def value_planes(self, store: dict) -> jax.Array:
         return store["values"]
-    return jnp.moveaxis(store["slots"][:, :, key_words:key_words + value_words], -1, 0)
 
-
-def key_windows(kind: str, store: dict, rows: jax.Array, key_words: int) -> jax.Array:
-    """Gather probe windows for a batch of rows -> (n, key_words, W)."""
-    if kind == "soa":
+    def key_windows(self, store: dict, rows: jax.Array) -> jax.Array:
+        """Gather probe windows for a batch of rows -> (n, key_words, W)."""
         return jnp.moveaxis(store["keys"][:, rows, :], 0, 1)
-    return jnp.moveaxis(store["slots"][rows][:, :, :key_words], -1, 1)
 
-
-def value_windows(kind: str, store: dict, rows: jax.Array, key_words: int,
-                  value_words: int) -> jax.Array:
-    if kind == "soa":
+    def value_windows(self, store: dict, rows: jax.Array) -> jax.Array:
         return jnp.moveaxis(store["values"][:, rows, :], 0, 1)
-    return jnp.moveaxis(store["slots"][rows][:, :, key_words:key_words + value_words], -1, 1)
 
-
-def write_slot(kind: str, store: dict, row, lane, key_vec: jax.Array,
-               value_vec: jax.Array, key_words: int) -> dict:
-    """Functionally write one slot (key + value words)."""
-    if kind == "soa":
+    def write_slot(self, store: dict, row, lane, key_vec: jax.Array,
+                   value_vec: jax.Array) -> dict:
+        """Functionally write one slot (key + value words)."""
         return {
             "keys": store["keys"].at[:, row, lane].set(key_vec),
             "values": store["values"].at[:, row, lane].set(value_vec),
         }
-    slot = jnp.concatenate([key_vec, value_vec])
-    return {"slots": store["slots"].at[row, lane, :].set(slot)}
 
+    def write_value(self, store: dict, row, lane, value_vec: jax.Array) -> dict:
+        return {"keys": store["keys"],
+                "values": store["values"].at[:, row, lane].set(value_vec)}
 
-def write_value(kind: str, store: dict, row, lane, value_vec: jax.Array,
-                key_words: int) -> dict:
-    if kind == "soa":
-        return {"keys": store["keys"], "values": store["values"].at[:, row, lane].set(value_vec)}
-    return {"slots": store["slots"].at[row, lane, key_words:].set(value_vec)}
+    def scatter_key_word(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                         word: np.uint32) -> dict:
+        """Scatter a constant key word into all key planes at (rows, lanes).
 
-
-def scatter_key_word(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,
-                     word: np.uint32, key_words: int, num_rows: int) -> dict:
-    """Scatter a constant key word into all key planes at (rows, lanes).
-
-    Out-of-range rows (== num_rows) are dropped — used to mask inactive
-    elements in vectorized erase.
-    """
-    fill = jnp.full(rows.shape, word, dtype=_U)
-    if kind == "soa":
+        Out-of-range rows (== num_rows) are dropped — used to mask inactive
+        elements in vectorized erase.
+        """
+        fill = jnp.full(rows.shape, word, dtype=_U)
         keys = store["keys"]
-        for w in range(key_words):
+        for w in range(self.key_words):
             keys = keys.at[w, rows, lanes].set(fill, mode="drop")
         return {"keys": keys, "values": store["values"]}
-    slots = store["slots"]
-    for w in range(key_words):
-        slots = slots.at[rows, lanes, w].set(fill, mode="drop")
-    return {"slots": slots}
 
+    def tombstone_where(self, store: dict, mask2d: jax.Array) -> dict:
+        """Write TOMBSTONE into every key word of the slots where mask2d (p, W).
 
-def tombstone_where(kind: str, store: dict, mask2d: jax.Array,
-                    key_words: int) -> dict:
-    """Write TOMBSTONE into every key word of the slots where mask2d (p, W).
-
-    The bulk-erase apply: one dense vectorized select over the key planes
-    instead of a scatter per probe window — the slot mask comes from the
-    fused retrieval walk's match arena.
-    """
-    tomb = jnp.asarray(TOMBSTONE_KEY, _U)
-    if kind == "soa":
+        The bulk-erase apply: one dense vectorized select over the key planes
+        instead of a scatter per probe window — the slot mask comes from the
+        fused retrieval walk's match arena.
+        """
+        tomb = jnp.asarray(TOMBSTONE_KEY, _U)
         keys = jnp.where(mask2d[None, :, :], tomb, store["keys"])
         return {"keys": keys, "values": store["values"]}
-    slots = store["slots"]
-    words = slots.shape[-1]
-    is_key = jnp.arange(words) < key_words
-    sel = mask2d[:, :, None] & is_key[None, None, :]
-    return {"slots": jnp.where(sel, tomb, slots)}
 
-
-def scatter_values(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,
-                   values: jax.Array, key_words: int) -> dict:
-    """Scatter per-element value vectors (n, value_words) at (rows, lanes); OOR dropped."""
-    if kind == "soa":
+    def scatter_values(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                       values: jax.Array) -> dict:
+        """Scatter per-element value vectors (n, vw) at (rows, lanes); OOR dropped."""
         vals = store["values"]
         for w in range(values.shape[1]):
             vals = vals.at[w, rows, lanes].set(values[:, w], mode="drop")
         return {"keys": store["keys"], "values": vals}
-    slots = store["slots"]
-    for w in range(values.shape[1]):
-        slots = slots.at[rows, lanes, key_words + w].set(values[:, w], mode="drop")
-    return {"slots": slots}
 
+    def scatter_keys(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                     keys: jax.Array) -> dict:
+        """Scatter per-element key vectors (n, kw) at (rows, lanes); OOR dropped.
 
-def scatter_keys(kind: str, store: dict, rows: jax.Array, lanes: jax.Array,
-                 keys: jax.Array) -> dict:
-    """Scatter per-element key vectors (n, key_words) at (rows, lanes); OOR dropped.
-
-    Masked writes via out-of-range rows replace lax.cond/switch branches:
-    conditionals returning whole stores defeat XLA's in-place buffer reuse
-    (each branch copies the table), while a dropped scatter is O(1)."""
-    if kind == "soa":
+        Masked writes via out-of-range rows replace lax.cond/switch branches:
+        conditionals returning whole stores defeat XLA's in-place buffer reuse
+        (each branch copies the table), while a dropped scatter is O(1)."""
         ks = store["keys"]
         for w in range(keys.shape[1]):
             ks = ks.at[w, rows, lanes].set(keys[:, w], mode="drop")
         return {"keys": ks, "values": store["values"]}
-    slots = store["slots"]
-    for w in range(keys.shape[1]):
-        slots = slots.at[rows, lanes, w].set(keys[:, w], mode="drop")
-    return {"slots": slots}
+
+    def scatter_batch(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                      keys: jax.Array, vals: jax.Array,
+                      key_mask: jax.Array) -> dict:
+        """Whole-batch scatter of keys (where key_mask) and vals at (rows, lanes).
+
+        Planes are scattered through their flattened (p*W,) view — 1-D
+        scatter indices take XLA's fast path; safe here because the whole
+        batch is one scatter (the scan paths keep the 2-D form, which XLA
+        updates in place inside the carry).  OOR rows flatten past p*W and
+        drop.
+        """
+        idx = rows * _U(self.window) + lanes
+        flat = self.arena_capacity
+        kplanes = store["keys"].reshape(self.key_words, flat)
+        kidx = jnp.where(key_mask, idx, _U(flat))
+        for w in range(self.key_words):
+            kplanes = kplanes.at[w, kidx].set(keys[:, w], mode="drop")
+        vplanes = store["values"].reshape(self.value_words, flat)
+        for w in range(self.value_words):
+            vplanes = vplanes.at[w, idx].set(vals[:, w], mode="drop")
+        return {"keys": kplanes.reshape(store["keys"].shape),
+                "values": vplanes.reshape(store["values"].shape)}
+
+
+@dataclasses.dataclass(frozen=True)
+class AosOps(StoreOps):
+    kind = "aos"
+
+    def create(self) -> dict:
+        words = self.key_words + self.value_words
+        slots = jnp.zeros((self.num_rows, self.window, words), dtype=_U)
+        slots = slots.at[:, :, :self.key_words].set(EMPTY_KEY)
+        return {"slots": slots}
+
+    def key_planes(self, store: dict) -> jax.Array:
+        return jnp.moveaxis(store["slots"][:, :, :self.key_words], -1, 0)
+
+    def value_planes(self, store: dict) -> jax.Array:
+        kw = self.key_words
+        return jnp.moveaxis(store["slots"][:, :, kw:kw + self.value_words],
+                            -1, 0)
+
+    def key_windows(self, store: dict, rows: jax.Array) -> jax.Array:
+        return jnp.moveaxis(store["slots"][rows][:, :, :self.key_words], -1, 1)
+
+    def value_windows(self, store: dict, rows: jax.Array) -> jax.Array:
+        kw = self.key_words
+        return jnp.moveaxis(
+            store["slots"][rows][:, :, kw:kw + self.value_words], -1, 1)
+
+    def write_slot(self, store: dict, row, lane, key_vec: jax.Array,
+                   value_vec: jax.Array) -> dict:
+        slot = jnp.concatenate([key_vec, value_vec])
+        return {"slots": store["slots"].at[row, lane, :].set(slot)}
+
+    def write_value(self, store: dict, row, lane, value_vec: jax.Array) -> dict:
+        return {"slots": store["slots"].at[row, lane,
+                                           self.key_words:].set(value_vec)}
+
+    def scatter_key_word(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                         word: np.uint32) -> dict:
+        fill = jnp.full(rows.shape, word, dtype=_U)
+        slots = store["slots"]
+        for w in range(self.key_words):
+            slots = slots.at[rows, lanes, w].set(fill, mode="drop")
+        return {"slots": slots}
+
+    def tombstone_where(self, store: dict, mask2d: jax.Array) -> dict:
+        tomb = jnp.asarray(TOMBSTONE_KEY, _U)
+        slots = store["slots"]
+        words = slots.shape[-1]
+        is_key = jnp.arange(words) < self.key_words
+        sel = mask2d[:, :, None] & is_key[None, None, :]
+        return {"slots": jnp.where(sel, tomb, slots)}
+
+    def scatter_values(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                       values: jax.Array) -> dict:
+        slots = store["slots"]
+        for w in range(values.shape[1]):
+            slots = slots.at[rows, lanes, self.key_words + w].set(
+                values[:, w], mode="drop")
+        return {"slots": slots}
+
+    def scatter_keys(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                     keys: jax.Array) -> dict:
+        slots = store["slots"]
+        for w in range(keys.shape[1]):
+            slots = slots.at[rows, lanes, w].set(keys[:, w], mode="drop")
+        return {"slots": slots}
+
+    def scatter_batch(self, store: dict, rows: jax.Array, lanes: jax.Array,
+                      keys: jax.Array, vals: jax.Array,
+                      key_mask: jax.Array) -> dict:
+        oor = _U(self.num_rows)
+        store = self.scatter_values(store, rows, lanes, vals)
+        krow = jnp.where(key_mask, rows, oor)
+        return self.scatter_keys(store, krow, lanes, keys)
+
+    def arena_values(self, store: dict, slots: jax.Array) -> jax.Array:
+        kw = self.key_words
+        rows = slots // self.window
+        lanes = slots % self.window
+        return store["slots"][rows, lanes, kw:kw + self.value_words]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedOps(AosOps):
+    kind = "packed"
+
+    def __post_init__(self):
+        if self.key_words != 1 or self.value_words != 1:
+            raise ValueError("packed layout requires 1-word keys and values")
+
+
+_KINDS = {"soa": SoaOps, "aos": AosOps, "packed": PackedOps}
+
+
+@functools.lru_cache(maxsize=None)
+def make_ops(kind: str, num_rows: int, window: int, key_words: int,
+             value_words: int) -> StoreOps:
+    """Resolve a layout name to its (cached) geometry-bound protocol object."""
+    if kind not in _KINDS:
+        raise ValueError(f"layout {kind!r} not in {LAYOUTS}")
+    return _KINDS[kind](num_rows=num_rows, window=window, key_words=key_words,
+                        value_words=value_words)
+
+
+def create(kind: str, num_rows: int, window: int, key_words: int,
+           value_words: int) -> dict:
+    """Convenience: build an empty store for ``kind`` (table constructors)."""
+    return make_ops(kind, num_rows, window, key_words, value_words).create()

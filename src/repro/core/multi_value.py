@@ -60,15 +60,20 @@ class MultiValueHashTable:
     def capacity(self) -> int:
         return self.num_rows * self.window
 
+    @property
+    def ops(self) -> layouts.StoreOps:
+        """The table's store protocol (cached geometry-bound layout ops)."""
+        return layouts.make_ops(self.layout, self.num_rows, self.window,
+                                self.key_words, self.value_words)
+
     def load_factor(self) -> jax.Array:
         return self.count.astype(jnp.float32) / jnp.float32(self.capacity)
 
     def key_planes(self) -> jax.Array:
-        return layouts.key_planes(self.layout, self.store, self.key_words)
+        return self.ops.key_planes(self.store)
 
     def value_planes(self) -> jax.Array:
-        return layouts.value_planes(self.layout, self.store, self.key_words,
-                                    self.value_words)
+        return self.ops.value_planes(self.store)
 
 
 def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
@@ -92,7 +97,8 @@ def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
 
 def _probe_for_slot(tstatic, store, key_vec, word):
     """Lowest EMPTY/TOMBSTONE slot in probe order. Returns (ok, row, lane)."""
-    layout, key_words, num_rows, w, scheme, seed, max_probes = tstatic
+    ops, scheme, seed, max_probes = tstatic
+    num_rows, w = ops.num_rows, ops.window
     row0 = probing.initial_row(word, num_rows, seed)
     step = probing.row_step(scheme, word, num_rows, seed)
 
@@ -102,7 +108,7 @@ def _probe_for_slot(tstatic, store, key_vec, word):
 
     def body(st):
         attempt, row, done, crow, clane, ok = st
-        win = layouts.key_windows(layout, store, row[None], key_words)[0]
+        win = ops.key_windows(store, row[None])[0]
         cand = (win[0] == EMPTY_KEY) | (win[0] == TOMBSTONE_KEY)
         c_lane = probing.vote_lowest(cand[None])[0]
         hit = c_lane < w
@@ -146,8 +152,7 @@ def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
     if mask is None:
         mask = jnp.ones((n,), bool)
     words = key_hash_word(keys)
-    tstatic = (table.layout, table.key_words, table.num_rows, table.window,
-               table.scheme, table.seed, table.max_probes)
+    tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
 
     def step(carry, inp):
         store, count = carry
@@ -156,10 +161,9 @@ def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
         do_write = m & ok
         # masked write via OOR-drop scatter (see single_value.insert)
         wrow = jnp.where(do_write, row, _U(table.num_rows))
-        store = layouts.scatter_keys(table.layout, store, wrow[None],
-                                     lane[None], k[None])
-        store = layouts.scatter_values(table.layout, store, wrow[None],
-                                       lane[None], v[None], table.key_words)
+        store = table.ops.scatter_keys(store, wrow[None], lane[None], k[None])
+        store = table.ops.scatter_values(store, wrow[None], lane[None],
+                                         v[None])
         count = count + do_write.astype(_I)
         status = jnp.where(~m, _I(STATUS_MASKED),
                            jnp.where(ok, _I(STATUS_INSERTED), _I(STATUS_FULL)))
@@ -208,7 +212,7 @@ def count_values_scan(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
 
     def body(st):
         attempt, row, done, cnt = st
-        win = layouts.key_windows(table.layout, table.store, row, table.key_words)
+        win = table.ops.key_windows(table.store, row)
         match = jnp.all(win == keys[:, :, None], axis=1)
         has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
         cnt = cnt + jnp.where(done, 0, probing.vote_count(match))
@@ -270,9 +274,8 @@ def retrieve_all_scan(table: MultiValueHashTable, keys, out_capacity: int,
 
     def body(st):
         attempt, row, done, seen, out = st
-        win = layouts.key_windows(table.layout, table.store, row, table.key_words)
-        vwin = layouts.value_windows(table.layout, table.store, row,
-                                     table.key_words, table.value_words)
+        win = table.ops.key_windows(table.store, row)
+        vwin = table.ops.value_windows(table.store, row)
         match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]   # (n, W)
         has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
         # within-window rank of each matching lane
@@ -324,7 +327,7 @@ def erase_scan(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, j
 
     def body(st):
         attempt, row, done, cnt, store = st
-        win = layouts.key_windows(table.layout, store, row, table.key_words)
+        win = table.ops.key_windows(store, row)
         match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]
         has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
         # scatter tombstones at every matching lane of every queried row
@@ -332,9 +335,8 @@ def erase_scan(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, j
         lanes_b = jax.lax.broadcasted_iota(_U, match.shape, 1)
         srows = jnp.where(match, rows_b, _U(table.num_rows)).reshape(-1)
         slanes = lanes_b.reshape(-1)
-        store = layouts.scatter_key_word(table.layout, store, srows, slanes,
-                                         TOMBSTONE_KEY, table.key_words,
-                                         table.num_rows)
+        store = table.ops.scatter_key_word(store, srows, slanes,
+                                           TOMBSTONE_KEY)
         cnt = cnt + probing.vote_count(match)
         done = done | has_empty
         nrow = probing.advance_row(table.scheme, row, step, attempt, table.num_rows)
@@ -342,7 +344,7 @@ def erase_scan(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, j
 
     st = (jnp.zeros((), _I), row0, jnp.zeros((n,), bool), jnp.zeros((n,), _I), store)
     _, _, _, cnt, store = jax.lax.while_loop(cond, body, st)
-    kp = layouts.key_planes(table.layout, store, table.key_words)[0]
+    kp = table.ops.key_planes(store)[0]
     count = jnp.sum((kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY), dtype=_I)
     return dataclasses.replace(table, store=store, count=count), cnt
 

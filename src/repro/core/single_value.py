@@ -87,15 +87,20 @@ class SingleValueHashTable:
     def capacity(self) -> int:
         return self.num_rows * self.window
 
+    @property
+    def ops(self) -> layouts.StoreOps:
+        """The table's store protocol (cached geometry-bound layout ops)."""
+        return layouts.make_ops(self.layout, self.num_rows, self.window,
+                                self.key_words, self.value_words)
+
     def load_factor(self) -> jax.Array:
         return self.count.astype(jnp.float32) / jnp.float32(self.capacity)
 
     def key_planes(self) -> jax.Array:
-        return layouts.key_planes(self.layout, self.store, self.key_words)
+        return self.ops.key_planes(self.store)
 
     def value_planes(self) -> jax.Array:
-        return layouts.value_planes(self.layout, self.store, self.key_words,
-                                    self.value_words)
+        return self.ops.value_planes(self.store)
 
 
 def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
@@ -165,7 +170,7 @@ def _locate(table: SingleValueHashTable, keys: jax.Array):
 
     def body(state):
         attempt, row, done, frow, flane, found = state
-        win = layouts.key_windows(table.layout, table.store, row, table.key_words)
+        win = table.ops.key_windows(table.store, row)
         match = jnp.all(win == keys[:, :, None], axis=1)          # (n, W)
         has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)   # (n,)
         mlane = probing.vote_lowest(match)                        # (n,) W if none
@@ -259,8 +264,8 @@ def erase_scan(table: SingleValueHashTable, keys, mask=None,
         found = found & mask
     # OOR row == num_rows drops masked/not-found scatters.
     srows = jnp.where(found, rows, _U(table.num_rows))
-    store = layouts.scatter_key_word(table.layout, table.store, srows, lanes,
-                                     TOMBSTONE_KEY, table.key_words, table.num_rows)
+    store = table.ops.scatter_key_word(table.store, srows, lanes,
+                                       TOMBSTONE_KEY)
     # Live-count delta = distinct erased keys (duplicates in the batch hit
     # one slot, so a first-occurrence dedup — not a per-element sum, and not
     # the old O(capacity) full-table recount — gives the exact decrement.
@@ -277,9 +282,12 @@ def _probe_for_insert(table_static, store, key_vec, word):
     """Walk the probe sequence for one key.
 
     Returns (mode, row, lane): mode 0 = matched existing key, 1 = claim
-    candidate slot, 2 = full.
+    candidate slot, 2 = full.  ``table_static`` is the engines' shared
+    (ops, scheme, seed, max_probes) tuple — the store protocol object
+    carries the geometry.
     """
-    layout, key_words, num_rows, w, scheme, seed, max_probes = table_static
+    ops, scheme, seed, max_probes = table_static
+    num_rows, w = ops.num_rows, ops.window
     row0 = probing.initial_row(word, num_rows, seed)
     step = probing.row_step(scheme, word, num_rows, seed)
 
@@ -289,7 +297,7 @@ def _probe_for_insert(table_static, store, key_vec, word):
 
     def body(st):
         attempt, row, done, crow, clane, have_cand, mrow, mlane, matched = st
-        win = layouts.key_windows(layout, store, row[None], key_words)[0]  # (kw, W)
+        win = ops.key_windows(store, row[None])[0]                  # (kw, W)
         match = jnp.all(win == key_vec[:, None], axis=0)                   # (W,)
         empty = win[0] == EMPTY_KEY
         tomb = win[0] == TOMBSTONE_KEY
@@ -353,8 +361,7 @@ def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
     if mask is None:
         mask = jnp.ones((n,), bool)
     words = key_hash_word(keys)
-    tstatic = (table.layout, table.key_words, table.num_rows, table.window,
-               table.scheme, table.seed, table.max_probes)
+    tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
 
     def step(carry, inp):
         store, count = carry
@@ -369,11 +376,10 @@ def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
                                    jnp.where(mode == 1, _I(2), _I(0))))
         oor = _U(table.num_rows)
         vrow = jnp.where(case >= 1, row, oor)
-        store = layouts.scatter_values(table.layout, store, vrow[None],
-                                       lane[None], v[None], table.key_words)
+        store = table.ops.scatter_values(store, vrow[None], lane[None],
+                                         v[None])
         krow = jnp.where(case == 2, row, oor)
-        store = layouts.scatter_keys(table.layout, store, krow[None],
-                                     lane[None], k[None])
+        store = table.ops.scatter_keys(store, krow[None], lane[None], k[None])
         count = count + jnp.where(case == 2, _I(1), _I(0))
         status = jnp.where(~m, _I(STATUS_MASKED),
                            jnp.where(mode == 0, _I(STATUS_UPDATED),
@@ -443,15 +449,13 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
         return bulk.update_single(table, keys, update_fn, combine, init,
                                   values, mask)
     words = key_hash_word(keys)
-    tstatic = (table.layout, table.key_words, table.num_rows, table.window,
-               table.scheme, table.seed, table.max_probes)
+    tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
 
     def step(carry, inp):
         store, count = carry
         k, v0, vnew_in, word, m = inp
         mode, row, lane = _probe_for_insert(tstatic, store, k, word)
-        old = layouts.value_windows(table.layout, store, row[None],
-                                    table.key_words, table.value_words)[0, :, lane]
+        old = table.ops.value_windows(store, row[None])[0, :, lane]
         upd = update_fn(old, k, vnew_in)
         case = jnp.where(~m, _I(0),
                          jnp.where(mode == 0, _I(1),
@@ -459,11 +463,10 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
         oor = _U(table.num_rows)
         vrow = jnp.where(case >= 1, row, oor)
         vnew = jnp.where(case == 1, upd, v0)
-        store = layouts.scatter_values(table.layout, store, vrow[None],
-                                       lane[None], vnew[None], table.key_words)
+        store = table.ops.scatter_values(store, vrow[None], lane[None],
+                                         vnew[None])
         krow = jnp.where(case == 2, row, oor)
-        store = layouts.scatter_keys(table.layout, store, krow[None],
-                                     lane[None], k[None])
+        store = table.ops.scatter_keys(store, krow[None], lane[None], k[None])
         count = count + jnp.where(case == 2, _I(1), _I(0))
         status = jnp.where(~m, _I(STATUS_MASKED),
                            jnp.where(mode == 0, _I(STATUS_UPDATED),

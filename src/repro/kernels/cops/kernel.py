@@ -406,6 +406,103 @@ def retrieve_multi_call(tk, qa0, ra0, keys2d, mask2d, *, seed, max_probes,
 
 
 # ---------------------------------------------------------------------------
+# bucket-walk tile — the bucket-list chain walk over the pool slot arena
+# ---------------------------------------------------------------------------
+#
+# Mirrors the fused retrieve tile above, with the bucket store's chain in
+# place of the probe sequence: per query the tile walks its bucket list
+# tail -> head (handles are pre-probed by the caller — counts are O(1)
+# from the handle, so only the arena walk runs on-core), reading each
+# bucket in fixed-width chunks and stamping (query index, head-first value
+# rank) into two pool-shaped arena planes held in VMEM next to the pool.
+# The host-side compaction (`bulk_retrieve._emit`) is shared with the jax
+# engine, exactly like `retrieve_multi_call`.  Distinct queries own
+# disjoint chains, so arena writes never collide.  The arena planes carry
+# `chunk` slots of padding: a chunked window may run past a bucket's tail
+# (masked lanes re-write their current contents), and the last bucket may
+# end at the pool's edge.
+
+BUCKET_CHUNK = 128
+
+
+def _bucket_walk_kernel(ptr_ref, cnt_ref, bidx_ref, act_ref, sizes_ref,
+                        cum_ref, pool_ref, qa_in, ra_in, qa_ref, ra_ref,
+                        *, chunk):
+    del qa_in, ra_in
+    tile = ptr_ref.shape[1]
+    i = pl.program_id(0)
+
+    def one_query(jq, _):
+        act = act_ref[0, jq] != 0
+        cnt = cnt_ref[0, jq]
+        qidx = i * tile + jq
+        lanes = jax.lax.broadcasted_iota(_I, (1, chunk), 1)[0]
+
+        def cond(st):
+            j, p = st
+            return j >= 0
+
+        def body(st):
+            j, p = st
+            bsize = sizes_ref[0, j]
+            base = cum_ref[0, j]
+            has_link = j > 0
+            data_start = p.astype(_I) + jnp.where(has_link, 1, 0)
+            valid = jnp.minimum(cnt - base, bsize)      # tail partially filled
+
+            def ccond(c):
+                return c * chunk < valid
+
+            def cbody(c):
+                start = data_start + c * chunk
+                ok = c * chunk + lanes < valid
+                cur_q = qa_ref[0, pl.ds(start, chunk)]
+                qa_ref[0, pl.ds(start, chunk)] = jnp.where(ok, qidx, cur_q)
+                cur_r = ra_ref[0, pl.ds(start, chunk)]
+                ra_ref[0, pl.ds(start, chunk)] = jnp.where(
+                    ok, base + c * chunk + lanes, cur_r)
+                return c + 1
+
+            jax.lax.while_loop(ccond, cbody, jnp.zeros((), _I))
+            link = pool_ref[0, p.astype(_I)]
+            p = jnp.where(has_link, link, p)
+            return j - 1, p
+
+        j0 = jnp.where(act, bidx_ref[0, jq], _I(-1))
+        jax.lax.while_loop(cond, body, (j0, ptr_ref[0, jq]))
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_query, 0)
+
+
+def bucket_walk_call(pool, qa0, ra0, ptr2d, cnt2d, bidx2d, act2d, sizes, cum,
+                     *, chunk=BUCKET_CHUNK, interpret=True):
+    """Bucket-list chain walk: ptr2d/cnt2d/bidx2d/act2d (G, T) pre-probed
+    handle planes; qa0/ra0 the sentinel-initialized (1, pool_cap + chunk)
+    arena planes (aliased in/out); sizes/cum the (1, L) growth schedule.
+
+    Returns (qarena, rank_arena) — flat pool-slot arenas incl. padding.
+    """
+    g, tile = ptr2d.shape
+    kern = functools.partial(_bucket_walk_kernel, chunk=chunk)
+    full = lambda x: pl.BlockSpec(x.shape, lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, row_tile, row_tile, full(sizes),
+                  full(cum), full(pool), full(qa0), full(ra0)],
+        out_specs=[full(qa0), full(ra0)],
+        out_shape=[
+            jax.ShapeDtypeStruct(qa0.shape, _I),
+            jax.ShapeDtypeStruct(ra0.shape, _I),
+        ],
+        input_output_aliases={7: 0, 8: 1},
+        interpret=interpret,
+    )(ptr2d, cnt2d, bidx2d, act2d, sizes, cum, pool, qa0, ra0)
+
+
+# ---------------------------------------------------------------------------
 # 64-bit keys: two u32 planes (hi, lo) — DESIGN.md §2.  The window match is
 # two vector compares ANDed; sentinels live on plane 0.  This is the kernel
 # path for the paper's "beyond 32-bit" claim (WarpDrive was 32-bit-only).

@@ -29,7 +29,8 @@ def should_interpret() -> bool:
 
 
 def _kernel_ok(table) -> bool:
-    return (table.layout == "soa" and table.key_words in (1, 2)
+    # the kernels take bare (p, W) planes: any plane-addressable protocol
+    return (table.ops.planar and table.key_words in (1, 2)
             and table.value_words == 1 and table.scheme in ("cops", "linear"))
 
 
@@ -114,7 +115,7 @@ def insert_multi(table, keys, values, mask=None):
 
 
 def _groupby_ok(table) -> bool:
-    return (table.layout == "soa" and table.key_words == 1
+    return (table.ops.planar and table.key_words == 1
             and table.value_words == 2 and table.scheme in ("cops", "linear"))
 
 
@@ -185,7 +186,7 @@ def _lookup64_jit(tk0, tk1, tv, k0, k1, *, seed, max_probes, scheme, tile,
 # ---------------------------------------------------------------------------
 
 def _retrieve_ok(table) -> bool:
-    return (table.layout == "soa" and table.key_words == 1
+    return (table.ops.planar and table.key_words == 1
             and table.scheme in ("cops", "linear"))
 
 
@@ -246,11 +247,64 @@ def retrieve_all_multi(table, keys, out_capacity, mask=None):
     live = jnp.ones((n,), bool) if mask is None else mask
     is_rep, rep_of, rcnt, qa, ra = _fused_walk_pallas(table, keys_n, live)
     counts = br._fan_out(rcnt, rep_of, live, n)
-    out, offsets, counts = br._emit(table, out_capacity, counts, is_rep,
-                                    rep_of, rcnt, qa, ra)
+    out, offsets, counts = br._emit_store(table, out_capacity, counts,
+                                          is_rep, rep_of, rcnt, qa, ra)
     if table.value_words == 1:
         return out[:, 0], offsets, counts
     return out, offsets, counts
+
+
+# ---------------------------------------------------------------------------
+# bucket-list retrieval — kernel chain walk + the engine's compaction
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("tile", "sentinel", "chunk",
+                                             "interpret"))
+def _bucket_walk_jit(pool, ptr, cnt, bidx, act, sizes, cum, *, tile,
+                     sentinel, chunk, interpret):
+    p2, n = _tile_batch(ptr, tile, 0)
+    c2, _ = _tile_batch(cnt, tile, 0)
+    b2, _ = _tile_batch(bidx, tile, 0)
+    a2, _ = _tile_batch(act.astype(_I), tile, 0)
+    pool_cap = pool.shape[0]
+    # `chunk` slots of arena padding: a chunked window may run past the
+    # pool's edge on the last bucket (see the kernel header note)
+    qa0 = jnp.full((1, pool_cap + chunk), _I(sentinel), _I)
+    ra0 = jnp.zeros((1, pool_cap + chunk), _I)
+    qa, ra = K.bucket_walk_call(pool[None, :], qa0, ra0, p2, c2, b2, a2,
+                                sizes[None, :], cum[None, :], chunk=chunk,
+                                interpret=interpret)
+    return qa[0, :pool_cap], ra[0, :pool_cap]
+
+
+def bucket_retrieve_all(table, keys, out_capacity):
+    """BucketListHashTable retrieve_all via the bucket-walk tile.
+
+    Handles are pre-probed host-side (counts are O(1) off the handle, so
+    only the chain walk runs on-core); the tile stamps the pool slot arena
+    in VMEM and the compaction is shared with the jax engine — mirroring
+    how ``retrieve_all_multi`` wraps the fused retrieve tile.
+    """
+    from repro.core import bucket_list as bl
+    from repro.core import bulk_retrieve as br
+    from repro.core import single_value as sv
+    ks = table.key_store
+    keys_n = sv.normalize_words(keys, ks.key_words, "keys")
+    n = keys_n.shape[0]
+    if n == 0 or not (ks.ops.planar and ks.key_words == 1):
+        return bl._retrieve_fused(table, keys_n, out_capacity)
+    is_rep, rep_of, found, ptr, rcnt, bidx, counts = bl._handle_probe(
+        table, keys_n)
+    tile = min(K.DEFAULT_TILE, n)
+    chunk = int(min(max(table.sizes), K.BUCKET_CHUNK))
+    qa, ra = _bucket_walk_jit(
+        table.pool, ptr, rcnt, bidx, found,
+        jnp.asarray(table.sizes, _I), jnp.asarray(table.cum, _I),
+        tile=tile, sentinel=n, chunk=chunk, interpret=should_interpret())
+    out, offsets, counts = br._emit(
+        lambda s: table.pool[s][:, None], table.pool_capacity, out_capacity,
+        counts, is_rep, rep_of, rcnt, qa, ra)
+    return out[:, 0], offsets, counts
 
 
 def retrieve(table, keys):

@@ -1,0 +1,278 @@
+"""Bucket-list store-protocol suite.
+
+Two contracts:
+
+1. **Engine parity** — `BucketListHashTable` on the batched engines
+   (``backend="jax"`` build: sort/segment dedup + prefix-sum bucket
+   allocator + scatter-arbitration handle claims; fused chain-walk
+   retrieval over the pool slot arena) must be *bit-exact* against the
+   sequential ``backend="scan"`` reference: identical key-store planes,
+   handles, pool planes, alloc_top, live counts, per-element STATUS codes
+   and (values, offsets, counts) retrievals — across duplicates, masks,
+   growth schedules, multi-batch appends, pool exhaustion, key-store
+   overflow, u64 keys and output truncation.  ``backend="pallas"`` runs
+   the COPS bucket-walk tile through the same compaction.
+
+2. **Store protocol** — `repro.core.layouts` exposes layouts as StoreOps
+   objects (no string-kind dispatch left for consumers), including the
+   slot-arena hook the fused engine rides.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bucket_list as bl
+from repro.core import layouts
+from repro.core import multi_value as mv
+from repro.core import single_value as sv
+from repro.core.common import (
+    STATUS_FULL,
+    STATUS_INSERTED,
+    STATUS_MASKED,
+    STATUS_POOL_FULL,
+)
+
+
+def _pair(**kw):
+    return (bl.create(backend="jax", **kw), bl.create(backend="scan", **kw))
+
+
+def assert_bl_equal(tb, ts, stb=None, sts=None):
+    """Bit-exact: key-store planes (keys + packed handles), pool, top."""
+    for pb, ps in zip(jax.tree_util.tree_leaves(tb.key_store.store),
+                      jax.tree_util.tree_leaves(ts.key_store.store)):
+        np.testing.assert_array_equal(np.asarray(pb), np.asarray(ps))
+    np.testing.assert_array_equal(np.asarray(tb.pool), np.asarray(ts.pool))
+    assert int(tb.alloc_top) == int(ts.alloc_top)
+    assert int(tb.key_store.count) == int(ts.key_store.count)
+    if stb is not None:
+        np.testing.assert_array_equal(np.asarray(stb), np.asarray(sts))
+
+
+def assert_retrieve_equal(tb, ts, q, cap):
+    ob, os_ = bl.retrieve_all(tb, q, cap), bl.retrieve_all(ts, q, cap)
+    for a, b, nm in zip(ob, os_, ("values", "offsets", "counts")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"retrieve_all {nm}")
+    np.testing.assert_array_equal(np.asarray(bl.count_values(tb, q)),
+                                  np.asarray(bl.count_values(ts, q)))
+
+
+class TestInsertParity:
+    @pytest.mark.parametrize("growth,s0", [(1.1, 1), (1.0, 4), (2.0, 1)])
+    def test_duplicates_and_growth_schedules(self, growth, s0):
+        rng = np.random.default_rng(0)
+        keys = jnp.asarray(rng.integers(1, 20, 250, dtype=np.uint32))
+        vals = jnp.arange(250, dtype=jnp.uint32)
+        tb, ts = _pair(key_capacity=256, pool_capacity=4096,
+                       growth=growth, s0=s0)
+        tb, stb = bl.insert(tb, keys, vals)
+        ts, sts = bl.insert(ts, keys, vals)
+        assert_bl_equal(tb, ts, stb, sts)
+        assert (np.asarray(stb) == STATUS_INSERTED).all()
+        q = jnp.asarray(rng.integers(1, 30, 60, dtype=np.uint32))
+        assert_retrieve_equal(tb, ts, q, 300)
+
+    def test_masks(self):
+        rng = np.random.default_rng(1)
+        keys = jnp.asarray(rng.integers(1, 25, 200, dtype=np.uint32))
+        vals = jnp.asarray(rng.integers(0, 2 ** 32 - 2, 200, dtype=np.uint32))
+        mask = jnp.asarray(rng.random(200) < 0.7)
+        tb, ts = _pair(key_capacity=256, pool_capacity=4096)
+        tb, stb = bl.insert(tb, keys, vals, mask)
+        ts, sts = bl.insert(ts, keys, vals, mask)
+        assert_bl_equal(tb, ts, stb, sts)
+        assert (np.asarray(stb)[~np.asarray(mask)] == STATUS_MASKED).all()
+
+    def test_multi_batch_append_and_growth(self):
+        """Later batches append to existing tails and grow chains — the
+        in-batch/pre-existing bucket base-pointer split."""
+        rng = np.random.default_rng(2)
+        tb, ts = _pair(key_capacity=256, pool_capacity=8192)
+        for b in range(4):
+            keys = jnp.asarray(rng.integers(1, 15, 100, dtype=np.uint32))
+            vals = jnp.arange(100, dtype=jnp.uint32) + 1000 * b
+            tb, stb = bl.insert(tb, keys, vals)
+            ts, sts = bl.insert(ts, keys, vals)
+            assert_bl_equal(tb, ts, stb, sts)
+        assert_retrieve_equal(tb, ts, jnp.arange(1, 16, dtype=jnp.uint32), 500)
+
+    def test_pool_exhaustion(self):
+        """Overflowing the pool mid-batch: the prefix-sum allocator must
+        reproduce the sequential bump allocator's exact failure point and
+        keep POOL_FULL statuses, handles and pool layout identical."""
+        rng = np.random.default_rng(3)
+        keys = jnp.asarray(rng.integers(1, 12, 150, dtype=np.uint32))
+        vals = jnp.arange(150, dtype=jnp.uint32)
+        tb, ts = _pair(key_capacity=512, pool_capacity=40, growth=1.5, s0=2)
+        tb, stb = bl.insert(tb, keys, vals)
+        ts, sts = bl.insert(ts, keys, vals)
+        assert_bl_equal(tb, ts, stb, sts)
+        assert (np.asarray(stb) == STATUS_POOL_FULL).any()
+        assert_retrieve_equal(tb, ts, jnp.arange(1, 13, dtype=jnp.uint32), 60)
+
+    def test_key_store_overflow(self):
+        """Key store smaller than the distinct-key set: FULL statuses come
+        from the engine's scatter arbitration and must match the scan."""
+        rng = np.random.default_rng(4)
+        keys = jnp.asarray(rng.permutation(
+            np.arange(1, 200, dtype=np.uint32))[:150])
+        vals = jnp.arange(150, dtype=jnp.uint32)
+        tb, ts = _pair(key_capacity=8, pool_capacity=4096)
+        tb, stb = bl.insert(tb, keys, vals)
+        ts, sts = bl.insert(ts, keys, vals)
+        assert_bl_equal(tb, ts, stb, sts)
+        assert (np.asarray(stb) == STATUS_FULL).any()
+
+    def test_u64_two_word_keys(self):
+        rng = np.random.default_rng(5)
+        kk = rng.integers(0, 2 ** 32 - 2, (60, 2), dtype=np.uint32)
+        kk = np.concatenate([kk, kk[:20]])            # duplicates
+        vals = jnp.arange(80, dtype=jnp.uint32)
+        tb, ts = _pair(key_capacity=256, pool_capacity=2048, key_words=2)
+        tb, stb = bl.insert(tb, jnp.asarray(kk), vals)
+        ts, sts = bl.insert(ts, jnp.asarray(kk), vals)
+        assert_bl_equal(tb, ts, stb, sts)
+        assert_retrieve_equal(tb, ts, jnp.asarray(kk[:30]), 120)
+
+    def test_empty_batch(self):
+        tb, ts = _pair(key_capacity=64, pool_capacity=64)
+        tb, stb = bl.insert(tb, jnp.zeros((0,), jnp.uint32),
+                            jnp.zeros((0,), jnp.uint32))
+        ts, sts = bl.insert(ts, jnp.zeros((0,), jnp.uint32),
+                            jnp.zeros((0,), jnp.uint32))
+        assert stb.shape == (0,)
+        assert_bl_equal(tb, ts, stb, sts)
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_randomized_regimes(self, seed):
+        r = np.random.default_rng(seed)
+        n = int(r.integers(5, 150))
+        keys = jnp.asarray(r.integers(1, int(r.integers(2, 40)), n,
+                                      dtype=np.uint32))
+        vals = jnp.asarray(r.integers(0, 2 ** 32 - 2, n, dtype=np.uint32))
+        mask = (jnp.asarray(r.random(n) < 0.8)
+                if r.random() < 0.5 else None)
+        kw = dict(key_capacity=int(r.choice([64, 512])),
+                  pool_capacity=int(r.choice([16, 64, 256, 4096])),
+                  growth=float(r.choice([1.0, 1.1, 1.5, 2.0])),
+                  s0=int(r.choice([1, 2, 4])),
+                  window=int(r.choice([4, 16, 32])))
+        tb, ts = _pair(**kw)
+        for b in range(int(r.integers(1, 4))):
+            tb, stb = bl.insert(tb, keys, vals + b, mask)
+            ts, sts = bl.insert(ts, keys, vals + b, mask)
+            assert_bl_equal(tb, ts, stb, sts)
+        q = jnp.asarray(r.integers(1, 45, 30, dtype=np.uint32))
+        assert_retrieve_equal(tb, ts, q, int(r.choice([5, 50, 500])))
+
+
+class TestRetrieveParity:
+    def _built(self, backend):
+        rng = np.random.default_rng(6)
+        keys = jnp.asarray(rng.integers(1, 20, 200, dtype=np.uint32))
+        vals = jnp.arange(200, dtype=jnp.uint32)
+        t = bl.create(256, pool_capacity=4096, backend=backend)
+        t, _ = bl.insert(t, keys, vals)
+        return t
+
+    def test_truncation_and_misses(self):
+        """out_capacity smaller than the total: the fused emit must drop
+        exactly the same tail entries as the reference scatter."""
+        tb, ts = self._built("jax"), self._built("scan")
+        q = jnp.asarray([3, 3, 99, 7, 3, 12, 1000], jnp.uint32)  # dups+misses
+        for cap in (0, 1, 7, 64, 400):
+            assert_retrieve_equal(tb, ts, q, cap)
+
+    def test_empty_query_batch(self):
+        tb, ts = self._built("jax"), self._built("scan")
+        assert_retrieve_equal(tb, ts, jnp.zeros((0,), jnp.uint32), 16)
+
+    def test_pallas_bucket_walk_tile(self):
+        """The COPS bucket-walk tile drives the same compaction."""
+        rng = np.random.default_rng(7)
+        keys = jnp.asarray(rng.integers(1, 20, 150, dtype=np.uint32))
+        vals = jnp.arange(150, dtype=jnp.uint32)
+        tp = bl.create(256, pool_capacity=2048, backend="pallas")
+        ts = bl.create(256, pool_capacity=2048, backend="scan")
+        tp, sp = bl.insert(tp, keys, vals)
+        ts, ss = bl.insert(ts, keys, vals)
+        assert_bl_equal(tp, ts, sp, ss)
+        q = jnp.asarray(rng.integers(1, 25, 50, dtype=np.uint32))
+        assert_retrieve_equal(tp, ts, q, 200)
+
+    def test_for_each_rides_the_engine(self):
+        t = self._built("jax")
+        out = bl.for_each(t, jnp.asarray([3, 99], jnp.uint32),
+                          lambda k, v, m: jnp.where(m, v, 0), max_values=32)
+        ref, off, cnt = bl.retrieve_all(t, jnp.asarray([3], jnp.uint32), 32)
+        assert int(out[0].sum()) == int(ref[: int(cnt[0])].sum())
+        assert int(out[1].sum()) == 0
+
+
+class TestStoreProtocol:
+    """The layouts module is a protocol, not a string-dispatch switchboard."""
+
+    def test_no_string_dispatch_surface(self):
+        for fn in ("key_windows", "value_windows", "scatter_keys",
+                   "scatter_values", "scatter_key_word", "tombstone_where",
+                   "write_slot", "write_value"):
+            assert not hasattr(layouts, fn), \
+                f"string-kind free function layouts.{fn} resurfaced"
+
+    def test_make_ops_cached_and_hashable(self):
+        a = layouts.make_ops("soa", 11, 8, 1, 2)
+        b = layouts.make_ops("soa", 11, 8, 1, 2)
+        assert a is b and hash(a) == hash(b)
+        assert a.planar and not layouts.make_ops("aos", 11, 8, 1, 2).planar
+        with pytest.raises(ValueError):
+            layouts.make_ops("packed", 11, 8, 2, 1)
+        with pytest.raises(ValueError):
+            layouts.make_ops("nope", 11, 8, 1, 1)
+
+    @pytest.mark.parametrize("kind", layouts.LAYOUTS)
+    def test_arena_values_matches_plane_view(self, kind):
+        """The slot-arena hook gathers exactly the flat (row*W + lane)
+        plane view — the contract the fused emit relies on."""
+        rng = np.random.default_rng(8)
+        t = sv.create(128, window=8, layout=kind)
+        keys = jnp.asarray(rng.integers(1, 300, 100, dtype=np.uint32))
+        t, _ = sv.insert(t, keys, keys * 3)
+        ops = t.ops
+        slots = jnp.asarray(rng.integers(0, ops.arena_capacity, 50))
+        got = ops.arena_values(t.store, slots)
+        vp = np.asarray(t.value_planes()).reshape(1, -1)
+        np.testing.assert_array_equal(np.asarray(got)[:, 0], vp[0, slots])
+
+    @pytest.mark.parametrize("kind", layouts.LAYOUTS)
+    def test_arena_tombstone_flat_mask(self, kind):
+        rng = np.random.default_rng(9)
+        t = mv.create(128, window=8, layout=kind)
+        keys = jnp.asarray(rng.integers(1, 30, 64, dtype=np.uint32))
+        t, _ = mv.insert(t, keys, keys)
+        occ = jnp.asarray(rng.random(t.ops.arena_capacity) < 0.5)
+        store = t.ops.arena_tombstone(t.store, occ)
+        kp = np.asarray(t.ops.key_planes(store)[0]).reshape(-1)
+        from repro.core.common import TOMBSTONE_KEY
+        assert (kp[np.asarray(occ)] == TOMBSTONE_KEY).all()
+
+    def test_bucket_pool_as_slot_arena(self):
+        """The bucket chain rides the same emit through its pool arena:
+        chain_arena stamps exactly counts[i] slots per live query, ranked
+        head-first."""
+        rng = np.random.default_rng(10)
+        keys = jnp.asarray(rng.integers(1, 10, 80, dtype=np.uint32))
+        t = bl.create(128, pool_capacity=1024)
+        t, _ = bl.insert(t, keys, jnp.arange(80, dtype=jnp.uint32))
+        q = jnp.arange(1, 11, dtype=jnp.uint32)
+        is_rep, rep_of, found, ptr, rcnt, bidx, counts = bl._handle_probe(t, q[:, None])
+        qa, ra = bl.chain_arena(t, found, ptr, rcnt, bidx)
+        qa, ra = np.asarray(qa), np.asarray(ra)
+        for i in range(10):
+            stamped = np.sort(ra[qa == i])
+            assert stamped.shape[0] == int(rcnt[i])
+            np.testing.assert_array_equal(stamped, np.arange(int(rcnt[i])))

@@ -151,6 +151,58 @@ class TestRmwParity:
         ts, sts = gb.update(ts, "min", keys, vals)
         assert_tables_equal(tb, ts, stb, sts)
 
+    @pytest.mark.parametrize("name,fold", [
+        ("or", lambda old, key, new: old | new),
+        ("and", lambda old, key, new: old & new),
+        ("xor", lambda old, key, new: old ^ new),
+    ])
+    def test_bitwise_specs(self, name, fold):
+        """("or",)/("and",)/("xor",) specs run the bit-plane scatter-reduce
+        fast lane and must match the sequential fold bit for bit — the
+        bloom-style value lane (set-union values via bitwise-or)."""
+        rng = np.random.default_rng(hash(name) % 2 ** 31)
+        n = 300
+        keys = jnp.asarray(rng.integers(1, 25, n, dtype=np.uint32))
+        vals = jnp.asarray(rng.integers(0, 2 ** 32 - 2, n, dtype=np.uint32))
+        init = jnp.asarray(rng.integers(0, 2 ** 32 - 2, n, dtype=np.uint32))
+        mask = jnp.asarray(rng.random(n) < 0.75)
+        tb, ts = _pair(lambda **kw: sv.create(256, **kw))
+        pre = keys[: n // 2]                  # existing keys exercise RMW
+        tb, _ = sv.insert(tb, pre, pre)
+        ts, _ = sv.insert(ts, pre, pre)
+        tb, stb = sv.update_values(tb, keys, fold, init, mask=mask,
+                                   values=vals, combine=(name,))
+        ts, sts = sv.update_values(ts, keys, fold, init, mask=mask,
+                                   values=vals)
+        assert_tables_equal(tb, ts, stb, sts)
+
+    def test_bitwise_spec_multiword(self):
+        """Mixed per-word specs — ("or", "add") — on 2-word values."""
+        rng = np.random.default_rng(11)
+        n = 150
+        keys = jnp.asarray(rng.integers(1, 20, n, dtype=np.uint32))
+        vals = jnp.asarray(rng.integers(0, 2 ** 31, (n, 2), dtype=np.uint32))
+        init = jnp.asarray(rng.integers(0, 2 ** 31, (n, 2), dtype=np.uint32))
+        fold = lambda old, key, new: jnp.stack([old[0] | new[0],
+                                                old[1] + new[1]])
+        tb, ts = _pair(lambda **kw: sv.create(256, value_words=2, **kw))
+        tb, stb = sv.update_values(tb, keys, fold, init, values=vals,
+                                   combine=("or", "add"))
+        ts, sts = sv.update_values(ts, keys, fold, init, values=vals)
+        assert_tables_equal(tb, ts, stb, sts)
+
+    def test_bitwise_combine_callable_roundtrip(self):
+        """COMBINE_OPS entries for the bitwise specs lift into the general
+        lane's callable form (combine_callable) with the same identity."""
+        a = jnp.asarray([0b1010], jnp.uint32)
+        b = jnp.asarray([0b0110], jnp.uint32)
+        assert int(bulk.combine_callable(("or",))(a, b)[0]) == 0b1110
+        assert int(bulk.combine_callable(("and",))(a, b)[0]) == 0b0010
+        assert int(bulk.combine_callable(("xor",))(a, b)[0]) == 0b1100
+        for name in ("or", "and", "xor"):
+            ident, op = bulk.COMBINE_OPS[name]
+            assert int(op(a, jnp.asarray([ident]))[0]) == int(a[0])
+
     def test_general_lane_callable_combine(self):
         """An arbitrary (associative) combiner callable takes the sorted
         general lane; same parity contract."""

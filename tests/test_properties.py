@@ -149,6 +149,72 @@ class TestBucketListVsMultiDict:
             assert out[off[i]:off[i + 1]].tolist() == model.get(k, [])
 
 
+class TestBucketListRoundTrip:
+    """insert -> count_values -> retrieve_all invariants across BOTH
+    backends (the batched engine build and the sequential scan), over
+    duplicates, masks, growth schedules and pool exhaustion: counts match
+    the surviving model, values keep insertion order, both backends agree
+    bit for bit on statuses, handles, pool planes and retrievals."""
+
+    @SETTINGS
+    @given(pairs=st.lists(st.tuples(st.integers(1, 15),
+                                    st.integers(0, 10 ** 6)),
+                          min_size=1, max_size=80),
+           growth=st.sampled_from([1.0, 1.1, 2.0]),
+           s0=st.sampled_from([1, 2, 4]),
+           pool_capacity=st.sampled_from([24, 128, 4096]),
+           use_mask=st.booleans(),
+           batches=st.integers(1, 2))
+    def test_round_trip_invariants(self, pairs, growth, s0, pool_capacity,
+                                   use_mask, batches):
+        kw = dict(key_capacity=256, pool_capacity=pool_capacity,
+                  s0=s0, growth=growth)
+        tb = bl.create(backend="jax", **kw)
+        ts = bl.create(backend="scan", **kw)
+        ks = jnp.asarray([p[0] for p in pairs], jnp.uint32)
+        vs = jnp.asarray([p[1] for p in pairs], jnp.uint32)
+        rng = np.random.default_rng(len(pairs))
+        model: dict = {}
+        for b in range(batches):
+            mask = (jnp.asarray(rng.random(len(pairs)) < 0.7)
+                    if use_mask else None)
+            tb, stb = bl.insert(tb, ks, vs + b, mask)
+            ts, sts = bl.insert(ts, ks, vs + b, mask)
+            # backends bit-exact: statuses + handles + pool + allocator
+            np.testing.assert_array_equal(np.asarray(stb), np.asarray(sts))
+            for pb, ps in zip(jax.tree_util.tree_leaves(tb.key_store.store),
+                              jax.tree_util.tree_leaves(ts.key_store.store)):
+                np.testing.assert_array_equal(np.asarray(pb), np.asarray(ps))
+            np.testing.assert_array_equal(np.asarray(tb.pool),
+                                          np.asarray(ts.pool))
+            assert int(tb.alloc_top) == int(ts.alloc_top)
+            # model: statuses say exactly which writes landed (pool
+            # exhaustion drops the tail of a key's stream, masks drop
+            # elements) — INSERTED elements append in batch order
+            for i, (k, v) in enumerate(pairs):
+                if int(stb[i]) == STATUS_INSERTED:
+                    model.setdefault(k, []).append((v + b) & 0xFFFFFFFF)
+        q = jnp.arange(1, 16, dtype=jnp.uint32)
+        cb = bl.count_values(tb, q)
+        cs = bl.count_values(ts, q)
+        np.testing.assert_array_equal(np.asarray(cb), np.asarray(cs))
+        total = sum(map(len, model.values()))
+        outb, offb, cntb = bl.retrieve_all(tb, q, out_capacity=total + 1)
+        outs, offs, cnts = bl.retrieve_all(ts, q, out_capacity=total + 1)
+        np.testing.assert_array_equal(np.asarray(outb), np.asarray(outs))
+        np.testing.assert_array_equal(np.asarray(offb), np.asarray(offs))
+        np.testing.assert_array_equal(np.asarray(cntb), np.asarray(cnts))
+        outb, offb = np.asarray(outb), np.asarray(offb)
+        for i, k in enumerate(range(1, 16)):
+            assert int(cb[i]) == len(model.get(k, []))
+            # bucket lists preserve insertion order within a key
+            assert outb[offb[i]:offb[i + 1]].tolist() == model.get(k, [])
+        # the allocator never hands out past the pool, and the handles'
+        # counts sum to the model total (pool-exhaustion bookkeeping)
+        assert int(tb.alloc_top) <= pool_capacity
+        assert int(jnp.sum(tb._counts_all())) == total
+
+
 class TestBloomProperties:
     @SETTINGS
     @given(keys=keys_st)
