@@ -3,28 +3,42 @@
 The paper benchmarks raw table ops against cuDF (§V); this figure runs
 the *relational* layer those cuDF numbers stand in for:
 
-  join     : inner hash join throughput (build+probe pairs/s) across
-             build-table load factors (rho) and build:probe ratios
-  join-how : inner vs left vs semi vs anti at a fixed shape
-  groupby  : group-by aggregate throughput across group counts (g) for
-             sum / count / mean
-  distinct : dedup throughput at fixed duplication factor
+  join      : inner hash join throughput (build+probe pairs/s) across
+              build-table load factors (rho) and build:probe ratios
+  join-how  : inner vs left vs semi vs anti at a fixed shape
+  groupby   : group-by aggregate throughput across group counts (g) for
+              sum / count / mean
+  composite : two-column (key_words=2) join / group-by / distinct via the
+              tuple-of-columns API, with an IN-RUN PARITY GATE against
+              the same columns packed into single u32 words — the run
+              RAISES on any output mismatch (build_idx/probe_idx/valid/
+              matched/total, lookup aggregates, first-occurrence masks),
+              so every benchmark run doubles as the composite-key
+              correctness gate (rows carry ``parity=ok``)
+  distinct  : dedup throughput at fixed duplication factor
 
 Same CSV contract as fig5-8 (name,us_per_call,derived,extra); CPU-
 container scale, shape-level comparison (see benchmarks/util.py).
+Set ``REPRO_BENCH_SMOKE=1`` for the small smoke config (CI).
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import row, time_fn
-from repro.configs.warpcore import CONFIG
+from repro.configs.warpcore import CONFIG, SMOKE
 from repro.relational import distinct as rdistinct
 from repro.relational import groupby as rgroupby
 from repro.relational import join as rjoin
+
+
+def _cfg():
+    return SMOKE if os.environ.get("REPRO_BENCH_SMOKE") else CONFIG
 
 
 def _keys(rng, n, universe):
@@ -32,7 +46,7 @@ def _keys(rng, n, universe):
 
 
 def run(out=print):
-    n = CONFIG.n_pairs // 2
+    n = _cfg().n_pairs // 2
     rng = np.random.default_rng(7)
 
     # --- join vs build load factor (probe = build size) ---------------------
@@ -85,6 +99,64 @@ def run(out=print):
     sec = time_fn(f, dk)
     _, n_unique, _ = f(dk)
     out(row("fig9.distinct.dup8", sec, n, extra=f"unique={int(n_unique)}"))
+
+    # --- composite two-column keys + parity gates ----------------------------
+    # 16-bit column values, so the SAME columns also pack into one u32
+    # word ((hi << 16) | lo): the packed run is the single-word reference
+    # every composite output must match bit for bit.  Placement differs
+    # completely between the representations (different hash words), so
+    # agreement is a real end-to-end gate on the multi-plane path.
+    bh = jnp.asarray(rng.integers(0, 1 << 10, n).astype(np.uint32))
+    bl = jnp.asarray(rng.integers(1, 1 << 16, n).astype(np.uint32))
+    ph = jnp.asarray(rng.integers(0, 1 << 10, n).astype(np.uint32))
+    plo = jnp.asarray(rng.integers(1, 1 << 16, n).astype(np.uint32))
+    pack = lambda h, l: (h << 16) | l
+
+    fc = jax.jit(lambda a, b, c, d: rjoin.hash_join((a, b), (c, d), 2 * n,
+                                                    "inner"))
+    fp = jax.jit(lambda b, p: rjoin.hash_join(b, p, 2 * n, "inner"))
+    res_c = fc(bh, bl, ph, plo)
+    res_p = fp(pack(bh, bl), pack(ph, plo))
+    for fld in ("build_idx", "probe_idx", "valid", "matched"):
+        if not bool((getattr(res_c, fld) == getattr(res_p, fld)).all()):
+            raise AssertionError(
+                f"fig9 composite join parity FAILED on {fld}")
+    if int(res_c.total) != int(res_p.total):
+        raise AssertionError("fig9 composite join parity FAILED on total")
+    sec_c = time_fn(fc, bh, bl, ph, plo)
+    sec_p = time_fn(fp, pack(bh, bl), pack(ph, plo))
+    out(row("fig9.join.inner.composite2", sec_c, 2 * n,
+            extra=f"parity=ok,vs-packed={sec_p / sec_c:.2f}x"))
+    out(row("fig9.join.inner.packed1", sec_p, 2 * n))
+
+    gv = _keys(rng, n, 1 << 16)
+    gc = jax.jit(lambda a, b, v: rgroupby.aggregate(
+        (a, b), v, rgroupby.capacity_for(max(n // 8, 8)), "sum"))
+    gp = jax.jit(lambda k, v: rgroupby.aggregate(
+        k, v, rgroupby.capacity_for(max(n // 8, 8)), "sum"))
+    gh = jnp.asarray(rng.integers(0, 16, n).astype(np.uint32))
+    gl = jnp.asarray(rng.integers(1, max(n // 128, 2), n).astype(np.uint32))
+    _, _, _, tc = gc(gh, gl, gv)
+    _, _, _, tp = gp(pack(gh, gl), gv)
+    out_c, f_c = rgroupby.lookup(tc, "sum", (gh, gl))
+    out_p, f_p = rgroupby.lookup(tp, "sum", pack(gh, gl))
+    if not (bool((out_c == out_p).all()) and bool((f_c == f_p).all())
+            and int(tc.count) == int(tp.count)):
+        raise AssertionError("fig9 composite groupby parity FAILED")
+    sec = time_fn(gc, gh, gl, gv)
+    out(row("fig9.groupby.sum.composite2", sec, n,
+            extra=f"parity=ok,groups={int(tc.count)}"))
+
+    dc = jax.jit(lambda a, b: rdistinct.distinct((a, b), n))
+    dp = jax.jit(lambda k: rdistinct.distinct(k, n))
+    (uh, ul), n_c, fr_c = dc(gh, gl)
+    up, n_p, fr_p = dp(pack(gh, gl))
+    if not (int(n_c) == int(n_p) and bool((fr_c == fr_p).all())
+            and bool((pack(uh, ul) == up).all())):
+        raise AssertionError("fig9 composite distinct parity FAILED")
+    sec = time_fn(dc, gh, gl)
+    out(row("fig9.distinct.composite2", sec, n,
+            extra=f"parity=ok,unique={int(n_c)}"))
 
 
 if __name__ == "__main__":

@@ -1,6 +1,11 @@
 """Quickstart: the WarpCore-on-TPU hash table API in 60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The top-level README.md has the full tour: architecture map (store
+protocol -> bulk engines -> tables -> relational/distributed layers),
+the scan/jax/pallas backend matrix, composite multi-column keys, and how
+to run the tier-1 tests and benchmarks.
 """
 
 import jax

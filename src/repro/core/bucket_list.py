@@ -200,7 +200,7 @@ def insert_scan(table: BucketListHashTable, keys, values, mask=None,
     """Sequential-scan reference insert: one probe + alloc step per element
     (the batched build's parity oracle)."""
     ks = table.key_store
-    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, ks.key_words, "keys")
     values = sv.normalize_words(values, 1, "values")
     n = keys.shape[0]
     if mask is None:
@@ -319,7 +319,7 @@ def _insert_bulk(table: BucketListHashTable, keys, values, mask,
        final handles (count/bucket/tail-ptr read off the same arithmetic).
     """
     ks = table.key_store
-    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, ks.key_words, "keys")
     values = sv.normalize_words(values, 1, "values")
     n = keys.shape[0]
     if mask is None:
@@ -597,7 +597,7 @@ def _retrieve_fused(table: BucketListHashTable, keys, out_capacity: int,
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused path: dedup + one handle probe + one chain walk + shared emit."""
     ks = table.key_store
-    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, ks.key_words, "keys")
     n = keys.shape[0]
     if n == 0:
         return (jnp.zeros((out_capacity,), _U), jnp.zeros((1,), _I),
@@ -615,7 +615,7 @@ def retrieve_all_scan(table: BucketListHashTable, keys, out_capacity: int,
     """Reference two-pass retrieval: per-query handle lookup, then every
     queried list walked in lockstep (no dedup, no shared compaction)."""
     ks = table.key_store
-    keys = sv.normalize_words(keys, ks.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, ks.key_words, "keys")
     n = keys.shape[0]
     if n == 0:
         return (jnp.zeros((out_capacity,), _U), jnp.zeros((1,), _I),
@@ -685,7 +685,7 @@ def retrieve_all_scan(table: BucketListHashTable, keys, out_capacity: int,
 def for_each(table: BucketListHashTable, keys, fn: Callable, max_values: int):
     """Apply ``fn(key, value, valid)`` per (query, value) pair (cf. §IV-B.4)."""
     ks = table.key_store
-    keys_n = sv.normalize_words(keys, ks.key_words, "keys")
+    keys_n = sv.normalize_key_batch(keys, ks.key_words, "keys")
     n = keys_n.shape[0]
     vals, offsets, counts = retrieve_all(table, keys_n, n * max_values)
     idx = offsets[:n, None] + jnp.arange(max_values)[None, :]

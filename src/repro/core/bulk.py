@@ -48,11 +48,16 @@ so the hot path (1-word keys) runs entirely in the original batch order:
 group ids come from a bare key sort + ``searchsorted``, segment combines
 are scatter-reductions (``.at[gid].add/min/max``) keyed by a per-word
 combiner *spec* (e.g. ``("min", "add")``), and the per-sweep rank sort
-packs (row, priority) into one u32.  Wide keys (u64 two-plane) and
-arbitrary user combiner *callables* take the general lane: one stable
-payload sort by (masked, key words, batch index) plus an associative
-segmented scan.  Both lanes share probe / placement / apply and are
-bit-identical.
+packs (row, priority) into one u32.  Wide keys — u64 two-plane AND
+composite ``key_words >= 2`` multi-column keys (``hashing.pack_columns``)
+— and arbitrary user combiner *callables* take the general lane: one
+stable MULTI-PLANE LEXICOGRAPHIC sort by (masked, key plane_{kw-1} ..
+plane_0, batch index) (``_sort_batch``), with group segments bounded by
+the all-plane adjacent-equality compare (``_group_structure``) — never a
+single-plane compare, so composite keys differing only in a high word
+occupy distinct groups.  Both lanes share probe / placement / apply
+(which are plane-count agnostic: the probe word is the
+``key_hash_word`` fold of every plane) and are bit-identical.
 
 **Parity.**  The engine is bit-exact against the ``backend="scan"``
 reference — same claimed slots, same table state, same per-element STATUS
@@ -507,7 +512,7 @@ def _finish_fast(table, keys, live, is_rep, rep_of, matched, mrow, mlane,
 def insert_single(table, keys, values, mask=None):
     """Bulk path for ``single_value.insert`` (plain upsert, LWW dedup)."""
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     values = sv.normalize_words(values, table.value_words, "values")
     n = keys.shape[0]
     if mask is None:
@@ -541,7 +546,7 @@ def update_single(table, keys, update_fn, combine, init, values, mask=None):
     would.
     """
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
@@ -593,7 +598,7 @@ def insert_multi(table, keys, values, mask=None):
     element is a claimer, duplicates of a key contend for slots and the
     fixpoint resolves them in batch order)."""
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     values = sv.normalize_words(values, table.value_words, "values")
     n = keys.shape[0]
     if mask is None:

@@ -9,10 +9,13 @@ efficiency — Compact Parallel Hash Tables, 2406.09255), so this module
 collapses count + gather into ONE walk:
 
 1. **Dedup front-end** — duplicate probe keys are grouped (the bulk
-   engine's sort + ``searchsorted`` fast lane for 1-word keys, the stable
-   payload sort for wide keys) and only one *representative* per distinct
-   live key walks the table; results fan back out to every duplicate by
-   segment at the end.
+   engine's sort + ``searchsorted`` fast lane for 1-word keys; for wide
+   keys — u64 or composite ``key_words >= 2`` — the stable multi-plane
+   lexicographic payload sort, whose group segments are bounded by the
+   all-plane adjacent compare, so composite keys differing only in a
+   high plane never share a representative) and only one
+   *representative* per distinct live key walks the table; results fan
+   back out to every duplicate by segment at the end.
 2. **Fused walk** — representatives run a single vectorized COPS walk
    that simultaneously accumulates per-query match *counts* and records
    every matching slot in a slot-space *arena*: ``arena[slot] = (query,
@@ -35,12 +38,29 @@ Tombstoning after the walk is bit-equivalent to the reference's in-walk
 scatters: a tombstone never matches another live query key and never
 creates an EMPTY, so no other query's walk can observe the difference.
 
+**The slot-arena contract** (``layouts.StoreOps``): the walk records
+matches as FLAT SLOT IDS — ``arena_capacity`` ids, ``arena_values(store,
+slots)`` gathers value vectors by id, ``arena_tombstone`` deletes by
+occupied-mask.  Any store that renders those three rides this engine's
+walk + compaction unchanged: open-addressing layouts expose
+``row * window + lane``, the bucket-list table its value pool.
+
+**The revisit-free guard** (``fused_ok``): the arena holds at most one
+(query, rank) pair per slot, so the fused gather/erase path requires
+walks that never visit a probe row twice — cops/linear with
+``max_probes <= num_rows``.  Quadratic or wrapped walks can legitimately
+re-emit a slot per visit, semantics only the two-walk reference
+produces, so dispatchers fall back to it (counting has no arena and
+stays fused regardless).
+
 Everything here is bit-exact against the ``backend="scan"`` reference
 paths (the pre-PR while-loop walks kept in ``single_value`` /
 ``multi_value``): identical values, offsets, counts, found/erased masks,
 and post-erase store planes.  ``tests/test_retrieve.py`` asserts this on
 adversarial batches (duplicates, masks, tombstone-riddled tables,
-``out_capacity`` overflow, u64 keys, empty batches).
+``out_capacity`` overflow, u64 keys, empty batches);
+``tests/test_composite_keys.py`` extends the matrix to composite
+multi-column keys against packed single-word references.
 """
 
 from __future__ import annotations
@@ -252,7 +272,7 @@ def _emit_store(table, out_capacity, counts, is_rep, rep_of, rcnt, qarena,
 def count_multi(table, keys, mask=None):
     """Fused path for ``multi_value.count_values`` (dedup + one walk)."""
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     if n == 0:
         return jnp.zeros((0,), _I)
@@ -268,7 +288,7 @@ def retrieve_all_multi(table, keys, out_capacity, mask=None):
     """Fused path for ``multi_value.retrieve_all``: the single-walk
     count+gather this engine exists for."""
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     vw = table.value_words
     if n == 0:
@@ -293,7 +313,7 @@ def erase_multi(table, keys):
     """Fused path for ``multi_value.erase``: the walk's occupied-arena mask
     drives one dense batched tombstone write."""
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     if n == 0:
         return table, jnp.zeros((0,), _I)
@@ -329,7 +349,7 @@ def retrieve_single(table, keys):
     """Fused path for ``single_value.retrieve``: duplicate probe keys walk
     once; duplicates read their representative's slot."""
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     vw = table.value_words
     if n == 0:
@@ -347,7 +367,7 @@ def retrieve_single(table, keys):
 
 def contains_single(table, keys):
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     if keys.shape[0] == 0:
         return jnp.zeros((0,), bool)
     _, rep_of, matched, _, _ = _locate_reps(table, keys)
@@ -360,7 +380,7 @@ def erase_single(table, keys, mask=None):
     separate distinct-count sort)."""
     from repro.core import bulk
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     if n == 0:
         return table, jnp.zeros((0,), bool)

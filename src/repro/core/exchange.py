@@ -54,9 +54,15 @@ def multisplit(owners: jax.Array, num_parts: int, *arrays: jax.Array):
 
 
 def owner_of(keys: jax.Array, num_owners: int, key_words: int) -> jax.Array:
-    """Shard owner per key (independent mixer from probing — DESIGN.md §2)."""
+    """Shard owner per key (independent mixer from probing — DESIGN.md §2).
+
+    Folds ALL ``key_words`` planes (``key_hash_word``) before
+    ``hash_owner``, so composite/u64 keys that differ only in a high
+    plane land on independent owners — co-partitioning stays uniform for
+    multi-column relational keys, not just the primary plane.
+    """
     from repro.core import single_value as sv
-    word = sv.key_hash_word(sv.normalize_words(keys, key_words, "keys"))
+    word = sv.key_hash_word(sv.normalize_key_batch(keys, key_words, "keys"))
     return hashing.hash_owner(word, num_owners)
 
 
@@ -126,7 +132,7 @@ def ownership_exchange(keys, payload, axis: str, *, key_words: int = 1,
     """
     from repro.core import single_value as sv
     num = axis_size_compat(axis)
-    keys = sv.normalize_words(keys, key_words, "keys")
+    keys = sv.normalize_key_batch(keys, key_words, "keys")
     n = keys.shape[0]
     cap = int(np.ceil(n / num * slack))
     owners = owner_of(keys, num, key_words)

@@ -77,6 +77,57 @@ def combine_planes(hi: jax.Array, lo: jax.Array) -> jax.Array:
     return h
 
 
+# ---------------------------------------------------------------------------
+# composite multi-column keys — pack N u32 columns into key planes
+# ---------------------------------------------------------------------------
+#
+# Relational workloads join / group on *tuples* of columns (the cuDF
+# comparison class the paper benchmarks, §V).  A composite key is stored
+# as ``key_words = N`` u32 planes, reusing exactly the representation the
+# tables already use for 64-bit keys: plane 0 is the PRIMARY plane
+# (carries the EMPTY/TOMBSTONE sentinels) and holds the LEAST significant
+# column, so for two columns the planes are bit-for-bit the (hi, lo)
+# planes of the u64 key ``(col0 << 32) | col1`` — the u64 fast path:
+# packing is pure plane placement, no arithmetic, and a 2-column
+# composite table is indistinguishable from a u64-keyed one.
+
+def pack_columns(columns) -> jax.Array:
+    """Pack a sequence of N (n,) u32 columns into (n, N) key planes.
+
+    Column 0 is the MOST significant: lexicographic order over
+    ``(col0, col1, ...)`` equals numeric order of the concatenated
+    big-endian integer, and for N == 2 the result equals the table-native
+    (hi, lo) planes of ``(col0 << 32) | col1`` (see ``common.split_u64``).
+    The in-band sentinel restriction (``common.MAX_USER_KEY``) lands on
+    the LAST column, which becomes plane 0.
+    """
+    if len(columns) == 0:
+        raise ValueError("pack_columns needs at least one column")
+    cols = []
+    for i, c in enumerate(columns):
+        c = jnp.asarray(c)
+        if c.dtype == jnp.int32:
+            c = c.astype(_U)
+        if c.dtype != jnp.uint32:
+            raise TypeError(f"column {i} must be uint32, got {c.dtype}")
+        if c.ndim != 1:
+            raise ValueError(f"column {i} must be 1-D, got shape {c.shape}")
+        cols.append(c)
+    if any(c.shape != cols[0].shape for c in cols):
+        raise ValueError("key columns must share one length")
+    # column 0 -> highest plane; plane 0 (sentinels) is the last column
+    return jnp.stack(list(reversed(cols)), axis=1)
+
+
+def unpack_columns(keys: jax.Array) -> tuple[jax.Array, ...]:
+    """Inverse of ``pack_columns``: (n, N) key planes -> N (n,) columns."""
+    keys = jnp.asarray(keys)
+    if keys.ndim == 1:
+        keys = keys[:, None]
+    kw = keys.shape[-1]
+    return tuple(keys[..., kw - 1 - i] for i in range(kw))
+
+
 def hash_rows(key_word: jax.Array, num_rows: int, seed: int) -> jax.Array:
     """Initial probe row: h1(k) in [0, num_rows)."""
     h = mix_murmur3(key_word ^ _U(np.uint32(seed)))

@@ -2,7 +2,9 @@
 
 A thin wrapper over SingleValueHashTable with zero value words: the layout
 machinery handles value_words == 0 (empty value planes), so probing/insert/
-erase are shared verbatim.
+erase are shared verbatim — including composite multi-word keys (pass
+``key_words=N`` at ``create`` and feed tuples of u32 columns or (n, N)
+plane arrays; see ``single_value.normalize_keys``).
 """
 
 from __future__ import annotations
@@ -30,7 +32,7 @@ def create(min_capacity: int, *, key_words: int = 1, window: int = DEFAULT_WINDO
 
 def add(hs: HashSet, keys, mask=None) -> tuple[HashSet, jax.Array]:
     """Insert keys; returns (set, newly_added mask)."""
-    keys_n = sv.normalize_words(keys, hs.key_words, "keys")
+    keys_n = sv.normalize_key_batch(keys, hs.key_words, "keys")
     vals = jnp.zeros((keys_n.shape[0], 0), jnp.uint32)
     hs, status = sv.insert(hs, keys_n, vals, mask)
     return hs, status == STATUS_INSERTED

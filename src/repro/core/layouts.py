@@ -21,11 +21,19 @@ access pattern the engines need —
   ``arena_tombstone``): a flat slot-indexed view of the store.  The fused
   bulk-retrieval engine records matches as flat slot ids during its single
   walk and compacts them afterwards; any store that can gather values (and
-  write tombstones) by flat slot id can ride that engine.  For the
+  write tombstones) by flat slot id can ride that engine.  The contract,
+  precisely: (1) ``arena_capacity`` is a static int — the number of
+  addressable slots; (2) ``arena_values(store, slots)`` gathers
+  ``(len(slots), value_words)`` u32 vectors for any in-range slot-id
+  array (callers clip; gathered lanes are masked by caller validity);
+  (3) ``arena_tombstone(store, occupied)`` deletes every slot whose
+  (capacity,) mask bit is set, in one batched write.  For the
   open-addressing layouts a slot id is ``row * window + lane``; the
   bucket-list table exposes its value *pool* through the same hook
   (``repro.core.bucket_list``), which is what lets one walk/compaction
-  implementation serve both store shapes.
+  implementation serve both store shapes.  The engine-side guard on this
+  contract is ``bulk_retrieve.fused_ok``: the arena binds each slot to at
+  most one (query, rank) pair, so only revisit-free walks may use it.
 
 Concrete protocols:
 
@@ -47,7 +55,11 @@ consumer dispatches on it: ``make_ops(layout, ...)`` (cached) resolves it
 to the protocol object once and everything downstream calls methods.
 All writes are functional (return a new store).  64-bit keys/values use
 two u32 words (hi, lo ordering: word 0 is the PRIMARY plane carrying
-sentinels).
+sentinels); composite multi-column keys generalize this to
+``key_words = N`` planes (``hashing.pack_columns`` — plane 0 holds the
+last, least-significant column, so the sentinel restriction stays a
+plane-0 property and every layout stores N-word keys without a special
+case).
 """
 
 from __future__ import annotations

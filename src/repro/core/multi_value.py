@@ -11,6 +11,11 @@ As in the paper, ``retrieve_all`` needs the output size up front: a separate
 vectorized *counting pass* produces per-key counts, the caller prefix-sums
 them into offsets and supplies a static output capacity (§IV-B.4: "the size
 of the output array has to be determined in a separate counting pass").
+
+Keys may be ``key_words >= 2`` composite/u64 keys: every entry point
+normalizes through ``single_value.normalize_key_batch``, so batches can
+be passed as (n, kw) plane arrays, tuples of u32 columns, or numpy
+uint64.
 """
 
 from __future__ import annotations
@@ -35,7 +40,11 @@ from repro.core.common import (
     static_field,
     table_geometry,
 )
-from repro.core.single_value import key_hash_word, normalize_words
+from repro.core.single_value import (
+    key_hash_word,
+    normalize_key_batch,
+    normalize_words,
+)
 
 _U = jnp.uint32
 _I = jnp.int32
@@ -146,7 +155,7 @@ def insert(table: MultiValueHashTable, keys, values, mask=None,
 def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
                 ) -> tuple[MultiValueHashTable, jax.Array]:
     """Sequential-scan reference append (the bulk engine's parity oracle)."""
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     values = normalize_words(values, table.value_words, "values")
     n = keys.shape[0]
     if mask is None:
@@ -199,7 +208,7 @@ def count_values(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
 
 def count_values_scan(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
     """Reference counting pass: one dedicated probe walk for the counts."""
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     word = key_hash_word(keys)
     row0 = probing.initial_row(word, table.num_rows, table.seed)
@@ -258,7 +267,7 @@ def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
 def retrieve_all_scan(table: MultiValueHashTable, keys, out_capacity: int,
                       mask=None) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Reference two-walk retrieval: counting pass, then a gather re-probe."""
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     counts = count_values_scan(table, keys, mask)
     offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
@@ -314,7 +323,7 @@ def erase(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, jax.Ar
 
 def erase_scan(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, jax.Array]:
     """Reference erase: in-walk tombstone scatters + full live recount."""
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     word = key_hash_word(keys)
     row0 = probing.initial_row(word, table.num_rows, table.seed)
@@ -355,7 +364,7 @@ def for_each(table: MultiValueHashTable, keys, fn: Callable, max_values: int):
     ``max_values`` bounds values per key (static).  Device-sided callback
     analogue of §IV-B.4 for the multi-value case.
     """
-    keys_n = normalize_words(keys, table.key_words, "keys")
+    keys_n = normalize_key_batch(keys, table.key_words, "keys")
     n = keys_n.shape[0]
     vals, offsets, counts = retrieve_all(table, keys_n, n * max_values)
     vals = normalize_words(vals, table.value_words, "values")

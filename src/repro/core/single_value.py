@@ -35,7 +35,9 @@ Semantics (paper §IV-B.3–5, adapted):
 
   Retrieval has no write hazards and is fully vectorized on every backend.
 
-Key/value widths are in 32-bit words (1 => u32, 2 => u64 as hi/lo planes).
+Key/value widths are in 32-bit words (1 => u32, 2 => u64 as hi/lo planes,
+N => composite multi-column keys packed by ``hashing.pack_columns`` —
+key batches may be passed as tuples of u32 columns, see ``normalize_keys``).
 """
 
 from __future__ import annotations
@@ -122,8 +124,38 @@ def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
 # normalization helpers
 # ---------------------------------------------------------------------------
 
+def as_key_planes(x):
+    """Coerce the accepted key spellings to a plane array (others unchanged).
+
+    - a TUPLE of (n,) u32 ARRAY columns — a *composite* multi-column key
+      — packs via ``hashing.pack_columns`` (column 0 most significant).
+      Only tuples whose every element is already a 1-D array trigger
+      this: plain lists, tuples of scalars (``(1, 2, 3)``) and nested
+      tuples of numbers keep their historical ``jnp.asarray`` meaning,
+      so no pre-existing spelling is silently reinterpreted;
+    - host-side numpy uint64 — splits into the table-native (lo, hi)
+      planes via ``common.split_u64`` (no jax_enable_x64 needed);
+    - anything else passes through for ``normalize_words``' own checks.
+    """
+    if (isinstance(x, tuple) and len(x) > 0
+            and all(isinstance(c, (np.ndarray, jax.Array))
+                    and c.ndim == 1 for c in x)):
+        return hashing.pack_columns(x)
+    if isinstance(x, np.ndarray) and x.dtype == np.uint64:
+        from repro.core.common import split_u64
+        hi, lo = split_u64(x)
+        return jnp.stack([lo, hi], axis=1)
+    return x
+
+
 def normalize_words(x, words: int, name: str) -> jax.Array:
-    """Accept (n,) u32 [words==1] or (n, words) u32; return (n, words)."""
+    """Accept (n,) u32 [words==1] or (n, words) u32; return (n, words).
+
+    Plain word normalization — used for VALUE batches as well as keys,
+    so it performs no key-specific coercion (a tuple of value columns
+    would otherwise be silently packed in the key convention's reversed
+    plane order).  Key call sites go through ``normalize_key_batch``.
+    """
     x = jnp.asarray(x)
     if x.dtype != jnp.uint32:
         if x.dtype in (jnp.int32,):
@@ -135,6 +167,31 @@ def normalize_words(x, words: int, name: str) -> jax.Array:
     if x.shape[-1] != words:
         raise ValueError(f"{name} has {x.shape[-1]} words, table expects {words}")
     return x
+
+
+def normalize_key_batch(x, words: int, name: str = "keys") -> jax.Array:
+    """``normalize_words`` for KEY batches: additionally accepts the
+    composite spellings (tuple of u32 columns, host numpy uint64) via
+    ``as_key_planes``.  Every key-consuming table entry point normalizes
+    through here, so the whole API takes all three spellings."""
+    return normalize_words(as_key_planes(x), words, name)
+
+
+def normalize_keys(x, words: int | None = None, name: str = "keys",
+                   ) -> tuple[jax.Array, int]:
+    """``normalize_words`` that can *infer* the word count from the input.
+
+    The entry point for APIs that build their own table (relational
+    ``hash_join`` / ``aggregate`` / ``distinct``): a tuple of N columns
+    infers ``key_words = N``, a (n, kw) plane array infers ``kw``, a flat
+    (n,) batch infers 1, numpy uint64 infers 2.  An explicit ``words``
+    still wins (and is validated).  Returns ``(planes, key_words)``.
+    """
+    x = as_key_planes(x)
+    if words is None:
+        arr = jnp.asarray(x)
+        words = arr.shape[-1] if arr.ndim == 2 else 1
+    return normalize_words(x, words, name), words
 
 
 def key_hash_word(keys: jax.Array) -> jax.Array:
@@ -209,7 +266,7 @@ def retrieve(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
 
 def retrieve_scan(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
     """Reference lookup: one direct probe walk per batch (no dedup)."""
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     rows, lanes, found = _locate(table, keys)
     vp = table.value_planes()                                     # (vw, p, W)
     vals = vp[:, rows, lanes].T                                   # (n, vw)
@@ -220,7 +277,7 @@ def retrieve_scan(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Arr
 
 
 def contains(table: SingleValueHashTable, keys) -> jax.Array:
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     if table.backend != "scan":
         from repro.core import bulk_retrieve
         return bulk_retrieve.contains_single(table, keys)
@@ -258,7 +315,7 @@ def erase(table: SingleValueHashTable, keys, mask=None) -> tuple[SingleValueHash
 def erase_scan(table: SingleValueHashTable, keys, mask=None,
                ) -> tuple[SingleValueHashTable, jax.Array]:
     """Reference erase: direct batch walk + distinct-key count delta."""
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     rows, lanes, found = _locate(table, keys)
     if mask is not None:
         found = found & mask
@@ -355,7 +412,7 @@ def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
     provides the paper's linearizability (DESIGN.md §2).  Kept as the parity
     oracle for the bulk engine and the Pallas kernel.
     """
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     values = normalize_words(values, table.value_words, "values")
     n = keys.shape[0]
     if mask is None:
@@ -402,7 +459,7 @@ def for_each(table: SingleValueHashTable, keys, fn: Callable) -> Any:
     The JAX rendering of the paper's device-sided callback: ``fn`` is traced
     into the same jitted computation, so no intermediate results hit HBM.
     """
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     vals, found = retrieve(table, keys)
     return jax.vmap(fn)(keys, normalize_words(vals, table.value_words, "values"),
                         found)
@@ -434,7 +491,7 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
     bulk engine runs; without it the fold is not reorderable and the
     sequential scan reference is used.
     """
-    keys = normalize_words(keys, table.key_words, "keys")
+    keys = normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)

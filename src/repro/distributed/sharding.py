@@ -193,7 +193,10 @@ def scalar_sharding(mesh: Mesh):
 # (repro.relational.join) reuse that rule to co-partition *both* sides of a
 # join: route build and probe batches to the key's owner, and each shard
 # joins only the keys it owns — one writer per shard, no CAS, no result
-# merging.  The routing block itself (owner_of -> make_plan -> scatter ->
+# merging.  Composite multi-word keys ride the same exchange: ``owner_of``
+# folds every key plane before ``hash_owner``, so (n, key_words) batches
+# co-partition uniformly and the sharded join accepts tuple-of-column keys
+# end-to-end.  The routing block itself (owner_of -> make_plan -> scatter ->
 # all_to_all) lives in ``repro.core.exchange`` — one implementation for the
 # distributed tables AND the relational shuffle — and the version shims in
 # ``repro.core.compat``; both are re-exported here for existing callers

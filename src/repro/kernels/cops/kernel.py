@@ -17,8 +17,12 @@ TPU mapping of the warp-cooperative scheme (DESIGN.md §2):
   not a scalar lane store.
 
 The kernel supports the single-value upsert (claim-or-update), the
-multi-value append (claim-only), and lookup.  u32 keys / u32 values, SOA
-layout (kernel-side restriction; wider types take the pure-JAX path).
+multi-value append (claim-only), lookup, the fused group-by RMW, the
+fused multi-value retrieval walk, and the bucket-list chain walk.  u32
+keys / u32 values, SOA layout; 2-plane composite/u64 keys have dedicated
+``*64`` variants (insert64 / lookup64 / retrieve_multi64) whose window
+match ANDs both planes — wider configurations take the pure-JAX path
+(see the dispatchers' eligibility checks in ``ops.py``).
 """
 
 from __future__ import annotations
@@ -682,6 +686,97 @@ def lookup64_call(tk0, tk1, tv, k0_2d, k1_2d, *, seed, max_probes,
         ],
         interpret=interpret,
     )(k0_2d, k1_2d, tk0, tk1, tv)
+
+
+def _retrieve64_kernel(k0_ref, k1_ref, mask_ref, tk0_ref, tk1_ref,
+                       qa_in, ra_in, qa_ref, ra_ref, cnt_ref,
+                       *, num_rows, window, seed, max_probes, scheme,
+                       collect):
+    """Two-plane fused retrieval walk (composite / u64 keys).
+
+    Mirrors ``_retrieve_kernel`` with the window match ANDed over both
+    key planes: one walk emits per-query counts and stamps (query, rank)
+    into the slot arena.  Probe row/step come from the same
+    ``combine_planes`` fold the host engines use, so the walk visits
+    exactly the rows the jax path visits.
+    """
+    del qa_in, ra_in
+    tile = k0_ref.shape[1]
+    i = pl.program_id(0)
+
+    def one_key(j, _):
+        k0 = k0_ref[0, j]                 # primary plane (sentinels)
+        k1 = k1_ref[0, j]
+        m = mask_ref[0, j] != 0
+        qidx = i * tile + j
+        word = hashing.combine_planes(k1, k0)
+        row0, step = _probe_setup(word, num_rows, seed, scheme)
+
+        def cond(st):
+            attempt, row, done, seen = st
+            return jnp.logical_and(attempt < max_probes, ~done)
+
+        def body(st):
+            attempt, row, done, seen = st
+            ri = row.astype(_I)
+            win0 = tk0_ref[pl.ds(ri, 1), :][0]
+            win1 = tk1_ref[pl.ds(ri, 1), :][0]
+            match = (win0 == k0) & (win1 == k1)
+            nm = jnp.sum(match.astype(_I))
+            has_empty = jnp.any(win0 == EMPTY_KEY)
+
+            if collect:
+                rank = jnp.cumsum(match.astype(_I)) - 1 + seen
+
+                @pl.when(nm > 0)
+                def _():
+                    qrow = qa_ref[pl.ds(ri, 1), :][0]
+                    qa_ref[pl.ds(ri, 1), :] = jnp.where(match, qidx,
+                                                        qrow)[None, :]
+                    rrow = ra_ref[pl.ds(ri, 1), :][0]
+                    ra_ref[pl.ds(ri, 1), :] = jnp.where(match, rank,
+                                                        rrow)[None, :]
+
+            seen = seen + nm
+            done = has_empty
+            nrow = (row + step) % _U(num_rows)
+            return attempt + 1, jnp.where(done, row, nrow), done, seen
+
+        st = (jnp.zeros((), _I), row0, ~m, jnp.zeros((), _I))
+        _, _, _, seen = jax.lax.while_loop(cond, body, st)
+        cnt_ref[0, j] = seen
+        return 0
+
+    jax.lax.fori_loop(0, tile, one_key, 0)
+
+
+def retrieve_multi64_call(tk0, tk1, qa0, ra0, k0_2d, k1_2d, mask2d, *, seed,
+                          max_probes, scheme="cops", collect=True,
+                          interpret=True):
+    """Two-plane ``retrieve_multi_call``: k0/k1/mask (G, T), qa0/ra0 the
+    sentinel-initialized (p, W) arena planes (aliased in/out).  Returns
+    (qarena, rank_arena, counts2d)."""
+    num_rows, window = tk0.shape
+    g, tile = k0_2d.shape
+    kern = functools.partial(
+        _retrieve64_kernel, num_rows=num_rows, window=window, seed=seed,
+        max_probes=max_probes, scheme=scheme, collect=collect)
+    full = pl.BlockSpec((num_rows, window), lambda i: (0, 0))
+    arena = pl.BlockSpec(qa0.shape, lambda i: (0, 0))
+    row_tile = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[row_tile, row_tile, row_tile, full, full, arena, arena],
+        out_specs=[arena, arena, row_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct(qa0.shape, _I),
+            jax.ShapeDtypeStruct(ra0.shape, _I),
+            jax.ShapeDtypeStruct((g, tile), _I),
+        ],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(k0_2d, k1_2d, mask2d, tk0, tk1, qa0, ra0)
 
 
 # ---------------------------------------------------------------------------

@@ -2,8 +2,12 @@
 
 Handles batch padding/tiling, table-struct plumbing, and the
 interpret-mode switch (interpret=True everywhere except on real TPU).
-Kernel path restrictions: SOA layout, 1-word keys and values — wider
-configurations fall back to the pure-JAX implementation in repro.core.
+Kernel path restrictions (the ``*_ok`` eligibility checks below): SOA
+layout (``ops.planar``), 1-word values, and 1- or 2-plane keys — the
+2-plane composite/u64 key variants ride the ``*64`` tiles for insert,
+lookup and the fused retrieval walk.  Wider configurations (key_words >
+2, multi-word values, group-by on composite keys) fall back to the
+pure-JAX engines in repro.core, which handle any plane count.
 """
 
 from __future__ import annotations
@@ -69,7 +73,7 @@ def _insert64_jit(tk0, tk1, tv, k0, k1, vals, mask, *, seed, max_probes,
 
 def _insert_dispatch(table, keys, values, mask, multi_value):
     from repro.core import single_value as sv
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     values = sv.normalize_words(values, 1, "values")[:, 0]
     if mask is None:
         mask = jnp.ones(values.shape, bool)
@@ -115,6 +119,8 @@ def insert_multi(table, keys, values, mask=None):
 
 
 def _groupby_ok(table) -> bool:
+    # composite (key_words >= 2) group-bys fall back to the vectorized jax
+    # RMW path — no *64 update tile yet (ROADMAP follow-on)
     return (table.ops.planar and table.key_words == 1
             and table.value_words == 2 and table.scheme in ("cops", "linear"))
 
@@ -146,7 +152,7 @@ def update_groupby(table, agg, keys, payload, mask=None):
         t, status = sv.update_values(jx, keys, gb._fold_fn(agg), payload,
                                      mask=mask, combine=gb._combine_fn(agg))
         return dataclasses.replace(t, backend=table.backend), status
-    keys = sv.normalize_words(keys, 1, "keys")[:, 0]
+    keys = sv.normalize_key_batch(keys, 1, "keys")[:, 0]
     vals = payload[:, 0]
     if mask is None:
         mask = jnp.ones(keys.shape, bool)
@@ -186,7 +192,10 @@ def _lookup64_jit(tk0, tk1, tv, k0, k1, *, seed, max_probes, scheme, tile,
 # ---------------------------------------------------------------------------
 
 def _retrieve_ok(table) -> bool:
-    return (table.ops.planar and table.key_words == 1
+    # 1-word keys walk the u32 tile, 2-plane composite/u64 keys the *64
+    # tile; wider composite keys (key_words > 2) fall back to the jax
+    # engine, whose general lane handles any plane count
+    return (table.ops.planar and table.key_words in (1, 2)
             and table.scheme in ("cops", "linear"))
 
 
@@ -207,16 +216,48 @@ def _retrieve_walk_jit(tk, keys, active, *, seed, max_probes, scheme, tile,
     return cnt2.reshape(-1)[:n], qa.reshape(-1), ra.reshape(-1)
 
 
+@functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme",
+                                             "tile", "sentinel", "collect",
+                                             "interpret"))
+def _retrieve_walk64_jit(tk0, tk1, k0, k1, active, *, seed, max_probes,
+                         scheme, tile, sentinel, collect, interpret):
+    num_rows, window = tk0.shape
+    k0_2, n = _tile_batch(k0, tile, EMPTY_KEY)
+    k1_2, _ = _tile_batch(k1, tile, 0)
+    m2, _ = _tile_batch(active.astype(_I), tile, 0)
+    ashape = (num_rows, window) if collect else (1, 1)
+    qa0 = jnp.full(ashape, _I(sentinel), _I)
+    ra0 = jnp.zeros(ashape, _I)
+    qa, ra, cnt2 = K.retrieve_multi64_call(tk0, tk1, qa0, ra0, k0_2, k1_2,
+                                           m2, seed=seed,
+                                           max_probes=max_probes,
+                                           scheme=scheme, collect=collect,
+                                           interpret=interpret)
+    return cnt2.reshape(-1)[:n], qa.reshape(-1), ra.reshape(-1)
+
+
 def _fused_walk_pallas(table, keys_n, live, collect=True):
-    """Dedup front-end + kernel walk; returns (is_rep, rep_of, rcnt, qa, ra)."""
+    """Dedup front-end + kernel walk; returns (is_rep, rep_of, rcnt, qa, ra).
+
+    Dispatches on ``table.key_words``: 1 -> the u32 walk tile, 2 -> the
+    two-plane composite/u64 tile (callers gate wider keys via
+    ``_retrieve_ok``).
+    """
     from repro.core import bulk_retrieve as br
     n = keys_n.shape[0]
     is_rep, rep_of = br.group_queries(keys_n, live)
     tile = min(K.DEFAULT_TILE, n)
-    rcnt, qa, ra = _retrieve_walk_jit(
-        table.store["keys"][0], keys_n[:, 0], is_rep, seed=table.seed,
-        max_probes=table.max_probes, scheme=table.scheme, tile=tile,
-        sentinel=n, collect=collect, interpret=should_interpret())
+    if table.key_words == 2:
+        rcnt, qa, ra = _retrieve_walk64_jit(
+            table.store["keys"][0], table.store["keys"][1], keys_n[:, 0],
+            keys_n[:, 1], is_rep, seed=table.seed,
+            max_probes=table.max_probes, scheme=table.scheme, tile=tile,
+            sentinel=n, collect=collect, interpret=should_interpret())
+    else:
+        rcnt, qa, ra = _retrieve_walk_jit(
+            table.store["keys"][0], keys_n[:, 0], is_rep, seed=table.seed,
+            max_probes=table.max_probes, scheme=table.scheme, tile=tile,
+            sentinel=n, collect=collect, interpret=should_interpret())
     return is_rep, rep_of, rcnt, qa, ra
 
 
@@ -225,7 +266,7 @@ def count_multi(table, keys, mask=None):
     (no arena planes allocated or written)."""
     from repro.core import bulk_retrieve as br
     from repro.core import single_value as sv
-    keys_n = sv.normalize_words(keys, table.key_words, "keys")
+    keys_n = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys_n.shape[0]
     if n == 0 or not _retrieve_ok(table):
         return br.count_multi(table, keys_n, mask)
@@ -240,7 +281,7 @@ def retrieve_all_multi(table, keys, out_capacity, mask=None):
     bulk-retrieval engine's scatter/gather compaction."""
     from repro.core import bulk_retrieve as br
     from repro.core import single_value as sv
-    keys_n = sv.normalize_words(keys, table.key_words, "keys")
+    keys_n = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys_n.shape[0]
     if n == 0 or not _retrieve_ok(table):
         return br.retrieve_all_multi(table, keys_n, out_capacity, mask)
@@ -289,7 +330,7 @@ def bucket_retrieve_all(table, keys, out_capacity):
     from repro.core import bulk_retrieve as br
     from repro.core import single_value as sv
     ks = table.key_store
-    keys_n = sv.normalize_words(keys, ks.key_words, "keys")
+    keys_n = sv.normalize_key_batch(keys, ks.key_words, "keys")
     n = keys_n.shape[0]
     if n == 0 or not (ks.ops.planar and ks.key_words == 1):
         return bl._retrieve_fused(table, keys_n, out_capacity)
@@ -312,7 +353,7 @@ def retrieve(table, keys):
     from repro.core import single_value as sv
     if not _kernel_ok(table):
         return sv.retrieve(dataclasses.replace(table, backend="jax"), keys)
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     tile = min(K.DEFAULT_TILE, keys.shape[0])
     if table.key_words == 2:
         return _lookup64_jit(

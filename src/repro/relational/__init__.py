@@ -21,11 +21,14 @@ operator              cuDF analogue                   substrate
 
 Every operator is a pure, jittable pytree function and runs on both the
 ``"jax"`` and ``"pallas"`` table backends (the build side of a join goes
-through the COPS Pallas kernel when the table says so).  The sharded
-join co-partitions both inputs by the ``hash_owner`` rule via
-``repro.distributed.sharding.ownership_exchange`` — one writer per
-shard, the paper's multi-GPU ownership partitioning (§IV-E) reused as a
-shuffle.
+through the COPS Pallas kernel when the table says so).  Keys may be
+composite: pass a tuple of u32 columns (``hash_join((a, b), (c, d),
+...)``) and ``key_words`` is inferred — outputs are bit-exact against
+the equivalently-packed single-word run (fig9's in-run parity gate).
+The sharded join co-partitions both inputs by the ``hash_owner`` rule
+via ``repro.distributed.sharding.ownership_exchange`` (hashing every
+key plane) — one writer per shard, the paper's multi-GPU ownership
+partitioning (§IV-E) reused as a shuffle.
 """
 
 from repro.relational import distinct, groupby, join

@@ -15,6 +15,11 @@ Pure, jittable, pytree-functional, like the rest of repro.relational.
 Membership re-checks (``hs.contains`` on the running set) ride the fused
 bulk-retrieval engine's dedup walk on the default backend, like every
 other retrieval consumer.
+
+Composite multi-column keys: ``distinct`` accepts a tuple of u32 columns
+(``key_words`` inferred) and then returns the unique keys as a matching
+tuple of columns; DISTINCT over (a, b) pairs is one call, no manual
+packing.
 """
 
 from __future__ import annotations
@@ -22,6 +27,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import hashing
 from repro.core import hashset as hs
 from repro.core import single_value as sv
 from repro.core.common import DEFAULT_SEED, DEFAULT_WINDOW
@@ -52,16 +58,19 @@ def first_occurrence(dset: DistinctSet, keys, mask=None,
     return hs.add(dset, keys, mask=mask)
 
 
-def distinct(keys, out_capacity: int, *, key_words: int = 1,
+def distinct(keys, out_capacity: int, *, key_words: int | None = None,
              window: int = DEFAULT_WINDOW, backend: str = "jax",
              load: float = 0.5, capacity: int | None = None, mask=None,
              ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One-shot DISTINCT: (unique_keys, n_unique, first_occurrence_mask).
 
-    ``unique_keys`` is (out_capacity,) (or (out_capacity, key_words)) in
-    first-occurrence order; entries past ``n_unique`` are zero.
+    ``unique_keys`` comes back in first-occurrence order, shaped like the
+    input: a tuple of columns for tuple input, (out_capacity,) for flat
+    1-word input, else (out_capacity, key_words) planes; entries past
+    ``n_unique`` are zero.  ``key_words`` is inferred when omitted.
     """
-    keys_n = sv.normalize_words(keys, key_words, "keys")
+    as_columns = isinstance(keys, tuple)
+    keys_n, key_words = sv.normalize_keys(keys, key_words, "keys")
     n = keys_n.shape[0]
     if capacity is None:
         capacity = capacity_for(n, load, window)
@@ -69,6 +78,8 @@ def distinct(keys, out_capacity: int, *, key_words: int = 1,
                   backend=backend)
     _, fresh = first_occurrence(dset, keys_n, mask=mask)
     packed, n_unique = compact(keys_n, fresh, out_capacity)
+    if as_columns:
+        return hashing.unpack_columns(packed), n_unique, fresh
     if key_words == 1:
         packed = packed[:, 0]
     return packed, n_unique, fresh

@@ -15,6 +15,13 @@ conflict resolution instead of the CUDA atomics a GPU group-by would use
 All operators are pure pytree functions; ``aggregate`` is the one-shot
 jittable entry point.  ``mean`` finalizes as float32 accumulator/count;
 ``sum`` wraps mod 2^32 like the u32 arithmetic it is built on.
+
+Group keys may be composite: pass a tuple of u32 columns (``aggregate(
+(region, year), amounts, ...)``) or an (n, key_words) plane array —
+``key_words`` is inferred by ``aggregate`` and ``single_value.
+normalize_key_batch`` accepts the same spellings on ``update``/``lookup``.
+``finalize`` returns multi-word group keys as (capacity, key_words)
+planes; ``core.hashing.unpack_columns`` turns them back into columns.
 """
 
 from __future__ import annotations
@@ -87,7 +94,7 @@ def update(table: GroupByTable, agg: str, keys, values=None, mask=None,
     associative combiner sends the fold down the vectorized bulk path
     (``backend="scan"`` keeps the sequential reference).
     """
-    keys = sv.normalize_words(keys, table.key_words, "keys")
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     if values is None:
         if agg != "count":
@@ -128,7 +135,8 @@ def finalize(table: GroupByTable, agg: str,
 
     Arrays span the table's full capacity; ``live_mask`` marks real groups
     (``int(table.count)`` of them).  Keys come back as (capacity,) for
-    1-word keys, else (capacity, key_words).
+    1-word keys, else (capacity, key_words) planes — use
+    ``core.hashing.unpack_columns`` to recover composite key columns.
     """
     kp = table.key_planes().reshape(table.key_words, -1)        # (kw, c)
     vp = table.value_planes().reshape(2, -1)                    # (2, c)
@@ -141,10 +149,16 @@ def finalize(table: GroupByTable, agg: str,
 
 
 def aggregate(keys, values, min_capacity: int, agg: str, *,
-              key_words: int = 1, window: int = DEFAULT_WINDOW,
+              key_words: int | None = None, window: int = DEFAULT_WINDOW,
               backend: str = "jax", mask=None,
               ) -> tuple[jax.Array, jax.Array, jax.Array, GroupByTable]:
-    """One-shot group-by: returns (group_keys, aggregates, live, table)."""
+    """One-shot group-by: returns (group_keys, aggregates, live, table).
+
+    ``keys`` may be a tuple of u32 columns (composite group key), an
+    (n, key_words) plane array, or a flat (n,) batch; ``key_words`` is
+    inferred when omitted.
+    """
+    keys, key_words = sv.normalize_keys(keys, key_words, "keys")
     table = create(min_capacity, key_words=key_words, window=window,
                    backend=backend)
     table, _ = update(table, agg, keys, values, mask=mask)

@@ -30,6 +30,21 @@ both sides by key ownership (``repro.distributed.sharding.
 ownership_exchange`` — the same ``hash_owner`` rule the distributed
 tables use), so every shard builds and probes only the keys it owns: one
 writer per shard, no CAS, no cross-shard result merge.
+
+**Composite multi-column keys.**  Real relational pipelines join on
+tuples of columns; every operator here accepts its key batches as a
+tuple of (n,) u32 columns (``hash_join((order_cust, order_day),
+...)``) or an explicit (n, key_words) plane array, with ``key_words``
+inferred from the input when not given (``core.hashing.pack_columns``
+defines the packing: column 0 most significant, two columns == the
+table-native u64 hi/lo planes).  Join OUTPUT is representation-
+independent: within each probe row's segment, matches are emitted in
+build-batch order regardless of the key packing or hash placement, so a
+composite join is bit-exact against the same join run over
+equivalently-packed single-word keys (the fig9 parity gate).  The
+sharded variant hashes ALL key planes for ownership (``exchange.
+owner_of`` folds the planes before ``hash_owner``), so co-partitioning
+stays uniform for composite keys too.
 """
 
 from __future__ import annotations
@@ -85,18 +100,21 @@ class JoinResult:
     total: jax.Array
 
 
-def build(build_keys, *, capacity: int | None = None, key_words: int = 1,
-          window: int = DEFAULT_WINDOW, scheme: str = "cops",
-          layout: str = "soa", seed: int = DEFAULT_SEED,
+def build(build_keys, *, capacity: int | None = None,
+          key_words: int | None = None, window: int = DEFAULT_WINDOW,
+          scheme: str = "cops", layout: str = "soa", seed: int = DEFAULT_SEED,
           max_probes: int | None = None, backend: str = "jax",
           load: float = 0.5, mask=None, row_ids=None,
           ) -> tuple[mv.MultiValueHashTable, jax.Array]:
     """Build phase: key -> build row index in a MultiValueHashTable.
 
-    ``row_ids`` overrides the stored row indices (the sharded join stores
-    *global* row ids).  Returns (table, insert_status).
+    ``build_keys`` may be a tuple of u32 columns (composite key), a
+    (n, key_words) plane array, or a flat (n,) batch; ``key_words`` is
+    inferred when omitted.  ``row_ids`` overrides the stored row indices
+    (the sharded join stores *global* row ids).  Returns
+    (table, insert_status).
     """
-    keys = sv.normalize_words(build_keys, key_words, "build_keys")
+    keys, key_words = sv.normalize_keys(build_keys, key_words, "build_keys")
     n = keys.shape[0]
     if capacity is None:
         capacity = capacity_for(n, load, window)
@@ -115,7 +133,7 @@ def count_matches(table: mv.MultiValueHashTable, probe_keys, how: str = "inner",
     Sum this (host-side or via a first jitted call) to size
     ``out_capacity`` for ``probe``.
     """
-    keys = sv.normalize_words(probe_keys, table.key_words, "probe_keys")
+    keys = sv.normalize_key_batch(probe_keys, table.key_words, "probe_keys")
     counts = mv.count_values(table, keys, mask=mask)
     live = jnp.ones(counts.shape, bool) if mask is None else mask
     if how == "inner":
@@ -145,7 +163,7 @@ def probe(table: mv.MultiValueHashTable, probe_keys, out_capacity: int,
     """
     if how not in HOW:
         raise ValueError(f"how={how!r} not in {HOW}")
-    keys = sv.normalize_words(probe_keys, table.key_words, "probe_keys")
+    keys = sv.normalize_key_batch(probe_keys, table.key_words, "probe_keys")
     n = keys.shape[0]
     live = jnp.ones((n,), bool) if mask is None else mask
 
@@ -193,11 +211,16 @@ def probe(table: mv.MultiValueHashTable, probe_keys, out_capacity: int,
 
 
 def hash_join(build_keys, probe_keys, out_capacity: int, how: str = "inner",
-              *, key_words: int = 1, window: int = DEFAULT_WINDOW,
+              *, key_words: int | None = None, window: int = DEFAULT_WINDOW,
               scheme: str = "cops", backend: str = "jax", load: float = 0.5,
               capacity: int | None = None, build_mask=None, probe_mask=None,
               ) -> JoinResult:
-    """One-shot build + probe.  Pure and jittable (out_capacity/how static)."""
+    """One-shot build + probe.  Pure and jittable (out_capacity/how static).
+
+    Composite keys: pass tuples of u32 columns for both sides
+    (``key_words`` inferred), e.g. ``hash_join((b_hi, b_lo),
+    (p_hi, p_lo), cap, "inner")`` for a two-column equi-join.
+    """
     table, _ = build(build_keys, capacity=capacity, key_words=key_words,
                      window=window, scheme=scheme, backend=backend, load=load,
                      mask=build_mask)
@@ -229,7 +252,7 @@ def gather_payload(result: JoinResult, build_values=None, probe_values=None,
 # ---------------------------------------------------------------------------
 
 def join_partitioned(build_keys, probe_keys, axis: str, out_capacity: int,
-                     how: str = "inner", *, key_words: int = 1,
+                     how: str = "inner", *, key_words: int | None = None,
                      window: int = DEFAULT_WINDOW, backend: str = "jax",
                      load: float = 0.5, slack: float = 2.0):
     """Per-shard body of the sharded hash join (call inside shard_map).
@@ -244,8 +267,8 @@ def join_partitioned(build_keys, probe_keys, axis: str, out_capacity: int,
     """
     from repro.distributed import sharding as shd
     idx = jax.lax.axis_index(axis)
-    bk = sv.normalize_words(build_keys, key_words, "build_keys")
-    pk = sv.normalize_words(probe_keys, key_words, "probe_keys")
+    bk, key_words = sv.normalize_keys(build_keys, key_words, "build_keys")
+    pk = sv.normalize_key_batch(probe_keys, key_words, "probe_keys")
     n_b, n_p = bk.shape[0], pk.shape[0]
     bgid = (idx * n_b + jnp.arange(n_b)).astype(_U)
     pgid = (idx * n_p + jnp.arange(n_p)).astype(_I)
@@ -271,12 +294,14 @@ def join_partitioned(build_keys, probe_keys, axis: str, out_capacity: int,
 
 def shard_join(mesh: Mesh, axis: str, build_keys, probe_keys,
                out_capacity_per_shard: int, how: str = "inner", *,
-               key_words: int = 1, window: int = DEFAULT_WINDOW,
+               key_words: int | None = None, window: int = DEFAULT_WINDOW,
                backend: str = "jax", load: float = 0.5, slack: float = 2.0):
     """Host-level sharded hash join over mesh ``axis``.
 
     ``build_keys`` / ``probe_keys`` are sharded over ``axis`` (leading dim
-    divisible by the axis size).  Returns a dict with the concatenated
+    divisible by the axis size); composite tuples-of-columns and
+    (n, key_words) plane arrays are accepted like ``hash_join`` (ownership
+    hashing folds every key plane).  Returns a dict with the concatenated
     per-shard outputs:
 
     - ``build_idx`` / ``probe_idx`` / ``valid``: (P * out_capacity_per_shard,)
@@ -287,6 +312,11 @@ def shard_join(mesh: Mesh, axis: str, build_keys, probe_keys,
     """
     from repro.distributed.sharding import shard_map_compat
 
+    # normalize composite spellings host-side: shard_map sees plain
+    # (n, key_words) plane arrays, sharded over dim 0
+    bk_n, key_words = sv.normalize_keys(build_keys, key_words, "build_keys")
+    pk_n = sv.normalize_key_batch(probe_keys, key_words, "probe_keys")
+
     def body(bk, pk):
         res, ov = join_partitioned(
             bk, pk, axis, out_capacity_per_shard, how, key_words=key_words,
@@ -296,7 +326,6 @@ def shard_join(mesh: Mesh, axis: str, build_keys, probe_keys,
 
     f = shard_map_compat(body, mesh, in_specs=(P(axis), P(axis)),
                          out_specs=(P(axis),) * 6)
-    build_idx, probe_idx, valid, matched, total, overflow = f(
-        jnp.asarray(build_keys), jnp.asarray(probe_keys))
+    build_idx, probe_idx, valid, matched, total, overflow = f(bk_n, pk_n)
     return {"build_idx": build_idx, "probe_idx": probe_idx, "valid": valid,
             "matched": matched, "total": total, "overflow": overflow}

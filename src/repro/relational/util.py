@@ -1,4 +1,12 @@
-"""Shared sizing/packing helpers for the relational operators."""
+"""Shared sizing/packing helpers for the relational operators.
+
+``pack_columns`` / ``unpack_columns`` (re-exported from
+``repro.core.hashing``) define the composite multi-column key encoding
+every relational operator accepts: N u32 columns -> (n, N) key planes,
+column 0 most significant, two columns == the table-native u64 hi/lo
+planes.  ``compact`` works unchanged on (n, key_words) plane arrays —
+a composite key row is selected or dropped as one unit.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.common import DEFAULT_WINDOW
+from repro.core.hashing import (  # noqa: F401  (re-exports — public API)
+    pack_columns,
+    unpack_columns,
+)
 
 _I = jnp.int32
 

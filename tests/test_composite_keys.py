@@ -1,0 +1,377 @@
+"""Composite multi-word key tests.
+
+The contract under test: a composite key — N u32 columns packed into
+``key_words = N`` planes by ``hashing.pack_columns`` — behaves *exactly*
+like an equivalent scalar key.  Two reference representations anchor the
+parity:
+
+- the **u64-packed reference**: two columns packed host-side into numpy
+  uint64 — the table-native (hi, lo) planes, so outputs AND table state
+  must be bit-identical to the tuple-of-columns spelling;
+- the **packed single-word reference**: columns narrow enough to pack
+  into one u32 word, run through the 1-word fast lanes.  Hash placement
+  differs completely, but relational OUTPUT (values, offsets, counts,
+  statuses, join pairs, first-occurrence masks) is representation-
+  independent — per-key result segments are emitted in build-batch
+  order regardless of packing — so these must match bit for bit too.
+
+Covered: all four join flavors x jax/scan backends, masks, tombstones,
+duplicate composite keys differing only in the high word, 3-column keys
+(the general lane), the pallas 2-plane fused-retrieve tile, and the
+sharded ownership exchange.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core import hashset as hs
+from repro.core import multi_value as mv
+from repro.core import single_value as sv
+from repro.core.common import split_u64
+from repro.relational import distinct as rdistinct
+from repro.relational import groupby as rgroupby
+from repro.relational import join as rjoin
+
+_U = jnp.uint32
+
+
+def two_cols(rng, n, hi_lim=4, lo_lim=8):
+    """Small universes so duplicate pairs, shared-lo and shared-hi keys
+    all occur; lo >= 1 keeps plane 0 off the sentinels."""
+    hi = jnp.asarray(rng.integers(0, hi_lim, n).astype(np.uint32))
+    lo = jnp.asarray(rng.integers(1, lo_lim, n).astype(np.uint32))
+    return hi, lo
+
+
+def packed_u32(hi, lo, lo_bits=16):
+    return (hi << lo_bits) | lo
+
+
+def packed_u64(hi, lo):
+    return ((np.asarray(hi).astype(np.uint64) << np.uint64(32))
+            | np.asarray(lo).astype(np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# packing helpers
+# ---------------------------------------------------------------------------
+
+class TestPackColumns:
+    def test_two_columns_are_u64_planes(self, rng):
+        hi, lo = two_cols(rng, 50, 1 << 10, 1 << 16)
+        planes = hashing.pack_columns((hi, lo))
+        h2, l2 = split_u64(packed_u64(hi, lo))
+        np.testing.assert_array_equal(np.asarray(planes[:, 0]), l2)
+        np.testing.assert_array_equal(np.asarray(planes[:, 1]), h2)
+
+    @pytest.mark.parametrize("ncols", [1, 2, 3, 4])
+    def test_round_trip(self, rng, ncols):
+        cols = tuple(jnp.asarray(rng.integers(0, 1 << 20, 37)
+                                 .astype(np.uint32)) for _ in range(ncols))
+        planes = hashing.pack_columns(cols)
+        assert planes.shape == (37, ncols)
+        back = hashing.unpack_columns(planes)
+        assert len(back) == ncols
+        for a, b in zip(back, cols):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_normalize_keys_inference(self, rng):
+        hi, lo = two_cols(rng, 8)
+        k, kw = sv.normalize_keys((hi, lo))
+        assert kw == 2 and k.shape == (8, 2)
+        k, kw = sv.normalize_keys(packed_u64(hi, lo))
+        assert kw == 2 and k.shape == (8, 2)
+        k, kw = sv.normalize_keys(hi)
+        assert kw == 1 and k.shape == (8, 1)
+        k, kw = sv.normalize_keys(jnp.stack([lo, hi], axis=1))
+        assert kw == 2
+        with pytest.raises(ValueError):
+            sv.normalize_keys((hi, lo), words=1)
+
+    def test_bad_inputs_raise(self, rng):
+        hi, lo = two_cols(rng, 8)
+        with pytest.raises(ValueError):
+            hashing.pack_columns(())
+        with pytest.raises(ValueError):
+            hashing.pack_columns((hi, lo[:4]))
+        with pytest.raises(TypeError):
+            hashing.pack_columns((hi.astype(jnp.float32),))
+
+
+# ---------------------------------------------------------------------------
+# joins: all four flavors, both backends, three key representations
+# ---------------------------------------------------------------------------
+
+def assert_results_equal(a, b, ctx=""):
+    for f in ("build_idx", "probe_idx", "valid", "matched"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{ctx}: {f}")
+    assert int(a.total) == int(b.total), ctx
+
+
+class TestCompositeJoinParity:
+    @pytest.mark.parametrize("how", rjoin.HOW)
+    @pytest.mark.parametrize("backend", ["jax", "scan"])
+    def test_bit_exact_vs_packed_references(self, rng, how, backend):
+        n = 96
+        bh, bl = two_cols(rng, n)
+        ph, pl = two_cols(rng, n)
+        cap = 6 * n
+        res_c = rjoin.hash_join((bh, bl), (ph, pl), cap, how,
+                                backend=backend)
+        res_p = rjoin.hash_join(packed_u32(bh, bl, 4), packed_u32(ph, pl, 4),
+                                cap, how, backend=backend)
+        assert_results_equal(res_c, res_p, f"{how}/{backend} vs u32-packed")
+        res_64 = rjoin.hash_join(packed_u64(bh, bl), packed_u64(ph, pl),
+                                 cap, how, backend=backend)
+        assert_results_equal(res_c, res_64, f"{how}/{backend} vs u64-packed")
+
+    @pytest.mark.parametrize("how", rjoin.HOW)
+    def test_masks(self, rng, how):
+        n = 64
+        bh, bl = two_cols(rng, n)
+        ph, pl = two_cols(rng, n)
+        bm = jnp.asarray(rng.random(n) < 0.7)
+        pm = jnp.asarray(rng.random(n) < 0.7)
+        cap = 6 * n
+        res_c = rjoin.hash_join((bh, bl), (ph, pl), cap, how,
+                                build_mask=bm, probe_mask=pm)
+        res_p = rjoin.hash_join(packed_u32(bh, bl, 4), packed_u32(ph, pl, 4),
+                                cap, how, build_mask=bm, probe_mask=pm)
+        assert_results_equal(res_c, res_p, f"{how} masked")
+
+    def test_high_word_only_duplicates(self, rng):
+        # probe keys share the low word with build keys but differ in the
+        # high word: a single-plane compare would join them, the composite
+        # key must not
+        n = 32
+        lo = jnp.asarray(rng.integers(1, 5, n).astype(np.uint32))
+        bh = jnp.zeros((n,), _U)
+        ph = jnp.ones((n,), _U)
+        res = rjoin.hash_join((bh, lo), (ph, lo), 4 * n, "inner")
+        assert int(res.total) == 0
+        assert not bool(res.matched.any())
+        # and the anti join sees every probe row
+        res = rjoin.hash_join((bh, lo), (ph, lo), 4 * n, "anti")
+        assert int(res.total) == n
+
+    def test_tombstoned_build_pairs(self, rng):
+        n = 48
+        bh, bl = two_cols(rng, n)
+        table, _ = rjoin.build((bh, bl), capacity=4 * n)
+        # erase a composite key subset, rebuild the packed equivalent
+        table, _ = mv.erase(table, (bh[:8], bl[:8]))
+        tp, _ = rjoin.build(packed_u32(bh, bl, 4), capacity=4 * n)
+        tp, _ = mv.erase(tp, packed_u32(bh[:8], bl[:8], 4))
+        ph, pl = two_cols(rng, n)
+        for how in rjoin.HOW:
+            res_c = rjoin.probe(table, (ph, pl), 6 * n, how=how)
+            res_p = rjoin.probe(tp, packed_u32(ph, pl, 4), 6 * n, how=how)
+            assert_results_equal(res_c, res_p, f"tombstoned {how}")
+
+    def test_count_matches_accepts_tuples(self, rng):
+        n = 40
+        bh, bl = two_cols(rng, n)
+        table, _ = rjoin.build((bh, bl))
+        cnt = rjoin.count_matches(table, (bh, bl))
+        cnt_p = rjoin.count_matches(
+            rjoin.build(packed_u32(bh, bl, 4))[0], packed_u32(bh, bl, 4))
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_p))
+
+    def test_three_column_keys(self, rng):
+        # 3 columns of <= 10 bits each still pack into one u32: the
+        # general (key_words > 2) lane against the 1-word fast lane
+        n = 64
+        a = jnp.asarray(rng.integers(0, 8, n).astype(np.uint32))
+        b = jnp.asarray(rng.integers(0, 8, n).astype(np.uint32))
+        c = jnp.asarray(rng.integers(1, 8, n).astype(np.uint32))
+        pa, pb, pc = (jnp.asarray(rng.integers(0, 8, n).astype(np.uint32))
+                      for _ in range(3))
+        pc = jnp.maximum(pc, 1)
+        packed3 = lambda x, y, z: (x << 20) | (y << 10) | z
+        for how in rjoin.HOW:
+            res_c = rjoin.hash_join((a, b, c), (pa, pb, pc), 6 * n, how)
+            res_p = rjoin.hash_join(packed3(a, b, c), packed3(pa, pb, pc),
+                                    6 * n, how)
+            assert_results_equal(res_c, res_p, f"3col {how}")
+
+
+# ---------------------------------------------------------------------------
+# group-by / distinct
+# ---------------------------------------------------------------------------
+
+class TestCompositeGroupBy:
+    @pytest.mark.parametrize("agg", ["sum", "min", "max", "count", "mean"])
+    @pytest.mark.parametrize("backend", ["jax", "scan"])
+    def test_parity_vs_packed(self, rng, agg, backend):
+        n = 80
+        kh, kl = two_cols(rng, n)
+        vals = jnp.asarray(rng.integers(1, 1000, n).astype(np.uint32))
+        tc = rgroupby.create(256, key_words=2, backend=backend)
+        tp = rgroupby.create(256, key_words=1, backend=backend)
+        tc, st_c = rgroupby.update(tc, agg, (kh, kl), vals)
+        tp, st_p = rgroupby.update(tp, agg, packed_u32(kh, kl, 4), vals)
+        # statuses are hash-placement independent (first occurrence claims)
+        np.testing.assert_array_equal(np.asarray(st_c), np.asarray(st_p))
+        out_c, f_c = rgroupby.lookup(tc, agg, (kh, kl))
+        out_p, f_p = rgroupby.lookup(tp, agg, packed_u32(kh, kl, 4))
+        np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_p))
+        np.testing.assert_array_equal(np.asarray(f_c), np.asarray(f_p))
+        assert int(tc.count) == int(tp.count)
+
+    def test_aggregate_infers_and_finalize_unpacks(self, rng):
+        n = 60
+        kh, kl = two_cols(rng, n)
+        vals = jnp.asarray(rng.integers(1, 100, n).astype(np.uint32))
+        gk, out, live, table = rgroupby.aggregate((kh, kl), vals, 256, "sum")
+        assert table.key_words == 2 and gk.shape[-1] == 2
+        ghi, glo = hashing.unpack_columns(gk)
+        got = {(int(h), int(l)): int(v)
+               for h, l, v, lv in zip(ghi, glo, out, live) if lv}
+        ref = {}
+        for h, l, v in zip(np.asarray(kh), np.asarray(kl), np.asarray(vals)):
+            ref[(int(h), int(l))] = ref.get((int(h), int(l)), 0) + int(v)
+        assert got == ref
+
+    def test_mask(self, rng):
+        n = 50
+        kh, kl = two_cols(rng, n)
+        vals = jnp.asarray(rng.integers(1, 100, n).astype(np.uint32))
+        mask = jnp.asarray(rng.random(n) < 0.6)
+        _, out_c, live_c, tc = rgroupby.aggregate((kh, kl), vals, 256, "sum",
+                                                  mask=mask)
+        _, out_p, live_p, tp = rgroupby.aggregate(packed_u32(kh, kl, 4), vals,
+                                                  256, "sum", mask=mask)
+        o1, f1 = rgroupby.lookup(tc, "sum", (kh, kl))
+        o2, f2 = rgroupby.lookup(tp, "sum", packed_u32(kh, kl, 4))
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+class TestCompositeDistinct:
+    @pytest.mark.parametrize("backend", ["jax", "scan"])
+    def test_parity_and_tuple_output(self, rng, backend):
+        n = 90
+        kh, kl = two_cols(rng, n)
+        (uh, ul), n_c, fresh_c = rdistinct.distinct((kh, kl), n,
+                                                    backend=backend)
+        up, n_p, fresh_p = rdistinct.distinct(packed_u32(kh, kl, 4), n,
+                                              backend=backend)
+        np.testing.assert_array_equal(np.asarray(fresh_c),
+                                      np.asarray(fresh_p))
+        assert int(n_c) == int(n_p)
+        np.testing.assert_array_equal(np.asarray(packed_u32(uh, ul, 4)),
+                                      np.asarray(up))
+
+    def test_mask_and_streaming(self, rng):
+        n = 60
+        kh, kl = two_cols(rng, n)
+        mask = jnp.asarray(rng.random(n) < 0.7)
+        (_, _), n_c, fresh_c = rdistinct.distinct((kh, kl), n, mask=mask)
+        _, n_p, fresh_p = rdistinct.distinct(packed_u32(kh, kl, 4), n,
+                                             mask=mask)
+        np.testing.assert_array_equal(np.asarray(fresh_c),
+                                      np.asarray(fresh_p))
+        assert int(n_c) == int(n_p)
+        # streaming across batches via first_occurrence
+        dset = rdistinct.create(256, key_words=2)
+        dset, f1 = rdistinct.first_occurrence(dset, (kh[:30], kl[:30]))
+        dset, f2 = rdistinct.first_occurrence(dset, (kh[30:], kl[30:]))
+        seen = set()
+        ref = []
+        for h, l in zip(np.asarray(kh), np.asarray(kl)):
+            ref.append((int(h), int(l)) not in seen)
+            seen.add((int(h), int(l)))
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(f1), np.asarray(f2)]),
+            np.array(ref))
+
+
+# ---------------------------------------------------------------------------
+# core tables: single-value round trip, multi-value walks, hashset, pallas
+# ---------------------------------------------------------------------------
+
+class TestCompositeCoreTables:
+    @pytest.mark.parametrize("backend", ["jax", "scan"])
+    def test_single_value_round_trip(self, rng, backend):
+        n = 70
+        kh, kl = two_cols(rng, n, 6, 6)
+        vals = jnp.arange(1, n + 1, dtype=_U)
+        tc = sv.create(512, key_words=2, backend=backend)
+        tp = sv.create(512, key_words=1, backend=backend)
+        tc, st_c = sv.insert(tc, (kh, kl), vals)
+        tp, st_p = sv.insert(tp, packed_u32(kh, kl, 4), vals)
+        np.testing.assert_array_equal(np.asarray(st_c), np.asarray(st_p))
+        v_c, f_c = sv.retrieve(tc, (kh, kl))
+        v_p, f_p = sv.retrieve(tp, packed_u32(kh, kl, 4))
+        np.testing.assert_array_equal(np.asarray(v_c), np.asarray(v_p))
+        np.testing.assert_array_equal(np.asarray(f_c), np.asarray(f_p))
+        tc, er_c = sv.erase(tc, (kh[:20], kl[:20]))
+        tp, er_p = sv.erase(tp, packed_u32(kh[:20], kl[:20], 4))
+        np.testing.assert_array_equal(np.asarray(er_c), np.asarray(er_p))
+        assert int(tc.count) == int(tp.count)
+        f_c = sv.contains(tc, (kh, kl))
+        f_p = sv.contains(tp, packed_u32(kh, kl, 4))
+        np.testing.assert_array_equal(np.asarray(f_c), np.asarray(f_p))
+
+    @pytest.mark.parametrize("backend", ["jax", "pallas"])
+    def test_multi_value_walks_vs_scan(self, rng, backend):
+        # duplicate composite pairs + tombstones; jax engine and the
+        # 2-plane pallas fused-retrieve tile against the scan reference
+        n = 150
+        kh, kl = two_cols(rng, n, 3, 5)
+        vals = jnp.arange(n, dtype=_U)
+        q = (kh[:60], kl[:60])
+
+        def run(bk):
+            t = mv.create(1024, key_words=2, backend=bk)
+            t, st = mv.insert(t, (kh, kl), vals)
+            t, ec = mv.erase(t, (kh[:10], kl[:10]))
+            cnt = mv.count_values(t, q)
+            v, off, c = mv.retrieve_all(t, q, 800)
+            return [np.asarray(x) for x in (st, ec, cnt, v, off, c)]
+
+        ref = run("scan")
+        got = run(backend)
+        for i, (r, g) in enumerate(zip(ref, got)):
+            np.testing.assert_array_equal(r, g, err_msg=f"{backend} out {i}")
+
+    def test_hashset_composite(self, rng):
+        n = 40
+        kh, kl = two_cols(rng, n)
+        s = hs.create(256, key_words=2)
+        s, fresh = hs.add(s, (kh, kl))
+        sp = hs.create(256, key_words=1)
+        sp, fresh_p = hs.add(sp, packed_u32(kh, kl, 4))
+        np.testing.assert_array_equal(np.asarray(fresh), np.asarray(fresh_p))
+        np.testing.assert_array_equal(
+            np.asarray(hs.contains(s, (kh, kl))),
+            np.asarray(hs.contains(sp, packed_u32(kh, kl, 4))))
+        assert int(hs.size(s)) == int(hs.size(sp))
+
+    def test_jit_with_tuple_keys(self, rng):
+        n = 32
+        kh, kl = two_cols(rng, n)
+        vals = jnp.arange(n, dtype=_U)
+        t = sv.create(256, key_words=2)
+
+        @jax.jit
+        def go(t, a, b, v):
+            t, st = sv.insert(t, (a, b), v)
+            got, found = sv.retrieve(t, (a, b))
+            return st, got, found
+
+        st, got, found = go(t, kh, kl, vals)
+        assert bool(found.all())
+        # last-writer-wins per duplicate pair
+        ref = {}
+        for h, l, v in zip(np.asarray(kh), np.asarray(kl), np.asarray(vals)):
+            ref[(int(h), int(l))] = int(v)
+        want = np.array([ref[(int(h), int(l))]
+                         for h, l in zip(np.asarray(kh), np.asarray(kl))])
+        np.testing.assert_array_equal(np.asarray(got), want)

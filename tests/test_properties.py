@@ -338,6 +338,91 @@ class TestInsertEraseRetrieveRoundTrip:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ka) * 2)
 
 
+class TestCompositeKeyRoundTrip:
+    """Composite (multi-column) keys vs a dict-of-tuples model AND the
+    u32-packed single-word rendering of the same columns: insert -> erase
+    -> retrieve round-trips, with outputs bit-equal across the two
+    representations (the packing never leaks into results)."""
+
+    @SETTINGS
+    @given(pairs=st.lists(st.tuples(st.integers(0, 5), st.integers(1, 6),
+                                    st.integers(0, 10 ** 6)),
+                          min_size=1, max_size=60),
+           erase=st.lists(st.tuples(st.integers(0, 6), st.integers(1, 7)),
+                          max_size=10),
+           backend=st.sampled_from(["jax", "scan"]))
+    def test_multi_value_composite_round_trip(self, pairs, erase, backend):
+        hi = jnp.asarray([p[0] for p in pairs], jnp.uint32)
+        lo = jnp.asarray([p[1] for p in pairs], jnp.uint32)
+        vs = jnp.asarray([p[2] for p in pairs], jnp.uint32)
+        packed = (hi << 4) | lo
+        model: dict = {}
+        for h, l, v in pairs:
+            model.setdefault((h, l), []).append(v & 0xFFFFFFFF)
+        tc = mv.create(512, key_words=2, backend=backend)
+        tp = mv.create(512, key_words=1, backend=backend)
+        tc, st_c = mv.insert(tc, (hi, lo), vs)
+        tp, st_p = mv.insert(tp, packed, vs)
+        np.testing.assert_array_equal(np.asarray(st_c), np.asarray(st_p))
+        if erase:
+            eh = jnp.asarray([e[0] for e in erase], jnp.uint32)
+            el = jnp.asarray([e[1] for e in erase], jnp.uint32)
+            tc, ec = mv.erase(tc, (eh, el))
+            tp, ep = mv.erase(tp, (eh << 4) | el)
+            np.testing.assert_array_equal(np.asarray(ec), np.asarray(ep))
+            for h, l in erase:
+                model.pop((h, l), None)
+        assert int(tc.count) == sum(map(len, model.values()))
+        assert int(tc.count) == int(tp.count)
+        qh = jnp.asarray([h for h in range(6) for _ in range(1, 7)],
+                         jnp.uint32)
+        ql = jnp.asarray([l for _ in range(6) for l in range(1, 7)],
+                         jnp.uint32)
+        cap = len(pairs) + 1
+        out_c, off_c, cnt_c = mv.retrieve_all(tc, (qh, ql), cap)
+        out_p, off_p, cnt_p = mv.retrieve_all(tp, (qh << 4) | ql, cap)
+        np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_p))
+        np.testing.assert_array_equal(np.asarray(off_c), np.asarray(off_p))
+        np.testing.assert_array_equal(np.asarray(cnt_c), np.asarray(cnt_p))
+        out, off = np.asarray(out_c), np.asarray(off_c)
+        for i, (h, l) in enumerate(zip(np.asarray(qh), np.asarray(ql))):
+            got = sorted(out[off[i]:off[i + 1]].tolist())
+            assert got == sorted(model.get((int(h), int(l)), [])), \
+                f"key ({h},{l}) multiset mismatch on backend={backend}"
+
+    @SETTINGS
+    @given(ops=st.lists(st.tuples(st.sampled_from(["insert", "insert",
+                                                   "erase"]),
+                                  st.integers(0, 4), st.integers(1, 5),
+                                  st.integers(0, 10 ** 6)),
+                        min_size=1, max_size=50),
+           backend=st.sampled_from(["jax", "scan"]))
+    def test_single_value_composite_round_trip(self, ops, backend):
+        t = sv.create(256, key_words=2, backend=backend)
+        model = {}
+        for op, h, l, v in ops:
+            key = (jnp.asarray([h], jnp.uint32), jnp.asarray([l], jnp.uint32))
+            if op == "insert":
+                t, stt = sv.insert(t, key, jnp.asarray([v], jnp.uint32))
+                assert int(stt[0]) == (STATUS_UPDATED if (h, l) in model
+                                       else STATUS_INSERTED)
+                model[(h, l)] = v & 0xFFFFFFFF
+            else:
+                t, er = sv.erase(t, key)
+                assert bool(er[0]) == ((h, l) in model)
+                model.pop((h, l), None)
+        assert int(t.count) == len(model)
+        qh = jnp.asarray([h for h in range(5) for _ in range(1, 6)],
+                         jnp.uint32)
+        ql = jnp.asarray([l for _ in range(5) for l in range(1, 6)],
+                         jnp.uint32)
+        got, found = sv.retrieve(t, (qh, ql))
+        for i, (h, l) in enumerate(zip(np.asarray(qh), np.asarray(ql))):
+            assert bool(found[i]) == ((int(h), int(l)) in model)
+            if (int(h), int(l)) in model:
+                assert int(got[i]) == model[(int(h), int(l))]
+
+
 class TestLayoutEquivalence:
     @SETTINGS
     @given(keys=keys_st, window=st.sampled_from([8, 32]))

@@ -375,6 +375,32 @@ class TestShardedJoin:
                 o = join.shard_join(mesh, 'x', jnp.asarray(bk),
                                     jnp.asarray(pk), 2048, how, slack=4.0)
                 assert int(np.asarray(o['total']).sum()) == expect, how
+            # composite two-column keys ride the same ownership exchange:
+            # (hi, lo) tuples vs the equivalent u32-packed single words.
+            # Output order is per-owner-shard and the two representations
+            # hash to different owners, so compare the order-independent
+            # contract: the global (build, probe) pair set, the
+            # input-aligned matched mask, and the total
+            bh, bl = bk >> 4, (bk & 15) | 1
+            ph, plo = pk >> 4, (pk & 15) | 1
+            oc = join.shard_join(mesh, 'x',
+                                 (jnp.asarray(bh), jnp.asarray(bl)),
+                                 (jnp.asarray(ph), jnp.asarray(plo)),
+                                 2048, 'inner', slack=4.0)
+            op = join.shard_join(mesh, 'x',
+                                 jnp.asarray((bh << 4) | bl),
+                                 jnp.asarray((ph << 4) | plo),
+                                 2048, 'inner', slack=4.0)
+            def pairs(o):
+                return sorted((int(b), int(p)) for b, p, v in
+                              zip(o['build_idx'], o['probe_idx'],
+                                  o['valid']) if v)
+            assert pairs(oc) == pairs(op), 'composite pair set mismatch'
+            assert (np.asarray(oc['matched'])
+                    == np.asarray(op['matched'])).all()
+            assert (int(np.asarray(oc['total']).sum())
+                    == int(np.asarray(op['total']).sum()))
+            assert int(np.asarray(oc['overflow']).sum()) == 0
             print('OK')
         """)
         r = subprocess.run([sys.executable, "-c", code], capture_output=True,
