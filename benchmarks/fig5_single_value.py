@@ -36,7 +36,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.util import row, time_fn
+from benchmarks.util import (
+    fmt_extras,
+    row,
+    table_metric_extras,
+    time_fn,
+    time_stats,
+    timing_extras,
+)
 from repro.configs.warpcore import CONFIG, SMOKE
 from repro.core import multi_value as mv
 from repro.core import single_value as sv
@@ -68,14 +75,31 @@ def run(out=print):
         for name, kw in VARIANTS.items():
             t0 = sv.create(capacity, max_probes=4096, **kw)
             ins = jax.jit(lambda t, k, v: sv.insert(t, k, v))
-            sec_i = time_fn(ins, t0, keys, vals)
+            ti = time_stats(ins, t0, keys, vals)
+            sec_i = ti["seconds"]
             t1, status = ins(t0, keys, vals)
             ok = float(jnp.mean((status == 0).astype(jnp.float32)))
             ret = jax.jit(lambda t, k: sv.retrieve(t, k))
-            sec_r = time_fn(ret, t1, keys)
+            tr = time_stats(ret, t1, keys)
+            sec_r = tr["seconds"]
+            extra_i = fmt_extras(ok=ok) + "," + timing_extras(ti)
+            extra_r = timing_extras(tr)
+            if name == "wc-cops":
+                # roofline-normalized table metrics from a stats=True run
+                # (separate call — the timed call stays stats=False)
+                _, _, istats = jax.jit(
+                    lambda t, k, v: sv.insert(t, k, v, stats=True))(
+                        t0, keys, vals)
+                _, _, rstats = jax.jit(
+                    lambda t, k: sv.retrieve(t, k, stats=True))(t1, keys)
+                extra_i += "," + table_metric_extras(
+                    istats, sec_i, n, window=kw["window"])
+                extra_r += "," + table_metric_extras(
+                    rstats, sec_r, n, window=kw["window"])
             out(row(f"fig5.insert.{name}.rho{density}", sec_i, n,
-                    extra=f"ok={ok:.3f}"))
-            out(row(f"fig5.retrieve.{name}.rho{density}", sec_r, n))
+                    extra=extra_i))
+            out(row(f"fig5.retrieve.{name}.rho{density}", sec_r, n,
+                    extra=extra_r))
         # python dict reference (insert+retrieve once per density)
         if density == cfg.densities[0]:
             import time as _t
@@ -151,8 +175,15 @@ def run(out=print):
         if not bool(jnp.array_equal(a, b)):
             raise AssertionError(
                 f"fused/scan retrieval parity mismatch on {name_}")
+    # table metrics of the fused walk (stats=True run, separately compiled)
+    _, _, _, fstats = jax.jit(
+        lambda t, k: mv.retrieve_all(t, k, out_cap, stats=True))(
+            mt_fused, keys)
+    metric_extra = table_metric_extras(
+        fstats, sec_f, n, window=32, value_ops=out_cap / max(n, 1))
     out(row(f"fig5.retrieve.wc-cops.fused.rho{rho}", sec_f, n,
-            extra=f"speedup-vs-twowalk={sec_w / sec_f:.2f}x,parity=ok"))
+            extra=f"speedup-vs-twowalk={sec_w / sec_f:.2f}x,parity=ok,"
+                  + metric_extra))
     out(row(f"fig5.retrieve.wc-cops.twowalk.rho{rho}", sec_w, n))
 
 

@@ -49,15 +49,21 @@ def bench(num_shards, per_shard):
                                       out_specs=(P('x'), P('x'))))
     fall = jax.jit(lambda t, k, v: dist.shard_insert(mesh, 'x', t, k, v))
 
-    def t(f, *a):
+    def t(f, *a, iters=3):
         jax.block_until_ready(f(*a))
-        t0 = time.perf_counter(); jax.block_until_ready(f(*a))
-        return time.perf_counter() - t0
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter(); jax.block_until_ready(f(*a))
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        med = ts[len(ts) // 2]
+        return med, (med - ts[0]) / med if med > 0 else 0.0
 
-    t_route = t(froute, keys, vals)
-    t_total = t(fall, table, keys, vals)
+    t_route, _ = t(froute, keys, vals)
+    t_total, spread = t(fall, table, keys, vals)
     return dict(shards=num_shards, n=n, t_route=t_route,
-                t_insert=max(t_total - t_route, 0.0), t_total=t_total)
+                t_insert=max(t_total - t_route, 0.0), t_total=t_total,
+                spread=spread)
 
 per_shard = 1 << 12
 out = [bench(s, per_shard) for s in (1, 2, 4, 8)]
@@ -83,9 +89,11 @@ def run(out=print):
         # breakdown), which IS measurable without real chips.
         eff = d["shards"] * t1 / d["t_total"]
         route_frac = d["t_route"] / d["t_total"]
+        spread = d.get("spread", 0.0)
         out(f"fig6.insert.shards{d['shards']},{d['t_total']*1e6:.0f},"
             f"{d['n']/d['t_total']/1e6:.3f}Mops/s,"
-            f"route_frac={route_frac:.2f},eff_1core={eff:.2f}")
+            f"route_frac={route_frac:.2f},eff_1core={eff:.2f},"
+            f"spread={spread:.4g},noisy={int(spread > 0.20)}")
 
 
 if __name__ == "__main__":

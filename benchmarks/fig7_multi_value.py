@@ -31,7 +31,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.util import row, time_fn
+from benchmarks.util import (
+    fmt_extras,
+    row,
+    table_metric_extras,
+    time_stats,
+    timing_extras,
+)
 from repro.configs.warpcore import CONFIG, SMOKE
 from repro.core import bucket_list as bl
 from repro.core import multi_value as mv
@@ -80,12 +86,30 @@ def run(out=print):
         }.items():
             t0 = mk()
             ins = jax.jit(lambda t, k, v: mv.insert(t, k, v))
-            sec_i = time_fn(ins, t0, keys, vals)
+            ti = time_stats(ins, t0, keys, vals)
+            sec_i = ti["seconds"]
             t1, _ = ins(t0, keys, vals)
             ret = jax.jit(lambda t, k: mv.retrieve_all(t, k, total))
-            sec_r = time_fn(ret, t1, q)
-            out(row(f"fig7.insert.{name}.r{r}", sec_i, total))
-            out(row(f"fig7.retrieve.{name}.r{r}", sec_r, total))
+            tr = time_stats(ret, t1, q)
+            sec_r = tr["seconds"]
+            extra_i, extra_r = timing_extras(ti), timing_extras(tr)
+            if name == "wc-oa":
+                # probe/occupancy telemetry from a stats=True run (the
+                # timed call stays stats=False)
+                _, _, istats = jax.jit(
+                    lambda t, k, v: mv.insert(t, k, v, stats=True))(
+                        t0, keys, vals)
+                _, _, _, rstats = jax.jit(
+                    lambda t, k: mv.retrieve_all(t, k, total, stats=True))(
+                        t1, q)
+                extra_i += "," + table_metric_extras(
+                    istats, sec_i, total, window=32)
+                extra_r += "," + table_metric_extras(
+                    rstats, sec_r, n_keys, window=32,
+                    value_ops=total / max(n_keys, 1))
+            out(row(f"fig7.insert.{name}.r{r}", sec_i, total, extra=extra_i))
+            out(row(f"fig7.retrieve.{name}.r{r}", sec_r, total,
+                    extra=extra_r))
 
         for name, (growth, s0) in {
             "wc-bl-1": (cfg.bl_growth_default[0], cfg.bl_growth_default[1]),
@@ -94,14 +118,24 @@ def run(out=print):
             t0 = bl.create(int(n_keys / load), pool_capacity=2 * total + 64,
                            s0=s0, growth=growth)
             ins = jax.jit(lambda t, k, v: bl.insert(t, k, v))
-            sec_i = time_fn(ins, t0, keys, vals)
+            ti = time_stats(ins, t0, keys, vals)
+            sec_i = ti["seconds"]
             t1, _ = ins(t0, keys, vals)
             ret = jax.jit(lambda t, k: bl.retrieve_all(t, k, total))
-            sec_r = time_fn(ret, t1, q)
+            tr = time_stats(ret, t1, q)
+            sec_r = tr["seconds"]
             used = int(t1.alloc_top)
+            _, _, istats = jax.jit(
+                lambda t, k, v: bl.insert(t, k, v, stats=True))(
+                    t0, keys, vals)
             out(row(f"fig7.insert.{name}.r{r}", sec_i, total,
-                    extra=f"pool_used={used}"))
-            out(row(f"fig7.retrieve.{name}.r{r}", sec_r, total))
+                    extra=fmt_extras(pool_used=used) + ","
+                          + table_metric_extras(
+                              istats, sec_i, total,
+                              window=t1.key_store.window) + ","
+                          + timing_extras(ti)))
+            out(row(f"fig7.retrieve.{name}.r{r}", sec_r, total,
+                    extra=timing_extras(tr)))
 
     # bucket-list engine vs sequential-scan reference (PR-trajectory rows +
     # parity gate).  Same geometry, same batch; only the backend differs.

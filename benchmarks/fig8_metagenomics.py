@@ -15,7 +15,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.util import row, time_fn
+from benchmarks.util import (
+    row,
+    table_metric_extras,
+    time_fn,
+    time_stats,
+    timing_extras,
+)
 from repro.core import bucket_list as bl
 from repro.core import multi_value as mv
 from repro.kernels.minhash import ops as mh
@@ -52,7 +58,8 @@ def run(out=print):
     # with the sequential-scan reference as a parity-gated comparison row
     t0 = bl.create(2 * n, pool_capacity=4 * n, s0=1, growth=1.1)
     ins_bl = jax.jit(lambda t, k, v: bl.insert(t, k, v))
-    sec_bl = time_fn(ins_bl, t0, keys, vals)
+    tbl = time_stats(ins_bl, t0, keys, vals)
+    sec_bl = tbl["seconds"]
     t0s = bl.create(2 * n, pool_capacity=4 * n, s0=1, growth=1.1,
                     backend="scan")
     ins_bls = jax.jit(lambda t, k, v: bl.insert(t, k, v))
@@ -61,15 +68,25 @@ def run(out=print):
     ts, sts = ins_bls(t0s, keys, vals)
     from benchmarks.fig7_multi_value import _assert_bl_parity
     _assert_bl_parity(tb, ts, stb, sts)
+    _, _, blstats = jax.jit(lambda t, k, v: bl.insert(t, k, v, stats=True))(
+        t0, keys, vals)
     out(row("fig8.build.wc-bl", sec_bl, n,
-            extra=f"speedup-vs-scan={sec_bls / sec_bl:.2f}x,parity=ok"))
+            extra=f"speedup-vs-scan={sec_bls / sec_bl:.2f}x,parity=ok,"
+                  + table_metric_extras(blstats, sec_bl, n,
+                                        window=tb.key_store.window) + ","
+                  + timing_extras(tbl)))
     out(row("fig8.build.wc-bl.scan", sec_bls, n))
 
     # DB build: OA multi-value
     t1 = mv.create(int(n / 0.8), window=32)
     ins_mv = jax.jit(lambda t, k, v: mv.insert(t, k, v))
-    sec_mv = time_fn(ins_mv, t1, keys, vals)
-    out(row("fig8.build.wc-oa", sec_mv, n))
+    tmv = time_stats(ins_mv, t1, keys, vals)
+    sec_mv = tmv["seconds"]
+    _, _, mvstats = jax.jit(lambda t, k, v: mv.insert(t, k, v, stats=True))(
+        t1, keys, vals)
+    out(row("fig8.build.wc-oa", sec_mv, n,
+            extra=table_metric_extras(mvstats, sec_mv, n, window=32) + ","
+                  + timing_extras(tmv)))
 
     # CPU python dict build (MetaCache/Kraken2 stand-in)
     kl = np.asarray(keys).tolist()

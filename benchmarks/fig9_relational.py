@@ -30,8 +30,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.util import row, time_fn
+from benchmarks.util import (
+    fmt_extras,
+    row,
+    table_metric_extras,
+    time_fn,
+    time_stats,
+    timing_extras,
+)
 from repro.configs.warpcore import CONFIG, SMOKE
+from repro.core import multi_value as mv
 from repro.relational import distinct as rdistinct
 from repro.relational import groupby as rgroupby
 from repro.relational import join as rjoin
@@ -57,10 +65,19 @@ def run(out=print):
         cap = int(n / rho)
         f = jax.jit(lambda b, p: rjoin.hash_join(
             b, p, 2 * n, "inner", capacity=cap))
-        sec = time_fn(f, bk, pk)
+        ts = time_stats(f, bk, pk)
+        sec = ts["seconds"]
         res = f(bk, pk)
+        # probe-phase table metrics: same build table, stats=True counting
+        # walk (separately compiled; the timed join stays stats=False)
+        btable, _ = rjoin.build(bk, capacity=cap)
+        _, jstats = jax.jit(
+            lambda t, k: mv.count_values(t, k, stats=True))(btable, pk)
         out(row(f"fig9.join.inner.rho{rho}", sec, 2 * n,
-                extra=f"pairs={int(res.total)}"))
+                extra=fmt_extras(pairs=int(res.total)) + ","
+                      + table_metric_extras(jstats, sec, 2 * n,
+                                            window=btable.window) + ","
+                      + timing_extras(ts)))
 
     # --- join vs build:probe ratio (fixed rho 0.5) --------------------------
     for ratio in (4, 2, 1):
@@ -90,8 +107,9 @@ def run(out=print):
         for agg in ("sum", "count", "mean"):
             f = jax.jit(lambda k, v, agg=agg, g=g: rgroupby.aggregate(
                 k, v, rgroupby.capacity_for(g), agg))
-            sec = time_fn(f, gk, vals)
-            out(row(f"fig9.groupby.{agg}.g{g}", sec, n))
+            ts = time_stats(f, gk, vals)
+            out(row(f"fig9.groupby.{agg}.g{g}", ts["seconds"], n,
+                    extra=timing_extras(ts)))
 
     # --- distinct at duplication factor 8 ------------------------------------
     dk = jnp.asarray(rng.integers(1, max(n // 8, 2), n).astype(np.uint32))

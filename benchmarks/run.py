@@ -26,7 +26,12 @@ import time
 
 
 def parse_row(line: str):
-    """CSV row -> {name, us_per_call, ops_per_s, extra?} (None if header/na)."""
+    """CSV row -> {name, us_per_call, ops_per_s, extra?} (None if header/na).
+
+    Numeric ``k=v`` extras (``probe_len_p99=4``, ``spread=0.03``, ...) are
+    lifted into first-class fields of the JSON row; non-numeric ones stay
+    in the joined ``extra`` string only.
+    """
     parts = line.split(",")
     if len(parts) < 3 or parts[0] == "name":
         return None
@@ -37,8 +42,16 @@ def parse_row(line: str):
     entry = {"name": parts[0], "us_per_call": us}
     if parts[2].endswith("Mops/s"):
         entry["ops_per_s"] = float(parts[2][:-len("Mops/s")]) * 1e6
-    if len(parts) > 3 and parts[3]:
-        entry["extra"] = ",".join(parts[3:])
+    extras = [p for p in parts[3:] if p]
+    if extras:
+        entry["extra"] = ",".join(extras)
+        for p in extras:
+            k, sep, v = p.partition("=")
+            if sep and k and k not in entry:
+                try:
+                    entry[k] = float(v)
+                except ValueError:
+                    pass
     return entry
 
 
@@ -60,7 +73,13 @@ def main(argv=None) -> None:
                     help="also write the CSV rows to PATH")
     ap.add_argument("--json", metavar="PATH",
                     help="write parsed rows (ops/s per figure) to PATH")
+    ap.add_argument("--iters", type=int, metavar="N",
+                    help="override timing iterations for every row "
+                         "(util.ITERS_OVERRIDE)")
     args = ap.parse_args(argv)
+    if args.iters:
+        from benchmarks import util
+        util.ITERS_OVERRIDE = args.iters
 
     sink = open(args.csv, "w") if args.csv else None
     records: dict[str, list] = {}

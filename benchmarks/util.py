@@ -5,6 +5,14 @@ GV100).  Throughput numbers are therefore *shape* comparisons against the
 paper's curves (which implementation wins where, how throughput scales with
 density/multiplicity), not absolute-magnitude reproductions — recorded as
 such in EXPERIMENTS.md.
+
+``time_stats`` is the instrumented timer: besides the median it reports the
+min, the min-vs-median spread (a noise signal — shared CPU containers
+wobble; rows with spread > NOISY_SPREAD are flagged ``noisy=1``) and the
+``iters``/``warmup`` actually used, so every emitted row records how it was
+measured.  ``ITERS_OVERRIDE`` (set by ``benchmarks.run --iters``) globally
+overrides the per-call ``iters`` without threading a parameter through
+every figure module.
 """
 
 from __future__ import annotations
@@ -13,9 +21,22 @@ import time
 
 import jax
 
+#: set by ``benchmarks.run --iters N``; overrides every time_* call's iters
+ITERS_OVERRIDE: int | None = None
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds of fn(*args) with block_until_ready."""
+#: min-vs-median spread above which a row is flagged noisy
+NOISY_SPREAD = 0.20
+
+
+def time_stats(fn, *args, warmup: int = 1, iters: int = 3) -> dict:
+    """Timing summary of fn(*args) with block_until_ready.
+
+    Returns ``{seconds, min_s, spread, iters, warmup, noisy}`` where
+    ``seconds`` is the median, ``spread = (median - min) / median`` and
+    ``noisy`` flags spread > NOISY_SPREAD.
+    """
+    if ITERS_OVERRIDE:
+        iters = ITERS_OVERRIDE
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -24,7 +45,59 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2]
+    med = ts[len(ts) // 2]
+    spread = (med - ts[0]) / med if med > 0 else 0.0
+    return {"seconds": med, "min_s": ts[0], "spread": spread,
+            "iters": iters, "warmup": warmup,
+            "noisy": spread > NOISY_SPREAD}
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    return time_stats(fn, *args, warmup=warmup, iters=iters)["seconds"]
+
+
+def fmt_extras(**kv) -> str:
+    """Render ``k=v`` extras for ``row`` (floats compact, bools as 0/1)."""
+    parts = []
+    for k, v in kv.items():
+        if isinstance(v, bool):
+            parts.append(f"{k}={int(v)}")
+        elif isinstance(v, float):
+            parts.append(f"{k}={v:.4g}")
+        else:
+            parts.append(f"{k}={v}")
+    return ",".join(parts)
+
+
+def timing_extras(ts: dict) -> str:
+    """The measurement provenance extras of a ``time_stats`` summary."""
+    return fmt_extras(iters=ts["iters"], warmup=ts["warmup"],
+                      spread=ts["spread"], noisy=ts["noisy"])
+
+
+def table_metric_extras(stats, seconds: float, n_ops: int, *, window: int,
+                        key_words: int = 1, value_words: int = 1,
+                        value_ops: float = 1.0) -> str:
+    """Roofline-normalized table metrics for one benchmark row.
+
+    ``stats`` is an ``obs.metrics.TableStats`` from the timed op run with
+    ``stats=True`` (a separate call — the timed call itself stays
+    stats=False).  Emits ``probe_len_p50/p99``, ``load_factor``,
+    ``bytes_moved`` (the walk-bytes model) and ``pct_of_roofline``.
+    """
+    from repro.launch import roofline
+    d = stats.as_dict()
+    walkers = max(int(stats.probe_n), 1)
+    bytes_moved = roofline.table_walk_bytes(
+        walkers, d["probe_len_mean"] or 1.0, window=window,
+        key_words=key_words, value_words=value_words, value_ops=value_ops)
+    return fmt_extras(probe_len_p50=d["probe_len_p50"],
+                      probe_len_p99=d["probe_len_p99"],
+                      load_factor=d["load_factor"],
+                      bytes_moved=bytes_moved,
+                      pct_of_roofline=roofline.pct_of_roofline(bytes_moved,
+                                                               seconds))
 
 
 def row(name: str, seconds: float, n_ops: int, extra: str = "") -> str:

@@ -1,0 +1,101 @@
+"""Validate a BENCH_*.json against ``benchmarks/schema.json``.
+
+Dependency-free (no jsonschema in the container): implements exactly the
+subset of JSON Schema the checked-in schema uses — ``type`` (object /
+array / string / number / boolean), ``required``, ``properties``,
+``additionalProperties`` (as a sub-schema), ``items``, ``minimum`` /
+``maximum``.  The CI smoke step runs this over the BENCH json produced by
+the fig5 smoke row, so a benchmark emitting a malformed row (string where
+a lifted numeric extra belongs, negative timing, load factor > 1) fails
+the build instead of silently polluting the perf trajectory.
+
+Usage::
+
+    python -m benchmarks.validate BENCH_6.json [--schema PATH]
+
+Exit status 0 iff valid; errors are printed one per line as
+``<json-path>: <message>``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "number": (int, float),
+    "boolean": bool,
+}
+
+
+def validate(value, schema: dict, path: str = "$") -> list[str]:
+    """Errors for ``value`` under ``schema`` (empty list == valid)."""
+    errs: list[str] = []
+    t = schema.get("type")
+    if t is not None:
+        py = _TYPES[t]
+        # bool is an int subclass; don't let True pass as a number
+        if isinstance(value, bool) and t != "boolean":
+            errs.append(f"{path}: expected {t}, got boolean")
+            return errs
+        if not isinstance(value, py):
+            errs.append(f"{path}: expected {t}, "
+                        f"got {type(value).__name__}")
+            return errs
+
+    if isinstance(value, (int, float)) and not isinstance(value, bool):
+        if "minimum" in schema and value < schema["minimum"]:
+            errs.append(f"{path}: {value} < minimum {schema['minimum']}")
+        if "maximum" in schema and value > schema["maximum"]:
+            errs.append(f"{path}: {value} > maximum {schema['maximum']}")
+
+    if isinstance(value, dict):
+        for req in schema.get("required", ()):
+            if req not in value:
+                errs.append(f"{path}: missing required key {req!r}")
+        props = schema.get("properties", {})
+        addl = schema.get("additionalProperties")
+        for k, v in value.items():
+            sub = f"{path}.{k}"
+            if k in props:
+                errs.extend(validate(v, props[k], sub))
+            elif isinstance(addl, dict):
+                errs.extend(validate(v, addl, sub))
+            elif addl is False:
+                errs.append(f"{sub}: additional key not allowed")
+
+    if isinstance(value, list) and "items" in schema:
+        for i, v in enumerate(value):
+            errs.extend(validate(v, schema["items"], f"{path}[{i}]"))
+
+    return errs
+
+
+def default_schema_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "schema.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", help="BENCH_*.json to validate")
+    ap.add_argument("--schema", default=default_schema_path())
+    args = ap.parse_args(argv)
+    with open(args.bench) as f:
+        bench = json.load(f)
+    with open(args.schema) as f:
+        schema = json.load(f)
+    errs = validate(bench, schema)
+    for e in errs:
+        print(e)
+    n_rows = sum(map(len, bench.values())) if isinstance(bench, dict) else 0
+    if not errs:
+        print(f"# {args.bench}: {n_rows} rows valid against {args.schema}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

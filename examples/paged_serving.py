@@ -14,6 +14,8 @@ import numpy as np
 
 from repro import configs
 from repro.models import model_zoo as zoo
+from repro.obs import metrics
+from repro.obs.registry import REGISTRY
 from repro.serving import kv_cache as pkv
 
 
@@ -57,6 +59,18 @@ def main():
     _, found = pkv.lookup_pages(cache, jnp.asarray([101, 202]),
                                 jnp.asarray([0, 0]))
     print(f"post-free lookups: seq101={bool(found[0])} seq202={bool(found[1])}")
+
+    # telemetry: page-table stats (probe lengths, occupancy) + the registry
+    # counters kv_cache recorded during the eager alloc/free calls above
+    t = cache.page_table
+    stats = metrics.bolt_on_stats(
+        t, pkv._pt_key(jnp.repeat(seq_ids, 4),
+                       jnp.tile(jnp.arange(4, dtype=jnp.int32), 2)))
+    print(f"page table: load_factor={float(stats.load_factor):.3f} "
+          f"live={int(stats.live_slots)} tombstones={int(stats.tombstone_slots)} "
+          f"mean_probe_len={stats.mean_probe_len():.2f}")
+    print("--- metrics registry ---")
+    print(REGISTRY.render())
 
 
 if __name__ == "__main__":

@@ -181,7 +181,7 @@ def create(key_capacity: int, pool_capacity: int, *, s0: int = 1,
 # ---------------------------------------------------------------------------
 
 def insert(table: BucketListHashTable, keys, values, mask=None,
-           ) -> tuple[BucketListHashTable, jax.Array]:
+           stats: bool = False):
     """Insert (key, value): new keys allocate their first bucket; existing keys
     append to the tail bucket, growing the list when the tail is full.
 
@@ -189,10 +189,19 @@ def insert(table: BucketListHashTable, keys, values, mask=None,
     ``"jax"``/``"pallas"`` run the batched engine build (sort/segment
     dedup + prefix-sum bucket allocator + scatter-arbitration handle
     claims), ``"scan"`` the sequential reference — bit-identical state.
+    ``stats`` (static) appends an in-graph ``obs.metrics.TableStats``
+    (probe lengths measured over the key store; pool occupancy is the
+    caller's ``alloc_top``).
     """
     if table.backend != "scan":
-        return _insert_bulk(table, keys, values, mask)
-    return insert_scan(table, keys, values, mask)
+        ntable, status = _insert_bulk(table, keys, values, mask)
+    else:
+        ntable, status = insert_scan(table, keys, values, mask)
+    if stats:
+        from repro.obs import metrics
+        return ntable, status, metrics.bolt_on_stats(
+            ntable.key_store, keys, status=status, mask=mask)
+    return ntable, status
 
 
 def insert_scan(table: BucketListHashTable, keys, values, mask=None,
@@ -475,11 +484,15 @@ def _insert_bulk(table: BucketListHashTable, keys, values, mask,
 # retrieval — O(1) counts from handles; fused chain walk over the pool arena
 # ---------------------------------------------------------------------------
 
-def count_values(table: BucketListHashTable, keys) -> jax.Array:
+def count_values(table: BucketListHashTable, keys, stats: bool = False):
     """Per-key value count, read straight off the handle (no probe walk)."""
     handles, found = sv.retrieve(table.key_store, keys)
     _, count, _, _ = unpack_handle(handles)
-    return jnp.where(found, count, 0)
+    cnt = jnp.where(found, count, 0)
+    if stats:
+        from repro.obs import metrics
+        return cnt, metrics.bolt_on_stats(table.key_store, keys)
+    return cnt
 
 
 def _handle_probe(table: BucketListHashTable, keys_n):
@@ -575,7 +588,7 @@ def chain_arena(table: BucketListHashTable, active, ptr, counts, bidx):
 
 
 def retrieve_all(table: BucketListHashTable, keys, out_capacity: int,
-                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                 stats: bool = False):
     """Gather every value for each key by walking its bucket list tail->head
     (Fig. 4).  Returns the paper's (values, offsets, counts) layout.
 
@@ -584,13 +597,19 @@ def retrieve_all(table: BucketListHashTable, keys, out_capacity: int,
     engine's shared compaction (``bulk_retrieve._emit``) packs the output.
     ``"pallas"`` runs the chain walk as the COPS bucket-walk tile;
     ``"scan"`` keeps the private two-pass reference — all bit-identical.
+    ``stats`` (static) appends an in-graph ``obs.metrics.TableStats``.
     """
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
-        return cops_ops.bucket_retrieve_all(table, keys, out_capacity)
-    if table.backend != "scan":
-        return _retrieve_fused(table, keys, out_capacity)
-    return retrieve_all_scan(table, keys, out_capacity)
+        res = cops_ops.bucket_retrieve_all(table, keys, out_capacity)
+    elif table.backend != "scan":
+        res = _retrieve_fused(table, keys, out_capacity)
+    else:
+        res = retrieve_all_scan(table, keys, out_capacity)
+    if stats:
+        from repro.obs import metrics
+        return res + (metrics.bolt_on_stats(table.key_store, keys),)
+    return res
 
 
 def _retrieve_fused(table: BucketListHashTable, keys, out_capacity: int,

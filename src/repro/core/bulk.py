@@ -270,7 +270,8 @@ def _segmented_combine(vals, reset, combine):
 # step 2 — vectorized probe walk (batch version of _probe_for_insert)
 # ---------------------------------------------------------------------------
 
-def probe_matches(tstatic, store, keys, words, active, count=None):
+def probe_matches(tstatic, store, keys, words, active, count=None,
+                  stats=False):
     """One COPS walk for every active element against the current store.
 
     Returns (matched, row, lane) — the position of each key already
@@ -280,6 +281,11 @@ def probe_matches(tstatic, store, keys, words, active, count=None):
     owns the write-order semantics.  When ``count`` is given and zero (the
     bulk-build-from-fresh case), the walk is skipped: an empty table can
     hold no match even if erases left tombstones behind.
+
+    ``stats`` (static) additionally carries a per-element probe-length
+    counter — windows examined before the element's walk stopped — and
+    returns it as a fourth output.  When False (default) the traced graph
+    is exactly the three-output walk (byte-identical HLO).
     """
     ops, scheme, seed, max_probes = tstatic
     num_rows, w = ops.num_rows, ops.window
@@ -288,7 +294,8 @@ def probe_matches(tstatic, store, keys, words, active, count=None):
     step = probing.row_step(scheme, words, num_rows, seed)
 
     def empty(_):
-        return jnp.zeros((n,), bool), row0, jnp.zeros((n,), _U)
+        out = (jnp.zeros((n,), bool), row0, jnp.zeros((n,), _U))
+        return out + ((jnp.zeros((n,), _I),) if stats else ())
 
     def walk(_):
         def cond(st):
@@ -296,7 +303,11 @@ def probe_matches(tstatic, store, keys, words, active, count=None):
             return jnp.logical_and(attempt < max_probes, ~jnp.all(done))
 
         def body(st):
-            attempt, row, done, mrow, mlane, matched = st
+            if stats:
+                attempt, row, done, mrow, mlane, matched, plen = st
+                plen = plen + (~done).astype(_I)
+            else:
+                attempt, row, done, mrow, mlane, matched = st
             win = ops.key_windows(store, row)
             has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
             match = jnp.all(win == keys[:, :, None], axis=1)
@@ -307,12 +318,18 @@ def probe_matches(tstatic, store, keys, words, active, count=None):
             matched = matched | hit
             done = done | hit | has_empty
             nrow = probing.advance_row(scheme, row, step, attempt, num_rows)
-            return (attempt + 1, jnp.where(done, row, nrow), done, mrow,
-                    mlane, matched)
+            out = (attempt + 1, jnp.where(done, row, nrow), done, mrow,
+                   mlane, matched)
+            return out + ((plen,) if stats else ())
 
         z = jnp.zeros((n,), _U)
         st = (jnp.zeros((), _I), row0, ~active, z, z, jnp.zeros((n,), bool))
-        _, _, _, mrow, mlane, matched = jax.lax.while_loop(cond, body, st)
+        if stats:
+            st = st + (jnp.zeros((n,), _I),)
+        res = jax.lax.while_loop(cond, body, st)
+        matched, mrow, mlane = res[5], res[3], res[4]
+        if stats:
+            return matched, mrow, mlane, res[6]
         return matched, mrow, mlane
 
     if count is None:
@@ -371,7 +388,8 @@ def _nth_set_lane(mask32, rank, window):
     return lane
 
 
-def place_claims(tstatic, store, words, claim, prio, prio_is_iota=False):
+def place_claims(tstatic, store, words, claim, prio, prio_is_iota=False,
+                 stats=False):
     """Assign every claimer a slot — or FULL — via the virtual-fill fixpoint.
 
     Per sweep, claimers targeting a row are ranked by ``prio`` (original
@@ -381,6 +399,12 @@ def place_claims(tstatic, store, words, claim, prio, prio_is_iota=False):
     higher-priority tentative occupant of its new row in the following
     sweep, so the fixpoint converges to the priority-greedy (= sequential)
     assignment.  Returns (placed, row, lane, full).
+
+    ``stats`` (static) appends two telemetry outputs — the per-element
+    final probe attempt (rows examined, = the claimer's probe length) and
+    the number of fixpoint sweeps run — without touching the stats-off
+    graph (the per-element attempt is already in the carry; only the sweep
+    counter is added, gated on the python flag).
     """
     ops, scheme, seed, max_probes = tstatic
     num_rows, w = ops.num_rows, ops.window
@@ -424,23 +448,30 @@ def place_claims(tstatic, store, words, claim, prio, prio_is_iota=False):
         return attempt, row, full
 
     def cond(st):
-        attempt, row, full, rank, over = st
+        attempt, row, full, rank, over = st[:5]
         return jnp.any(over)
 
     def body(st):
-        attempt, row, full, rank, over = st
+        if stats:
+            attempt, row, full, rank, over, sweeps = st
+        else:
+            attempt, row, full, rank, over = st
         attempt, row, full = advance(attempt, row, over, full)
         alive = claim & ~full
         rank = _rank_by_row(row, prio, alive, num_rows, prio_is_iota)
         over = alive & (rank >= n_cand[row])
-        return attempt, row, full, rank, over
+        out = (attempt, row, full, rank, over)
+        return out + ((sweeps + 1,) if stats else ())
 
     attempt0 = jnp.ones((n,), _I)
     full0 = claim & (max_probes < 1)
     rank0 = _rank_by_row(row0, prio, claim & ~full0, num_rows, prio_is_iota)
     over0 = claim & ~full0 & (rank0 >= n_cand[row0])
     st = (attempt0, row0, full0, rank0, over0)
-    attempt, row, full, rank, _ = jax.lax.while_loop(cond, body, st)
+    if stats:
+        st = st + (jnp.zeros((), _I),)
+    res = jax.lax.while_loop(cond, body, st)
+    attempt, row, full, rank = res[0], res[1], res[2], res[3]
     placed = claim & ~full
     # rank-th lowest free lane of the assigned row
     if cmask is not None:
@@ -451,7 +482,10 @@ def place_claims(tstatic, store, words, claim, prio, prio_is_iota=False):
         lanes = jax.lax.broadcasted_iota(_I, crow.shape, 1)
         lane = jnp.min(jnp.where(crow & (crank == rank[:, None]), lanes,
                                  _I(w)), axis=1)
-    return placed, row, jnp.where(placed, lane, 0).astype(_U), full
+    out = (placed, row, jnp.where(placed, lane, 0).astype(_U), full)
+    if stats:
+        return out + (jnp.clip(attempt, 0, max_probes), res[5])
+    return out
 
 
 def arbitrate(row, lane, claim, prio, num_rows, window):
@@ -492,6 +526,21 @@ def _apply(table, keys, matched, mrow, mlane, placed, crow, clane,
 # public entry points
 # ---------------------------------------------------------------------------
 
+def _walk_plen(matched, probe_plen, claim_attempt, max_probes):
+    """Per-element walk length: match-walk windows for matched elements,
+    final placement attempt for claimers (clipped to max_probes)."""
+    return jnp.where(matched, probe_plen,
+                     jnp.clip(claim_attempt, 0, max_probes))
+
+
+def _build_stats(table, status, plen, active, sweeps):
+    """Assemble the in-graph TableStats for a build op (post-op table)."""
+    from repro.obs import metrics
+    return metrics.table_stats(table.ops, table.store, status=status,
+                               plen=plen, active=active,
+                               fixpoint_iters=sweeps)
+
+
 def _finish_fast(table, keys, live, is_rep, rep_of, matched, mrow, mlane,
                  placed, crow, clane, matched_vals, claim_vals):
     """Shared tail of the fast lane: apply + statuses in batch order."""
@@ -509,8 +558,12 @@ def _finish_fast(table, keys, live, is_rep, rep_of, matched, mrow, mlane,
                                count=table.count + claimed), status
 
 
-def insert_single(table, keys, values, mask=None):
-    """Bulk path for ``single_value.insert`` (plain upsert, LWW dedup)."""
+def insert_single(table, keys, values, mask=None, stats=False):
+    """Bulk path for ``single_value.insert`` (plain upsert, LWW dedup).
+
+    ``stats=True`` (static) returns ``(table, status, TableStats)`` with
+    the telemetry accumulated inside the same graph; the default graph is
+    untouched."""
     from repro.core import single_value as sv
     keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     values = sv.normalize_words(values, table.value_words, "values")
@@ -519,21 +572,27 @@ def insert_single(table, keys, values, mask=None):
         mask = jnp.ones((n,), bool)
     tstat = _tstatic(table)
     if table.key_words != 1:
-        return _insert_general(table, tstat, keys, values, mask)
+        return _insert_general(table, tstat, keys, values, mask, stats=stats)
     is_rep, rep_of, lww_of, _, _ = _group_fast(keys[:, 0], mask)
     words = sv.key_hash_word(keys)
-    matched, mrow, mlane = probe_matches(tstat, table.store, keys, words,
-                                         is_rep, table.count)
-    placed, crow, clane, _ = place_claims(tstat, table.store, words,
-                                          is_rep & ~matched,
-                                          jnp.arange(n, dtype=_U),
-                                          prio_is_iota=True)
+    pm = probe_matches(tstat, table.store, keys, words, is_rep, table.count,
+                       stats=stats)
+    matched, mrow, mlane = pm[:3]
+    pc = place_claims(tstat, table.store, words, is_rep & ~matched,
+                      jnp.arange(n, dtype=_U), prio_is_iota=True, stats=stats)
+    placed, crow, clane = pc[0], pc[1], pc[2]
     lww = values[lww_of]                         # group's last live writer
-    return _finish_fast(table, keys, mask, is_rep, rep_of, matched, mrow,
-                        mlane, placed, crow, clane, lww, lww)
+    out = _finish_fast(table, keys, mask, is_rep, rep_of, matched, mrow,
+                       mlane, placed, crow, clane, lww, lww)
+    if not stats:
+        return out
+    ntable, status = out
+    plen = _walk_plen(matched, pm[3], pc[4], tstat[3])
+    return ntable, status, _build_stats(ntable, status, plen, is_rep, pc[5])
 
 
-def update_single(table, keys, update_fn, combine, init, values, mask=None):
+def update_single(table, keys, update_fn, combine, init, values, mask=None,
+                  stats=False):
     """Bulk path for ``single_value.update_values`` (RMW upsert).
 
     ``combine`` must be the associative pre-aggregation of the operand
@@ -555,18 +614,18 @@ def update_single(table, keys, update_fn, combine, init, values, mask=None):
     if table.key_words != 1 or not is_spec:
         cmb = combine_callable(combine) if is_spec else combine
         return _update_general(table, tstat, keys, update_fn, cmb, init,
-                               values, mask)
+                               values, mask, stats=stats)
     spec = tuple(combine)
     vw = table.value_words
     vfold = jax.vmap(update_fn)
     is_rep, rep_of, lww_of, gid, has_dups = _group_fast(keys[:, 0], mask)
     words = sv.key_hash_word(keys)
-    matched, mrow, mlane = probe_matches(tstat, table.store, keys, words,
-                                         is_rep, table.count)
-    placed, crow, clane, _ = place_claims(tstat, table.store, words,
-                                          is_rep & ~matched,
-                                          jnp.arange(n, dtype=_U),
-                                          prio_is_iota=True)
+    pm = probe_matches(tstat, table.store, keys, words, is_rep, table.count,
+                       stats=stats)
+    matched, mrow, mlane = pm[:3]
+    pc = place_claims(tstat, table.store, words, is_rep & ~matched,
+                      jnp.arange(n, dtype=_U), prio_is_iota=True, stats=stats)
+    placed, crow, clane = pc[0], pc[1], pc[2]
 
     def folded(_):
         # agg_all = fold of every live operand (applied to the stored value
@@ -589,11 +648,16 @@ def update_single(table, keys, update_fn, combine, init, values, mask=None):
     old = jnp.take_along_axis(
         old, mlane.astype(_I)[:, None, None], axis=2)[:, :, 0]
     matched_vals = vfold(old, keys, agg_all)
-    return _finish_fast(table, keys, mask, is_rep, rep_of, matched, mrow,
-                        mlane, placed, crow, clane, matched_vals, claim_vals)
+    out = _finish_fast(table, keys, mask, is_rep, rep_of, matched, mrow,
+                       mlane, placed, crow, clane, matched_vals, claim_vals)
+    if not stats:
+        return out
+    ntable, status = out
+    plen = _walk_plen(matched, pm[3], pc[4], tstat[3])
+    return ntable, status, _build_stats(ntable, status, plen, is_rep, pc[5])
 
 
-def insert_multi(table, keys, values, mask=None):
+def insert_multi(table, keys, values, mask=None, stats=False):
     """Bulk path for ``multi_value.insert`` (append; no dedup — every live
     element is a claimer, duplicates of a key contend for slots and the
     fixpoint resolves them in batch order)."""
@@ -605,18 +669,21 @@ def insert_multi(table, keys, values, mask=None):
         mask = jnp.ones((n,), bool)
     words = sv.key_hash_word(keys)
     tstat = _tstatic(table)
-    placed, row, lane, _ = place_claims(tstat, table.store, words, mask,
-                                        jnp.arange(n, dtype=_U),
-                                        prio_is_iota=True)
+    pc = place_claims(tstat, table.store, words, mask,
+                      jnp.arange(n, dtype=_U), prio_is_iota=True, stats=stats)
+    placed, row, lane = pc[0], pc[1], pc[2]
     wrow = jnp.where(placed, row, _U(table.num_rows))
     store = table.ops.scatter_batch(table.store, wrow, lane, keys, values,
                                     placed)
     status = jnp.where(~mask, _I(STATUS_MASKED),
                        jnp.where(placed, _I(STATUS_INSERTED),
                                  _I(STATUS_FULL)))
-    return dataclasses.replace(
-        table, store=store,
-        count=table.count + jnp.sum(placed, dtype=_I)), status
+    ntable = dataclasses.replace(
+        table, store=store, count=table.count + jnp.sum(placed, dtype=_I))
+    if not stats:
+        return ntable, status
+    plen = jnp.clip(pc[4], 0, tstat[3])
+    return ntable, status, _build_stats(ntable, status, plen, mask, pc[5])
 
 
 # ---------------------------------------------------------------------------
@@ -635,7 +702,7 @@ def _statuses_sorted(n, live, is_rep, first_pos, matched, placed, sidx):
     return jnp.zeros((n,), _I).at[sidx].set(status)
 
 
-def _insert_general(table, tstat, keys, values, mask):
+def _insert_general(table, tstat, keys, values, mask, stats=False):
     from repro.core import single_value as sv
     n = keys.shape[0]
     vw = table.value_words
@@ -645,20 +712,26 @@ def _insert_general(table, tstat, keys, values, mask):
     live, is_rep, first_pos, last_pos = _group_structure(flag, skeys)
     lww = svals[last_pos]
     swords = sv.key_hash_word(skeys)
-    matched, mrow, mlane = probe_matches(tstat, table.store, skeys, swords,
-                                         is_rep, table.count)
-    placed, crow, clane, _ = place_claims(tstat, table.store, swords,
-                                          is_rep & ~matched, sidx)
+    pm = probe_matches(tstat, table.store, skeys, swords, is_rep,
+                       table.count, stats=stats)
+    matched, mrow, mlane = pm[:3]
+    pc = place_claims(tstat, table.store, swords, is_rep & ~matched, sidx,
+                      stats=stats)
+    placed, crow, clane = pc[0], pc[1], pc[2]
     store, claimed = _apply(table, skeys, matched, mrow, mlane, placed,
                             crow, clane, lww, lww)
     status = _statuses_sorted(n, live, is_rep, first_pos, matched, placed,
                               sidx)
-    return dataclasses.replace(table, store=store,
-                               count=table.count + claimed), status
+    ntable = dataclasses.replace(table, store=store,
+                                 count=table.count + claimed)
+    if not stats:
+        return ntable, status
+    plen = _walk_plen(matched, pm[3], pc[4], tstat[3])
+    return ntable, status, _build_stats(ntable, status, plen, is_rep, pc[5])
 
 
 def _update_general(table, tstat, keys, update_fn, combine, init, values,
-                    mask):
+                    mask, stats=False):
     from repro.core import single_value as sv
     n = keys.shape[0]
     vw = table.value_words
@@ -680,10 +753,12 @@ def _update_general(table, tstat, keys, update_fn, combine, init, values,
                            vfold(sinit, skeys, agg_tail), sinit)
     claim_vals = claim_vals[first_pos]
 
-    matched, mrow, mlane = probe_matches(tstat, table.store, skeys, swords,
-                                         is_rep, table.count)
-    placed, crow, clane, _ = place_claims(tstat, table.store, swords,
-                                          is_rep & ~matched, sidx)
+    pm = probe_matches(tstat, table.store, skeys, swords, is_rep,
+                       table.count, stats=stats)
+    matched, mrow, mlane = pm[:3]
+    pc = place_claims(tstat, table.store, swords, is_rep & ~matched, sidx,
+                      stats=stats)
+    placed, crow, clane = pc[0], pc[1], pc[2]
     old = table.ops.value_windows(table.store, mrow)
     old = jnp.take_along_axis(
         old, mlane.astype(_I)[:, None, None], axis=2)[:, :, 0]
@@ -692,5 +767,9 @@ def _update_general(table, tstat, keys, update_fn, combine, init, values,
                             crow, clane, matched_vals, claim_vals)
     status = _statuses_sorted(n, live, is_rep, first_pos, matched, placed,
                               sidx)
-    return dataclasses.replace(table, store=store,
-                               count=table.count + claimed), status
+    ntable = dataclasses.replace(table, store=store,
+                                 count=table.count + claimed)
+    if not stats:
+        return ntable, status
+    plen = _walk_plen(matched, pm[3], pc[4], tstat[3])
+    return ntable, status, _build_stats(ntable, status, plen, is_rep, pc[5])

@@ -132,7 +132,8 @@ def group_queries(keys, live):
 # the fused walk — counts + slot arena in a single pass over the store
 # ---------------------------------------------------------------------------
 
-def fused_walk(tstatic, store, keys, words, active, *, collect, count=None):
+def fused_walk(tstatic, store, keys, words, active, *, collect, count=None,
+               stats=False):
     """One COPS walk for every active element, emitting counts AND matches.
 
     Returns ``(cnt, qarena, rank_arena)``: per-element match counts (0 for
@@ -148,6 +149,10 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None):
     Distinct active keys can never match the same slot, so arena writes
     are collision-free by construction — the retrieval-side analogue of
     the build engine's unique (row, rank) placement invariant.
+
+    ``stats`` (static) additionally carries a per-element probe-length
+    counter (windows examined) and returns it as a fourth output; the
+    stats-off graph is byte-identical to the three-output walk.
     """
     ops, scheme, seed, max_probes = tstatic
     num_rows, w = ops.num_rows, ops.window
@@ -164,15 +169,20 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None):
     idx = jnp.arange(n, dtype=_I)
 
     def empty(_):
-        return jnp.zeros((n,), _I), qa0, ra0
+        out = (jnp.zeros((n,), _I), qa0, ra0)
+        return out + ((jnp.zeros((n,), _I),) if stats else ())
 
     def walk(_):
         def cond(st):
-            attempt, row, done, seen, qa, ra = st
+            attempt, row, done, seen, qa, ra = st[:6]
             return jnp.logical_and(attempt < max_probes, ~jnp.all(done))
 
         def body(st):
-            attempt, row, done, seen, qa, ra = st
+            if stats:
+                attempt, row, done, seen, qa, ra, plen = st
+                plen = plen + (~done).astype(_I)
+            else:
+                attempt, row, done, seen, qa, ra = st
             win = ops.key_windows(store, row)
             match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]
             has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
@@ -192,19 +202,27 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None):
             seen = seen + probing.vote_count(match)
             done = done | has_empty
             nrow = probing.advance_row(scheme, row, step, attempt, num_rows)
-            return attempt + 1, jnp.where(done, row, nrow), done, seen, qa, ra
+            out = (attempt + 1, jnp.where(done, row, nrow), done, seen, qa,
+                   ra)
+            return out + ((plen,) if stats else ())
 
         st = (jnp.zeros((), _I), row0, ~active, jnp.zeros((n,), _I), qa0, ra0)
-        _, _, _, seen, qa, ra = jax.lax.while_loop(cond, body, st)
-        return seen, qa, ra
+        if stats:
+            st = st + (jnp.zeros((n,), _I),)
+        res = jax.lax.while_loop(cond, body, st)
+        out = (res[3], res[4], res[5])
+        return out + ((res[6],) if stats else ())
 
     if count is None:
-        cnt, qa, ra = walk(None)
+        res = walk(None)
     else:
-        cnt, qa, ra = jax.lax.cond(count == 0, empty, walk, None)
+        res = jax.lax.cond(count == 0, empty, walk, None)
+    cnt, qa, ra = res[:3]
     if packed:
         ra = jnp.where(qa >= 0, qa % cap, 0)
         qa = jnp.where(qa >= 0, qa // cap, n)
+    if stats:
+        return cnt, qa, ra, res[3]
     return cnt, qa, ra
 
 
@@ -269,22 +287,33 @@ def _emit_store(table, out_capacity, counts, is_rep, rep_of, rcnt, qarena,
 # multi-value entry points
 # ---------------------------------------------------------------------------
 
-def count_multi(table, keys, mask=None):
+def _retrieval_stats(table, plen=None, active=None):
+    """TableStats for a pure retrieval walk (no statuses, no fixpoint)."""
+    from repro.obs import metrics
+    return metrics.table_stats(table.ops, table.store, plen=plen,
+                               active=active)
+
+
+def count_multi(table, keys, mask=None, stats=False):
     """Fused path for ``multi_value.count_values`` (dedup + one walk)."""
     from repro.core import single_value as sv
     keys = sv.normalize_key_batch(keys, table.key_words, "keys")
     n = keys.shape[0]
     if n == 0:
-        return jnp.zeros((0,), _I)
+        out = jnp.zeros((0,), _I)
+        return (out, _retrieval_stats(table)) if stats else out
     live = jnp.ones((n,), bool) if mask is None else mask
     is_rep, rep_of = group_queries(keys, live)
     words = sv.key_hash_word(keys)
-    cnt, _, _ = fused_walk(_tstatic(table), table.store, keys, words, is_rep,
-                           collect=False, count=table.count)
-    return _fan_out(cnt, rep_of, live, n)
+    fw = fused_walk(_tstatic(table), table.store, keys, words, is_rep,
+                    collect=False, count=table.count, stats=stats)
+    counts = _fan_out(fw[0], rep_of, live, n)
+    if stats:
+        return counts, _retrieval_stats(table, plen=fw[3], active=is_rep)
+    return counts
 
 
-def retrieve_all_multi(table, keys, out_capacity, mask=None):
+def retrieve_all_multi(table, keys, out_capacity, mask=None, stats=False):
     """Fused path for ``multi_value.retrieve_all``: the single-walk
     count+gather this engine exists for."""
     from repro.core import single_value as sv
@@ -293,20 +322,23 @@ def retrieve_all_multi(table, keys, out_capacity, mask=None):
     vw = table.value_words
     if n == 0:
         out = jnp.zeros((out_capacity, vw), _U)
-        return ((out[:, 0] if vw == 1 else out), jnp.zeros((1,), _I),
-                jnp.zeros((0,), _I))
+        res = ((out[:, 0] if vw == 1 else out), jnp.zeros((1,), _I),
+               jnp.zeros((0,), _I))
+        return res + ((_retrieval_stats(table),) if stats else ())
     live = jnp.ones((n,), bool) if mask is None else mask
     is_rep, rep_of = group_queries(keys, live)
     words = sv.key_hash_word(keys)
-    rcnt, qarena, rank_arena = fused_walk(
+    fw = fused_walk(
         _tstatic(table), table.store, keys, words, is_rep, collect=True,
-        count=table.count)
+        count=table.count, stats=stats)
+    rcnt, qarena, rank_arena = fw[:3]
     counts = _fan_out(rcnt, rep_of, live, n)
     out, offsets, counts = _emit_store(table, out_capacity, counts, is_rep,
                                        rep_of, rcnt, qarena, rank_arena)
-    if vw == 1:
-        return out[:, 0], offsets, counts
-    return out, offsets, counts
+    res = ((out[:, 0] if vw == 1 else out), offsets, counts)
+    if stats:
+        return res + (_retrieval_stats(table, plen=fw[3], active=is_rep),)
+    return res
 
 
 def erase_multi(table, keys):
@@ -333,19 +365,22 @@ def erase_multi(table, keys):
 # single-value entry points (dedup + one located walk, shared with erase)
 # ---------------------------------------------------------------------------
 
-def _locate_reps(table, keys):
+def _locate_reps(table, keys, stats=False):
     from repro.core import bulk
     from repro.core import single_value as sv
     n = keys.shape[0]
     live = jnp.ones((n,), bool)
     is_rep, rep_of = group_queries(keys, live)
     words = sv.key_hash_word(keys)
-    matched, mrow, mlane = bulk.probe_matches(
-        _tstatic(table), table.store, keys, words, is_rep, table.count)
-    return is_rep, rep_of, matched, mrow, mlane
+    pm = bulk.probe_matches(
+        _tstatic(table), table.store, keys, words, is_rep, table.count,
+        stats=stats)
+    matched, mrow, mlane = pm[:3]
+    out = (is_rep, rep_of, matched, mrow, mlane)
+    return out + ((pm[3],) if stats else ())
 
 
-def retrieve_single(table, keys):
+def retrieve_single(table, keys, stats=False):
     """Fused path for ``single_value.retrieve``: duplicate probe keys walk
     once; duplicates read their representative's slot."""
     from repro.core import single_value as sv
@@ -354,15 +389,18 @@ def retrieve_single(table, keys):
     vw = table.value_words
     if n == 0:
         vals = jnp.zeros((0, vw), _U)
-        return (vals[:, 0] if vw == 1 else vals), jnp.zeros((0,), bool)
-    _, rep_of, matched, mrow, mlane = _locate_reps(table, keys)
+        res = ((vals[:, 0] if vw == 1 else vals), jnp.zeros((0,), bool))
+        return res + ((_retrieval_stats(table),) if stats else ())
+    lr = _locate_reps(table, keys, stats=stats)
+    is_rep, rep_of, matched, mrow, mlane = lr[:5]
     vp = table.value_planes()                                 # (vw, p, W)
     rvals = vp[:, mrow, mlane].T                              # (n, vw)
     found = matched[rep_of]
     vals = jnp.where(found[:, None], rvals[rep_of], 0)
-    if vw == 1:
-        return vals[:, 0], found
-    return vals, found
+    res = ((vals[:, 0] if vw == 1 else vals), found)
+    if stats:
+        return res + (_retrieval_stats(table, plen=lr[5], active=is_rep),)
+    return res
 
 
 def contains_single(table, keys):

@@ -33,8 +33,7 @@ def _sat_add(a, b):
     return jnp.where(s < a, _U32_MAX, s)
 
 
-def insert(table: CountingHashTable, keys, mask=None,
-           ) -> tuple[CountingHashTable, jax.Array]:
+def insert(table: CountingHashTable, keys, mask=None, stats: bool = False):
     """Count each key occurrence (saturating at 2^32 - 1).
 
     The per-element operand is 1; the fold is a saturating add.  The
@@ -42,21 +41,25 @@ def insert(table: CountingHashTable, keys, mask=None,
     bulk path (duplicates in the batch collapse to one RMW of the summed
     count); plain add is exact here — n operands of 1 cannot wrap u32 —
     and the saturation lives in the fold, where combined and stepwise
-    increments agree.
+    increments agree.  ``stats`` (static) appends an in-graph
+    ``obs.metrics.TableStats`` to the return.
     """
     def bump(old, key, new):
         return _sat_add(old, new)
     return sv.update_values(table, keys, bump, jnp.uint32(1), mask,
-                            combine=("add",))
+                            combine=("add",), stats=stats)
 
 
-def counts(table: CountingHashTable, keys) -> jax.Array:
+def counts(table: CountingHashTable, keys, stats: bool = False):
     """Occurrence count per key (0 when absent).
 
     Rides ``single_value.retrieve``'s backend dispatch: the default path
     is the fused bulk-retrieval engine (``repro.core.bulk_retrieve`` —
     duplicate query keys walk the table once), ``backend="scan"`` keeps
     the direct reference walk and ``"pallas"`` the lookup kernel.
+    ``stats`` rides along (see ``single_value.retrieve``).
     """
-    vals, found = sv.retrieve(table, keys)
-    return jnp.where(found, vals, jnp.uint32(0))
+    res = sv.retrieve(table, keys, stats=stats)
+    vals, found = res[:2]
+    out = jnp.where(found, vals, jnp.uint32(0))
+    return (out, res[2]) if stats else out

@@ -134,22 +134,29 @@ def _probe_for_slot(tstatic, store, key_vec, word):
 
 
 def insert(table: MultiValueHashTable, keys, values, mask=None,
-           ) -> tuple[MultiValueHashTable, jax.Array]:
+           stats: bool = False):
     """Append (key, value) pairs; duplicates of a key occupy distinct slots.
 
     Dispatches on ``table.backend`` like ``single_value.insert``: the
     default ``"jax"`` path is the vectorized bulk engine (duplicates of a
     key contend for slots via scatter-min arbitration and resolve over
     rounds in batch order), ``"scan"`` the sequential reference, and
-    ``"pallas"`` the COPS kernel — all bit-identical.
+    ``"pallas"`` the COPS kernel — all bit-identical.  ``stats`` (static)
+    appends an in-graph ``obs.metrics.TableStats`` to the return.
     """
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
-        return cops_ops.insert_multi(table, keys, values, mask)
-    if table.backend != "scan":
+        ntable, status = cops_ops.insert_multi(table, keys, values, mask)
+    elif table.backend != "scan":
         from repro.core import bulk
-        return bulk.insert_multi(table, keys, values, mask)
-    return insert_scan(table, keys, values, mask)
+        return bulk.insert_multi(table, keys, values, mask, stats=stats)
+    else:
+        ntable, status = insert_scan(table, keys, values, mask)
+    if stats:
+        from repro.obs import metrics
+        return ntable, status, metrics.bolt_on_stats(ntable, keys,
+                                                     status=status, mask=mask)
+    return ntable, status
 
 
 def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
@@ -188,7 +195,8 @@ def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
 # backend="scan" keeps the two-walk count+gather reference
 # ---------------------------------------------------------------------------
 
-def count_values(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
+def count_values(table: MultiValueHashTable, keys, mask=None,
+                 stats: bool = False):
     """Number of stored values per queried key (the paper's counting pass).
 
     ``mask`` drops query elements entirely (count 0, no probe walk) — used by
@@ -196,14 +204,20 @@ def count_values(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
     Dispatches on ``table.backend``: the default runs the fused
     bulk-retrieval engine (duplicate probe keys walk once), ``"pallas"``
     the fused COPS walk tile, ``"scan"`` the direct reference walk.
+    ``stats`` (static) appends an in-graph ``obs.metrics.TableStats``.
     """
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
-        return cops_ops.count_multi(table, keys, mask)
-    if table.backend != "scan":
+        cnt = cops_ops.count_multi(table, keys, mask)
+    elif table.backend != "scan":
         from repro.core import bulk_retrieve
-        return bulk_retrieve.count_multi(table, keys, mask)
-    return count_values_scan(table, keys, mask)
+        return bulk_retrieve.count_multi(table, keys, mask, stats=stats)
+    else:
+        cnt = count_values_scan(table, keys, mask)
+    if stats:
+        from repro.obs import metrics
+        return cnt, metrics.bolt_on_stats(table, keys, mask=mask)
+    return cnt
 
 
 def count_values_scan(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
@@ -235,7 +249,7 @@ def count_values_scan(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
 
 
 def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
-                 mask=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+                 mask=None, stats: bool = False):
     """Gather every value for each queried key.
 
     Returns (values, offsets, counts): ``values`` is (out_capacity, value_words)
@@ -257,11 +271,16 @@ def retrieve_all(table: MultiValueHashTable, keys, out_capacity: int,
     if table.backend != "scan" and bulk_retrieve.fused_ok(table):
         if table.backend == "pallas":
             from repro.kernels.cops import ops as cops_ops
-            return cops_ops.retrieve_all_multi(table, keys, out_capacity,
-                                               mask)
-        return bulk_retrieve.retrieve_all_multi(table, keys, out_capacity,
-                                                mask)
-    return retrieve_all_scan(table, keys, out_capacity, mask)
+            res = cops_ops.retrieve_all_multi(table, keys, out_capacity, mask)
+        else:
+            return bulk_retrieve.retrieve_all_multi(table, keys, out_capacity,
+                                                    mask, stats=stats)
+    else:
+        res = retrieve_all_scan(table, keys, out_capacity, mask)
+    if stats:
+        from repro.obs import metrics
+        return res + (metrics.bolt_on_stats(table, keys, mask=mask),)
+    return res
 
 
 def retrieve_all_scan(table: MultiValueHashTable, keys, out_capacity: int,

@@ -246,7 +246,7 @@ def _locate(table: SingleValueHashTable, keys: jax.Array):
     return frow, flane, found
 
 
-def retrieve(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
+def retrieve(table: SingleValueHashTable, keys, stats: bool = False):
     """Batch lookup -> (values (n, value_words) [or (n,) if 1 word], found (n,) bool).
 
     Dispatches on ``table.backend`` like ``insert``: the default ``"jax"``
@@ -254,14 +254,22 @@ def retrieve(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
     — duplicate probe keys walk the table once and fan out by group),
     ``"scan"`` keeps the direct per-element walk as the bit-exact
     reference, and ``"pallas"`` runs the COPS lookup kernel.
+
+    ``stats`` (static) appends an in-graph ``obs.metrics.TableStats`` to
+    the return; ``stats=False`` compiles to the pre-telemetry graph.
     """
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
-        return cops_ops.retrieve(table, keys)
-    if table.backend != "scan":
+        vals, found = cops_ops.retrieve(table, keys)
+    elif table.backend != "scan":
         from repro.core import bulk_retrieve
-        return bulk_retrieve.retrieve_single(table, keys)
-    return retrieve_scan(table, keys)
+        return bulk_retrieve.retrieve_single(table, keys, stats=stats)
+    else:
+        vals, found = retrieve_scan(table, keys)
+    if stats:
+        from repro.obs import metrics
+        return vals, found, metrics.bolt_on_stats(table, keys)
+    return vals, found
 
 
 def retrieve_scan(table: SingleValueHashTable, keys) -> tuple[jax.Array, jax.Array]:
@@ -387,21 +395,31 @@ def _probe_for_insert(table_static, store, key_vec, word):
 
 
 def insert(table: SingleValueHashTable, keys, values, mask=None,
-           ) -> tuple[SingleValueHashTable, jax.Array]:
+           stats: bool = False):
     """Batch upsert. Returns (table, status (n,) i32) — see STATUS_* codes.
 
     Duplicate keys inside one batch behave as consecutive upserts (second
     occurrence reports STATUS_UPDATED).  Dispatches on ``table.backend``:
     ``"jax"`` runs the vectorized bulk engine, ``"scan"`` the sequential
     reference, ``"pallas"`` the COPS kernel — all bit-identical.
+
+    ``stats`` (static) appends an in-graph ``obs.metrics.TableStats``:
+    the jax backend threads counters through the engine loops; scan and
+    pallas run their op unchanged and measure with a bolt-on walk.
     """
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
-        return cops_ops.insert(table, keys, values, mask)
-    if table.backend != "scan":
+        ntable, status = cops_ops.insert(table, keys, values, mask)
+    elif table.backend != "scan":
         from repro.core import bulk
-        return bulk.insert_single(table, keys, values, mask)
-    return insert_scan(table, keys, values, mask)
+        return bulk.insert_single(table, keys, values, mask, stats=stats)
+    else:
+        ntable, status = insert_scan(table, keys, values, mask)
+    if stats:
+        from repro.obs import metrics
+        return ntable, status, metrics.bolt_on_stats(ntable, keys,
+                                                     status=status, mask=mask)
+    return ntable, status
 
 
 def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
@@ -475,7 +493,7 @@ def for_all(table: SingleValueHashTable, fn: Callable) -> Any:
 
 def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
                   init, mask=None, values=None, combine: Callable | None = None,
-                  ) -> tuple[SingleValueHashTable, jax.Array]:
+                  stats: bool = False):
     """Read-modify-write upsert: present -> update_fn(old, key, new),
     absent -> insert ``init``.  Substrate for CountingHashTable and the
     group-by aggregates in repro.relational.
@@ -504,7 +522,7 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
     if combine is not None and table.backend != "scan":
         from repro.core import bulk
         return bulk.update_single(table, keys, update_fn, combine, init,
-                                  values, mask)
+                                  values, mask, stats=stats)
     words = key_hash_word(keys)
     tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
 
@@ -533,4 +551,9 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
 
     (store, count), status = jax.lax.scan(step, (table.store, table.count),
                                           (keys, init, values, words, mask))
-    return dataclasses.replace(table, store=store, count=count), status
+    ntable = dataclasses.replace(table, store=store, count=count)
+    if stats:
+        from repro.obs import metrics
+        return ntable, status, metrics.bolt_on_stats(ntable, keys,
+                                                     status=status, mask=mask)
+    return ntable, status

@@ -137,7 +137,7 @@ def build_watchlist(tracked_tokens):
 
 
 def relational_stage(dedup_table, tokens: jax.Array, tracked_tokens,
-                     pair_capacity: int | None = None):
+                     pair_capacity: int | None = None, tracer=None):
     """Run a batch through a dedup -> join -> aggregate chain on device.
 
     The paper's pitch is "data processing pipelines entirely on the GPU"
@@ -161,26 +161,44 @@ def relational_stage(dedup_table, tokens: jax.Array, tracked_tokens,
     ``tracked_tokens`` may be a raw token array (build table constructed
     in-line, convenient for one-offs) or a prebuilt ``build_watchlist``
     table (probe-only per batch — use this on the training hot path).
+
+    ``tracer`` (an ``obs.trace.Tracer``) wraps each stage in a wall-time
+    span (``pipeline.dedup`` / ``pipeline.join`` / ``pipeline.aggregate``);
+    spans block on stage outputs so they measure real device time.  Omit
+    it (the default) for the fully-async hot path.
     """
     from repro.core.multi_value import MultiValueHashTable
+    from repro.obs.trace import Tracer
     from repro.relational import groupby, join
 
+    if tracer is None:
+        tracer = Tracer(enabled=False)
     batch, seq_len = tokens.shape
-    dedup_table, keep = dedup_filter(dedup_table, tokens)
+    with tracer.span("pipeline.dedup", batch=batch):
+        dedup_table, keep = dedup_filter(dedup_table, tokens)
+        if tracer.enabled:
+            jax.block_until_ready(keep)
 
-    flat = tokens.reshape(-1).astype(jnp.uint32)
-    stream_mask = jnp.broadcast_to(keep[:, None], tokens.shape).reshape(-1)
-    if pair_capacity is None:
-        pair_capacity = batch * seq_len
-    if not isinstance(tracked_tokens, MultiValueHashTable):
-        tracked_tokens = build_watchlist(tracked_tokens)
-    res = join.probe(tracked_tokens, flat, pair_capacity, "inner",
-                     mask=stream_mask)
+    with tracer.span("pipeline.join", n_probe=batch * seq_len):
+        flat = tokens.reshape(-1).astype(jnp.uint32)
+        stream_mask = jnp.broadcast_to(keep[:, None], tokens.shape).reshape(-1)
+        if pair_capacity is None:
+            pair_capacity = batch * seq_len
+        if not isinstance(tracked_tokens, MultiValueHashTable):
+            tracked_tokens = build_watchlist(tracked_tokens)
+        res = join.probe(tracked_tokens, flat, pair_capacity, "inner",
+                         mask=stream_mask)
+        if tracer.enabled:
+            jax.block_until_ready(res.valid)
 
-    seq_of_pair = jnp.where(res.valid, res.probe_idx // seq_len, 0)
-    table = groupby.create(groupby.capacity_for(batch))
-    table, _ = groupby.update(table, "count", seq_of_pair.astype(jnp.uint32),
-                              mask=res.valid)
-    hits, _ = groupby.lookup(table, "count",
-                             jnp.arange(batch, dtype=jnp.uint32))
+    with tracer.span("pipeline.aggregate", groups=batch):
+        seq_of_pair = jnp.where(res.valid, res.probe_idx // seq_len, 0)
+        table = groupby.create(groupby.capacity_for(batch))
+        table, _ = groupby.update(table, "count",
+                                  seq_of_pair.astype(jnp.uint32),
+                                  mask=res.valid)
+        hits, _ = groupby.lookup(table, "count",
+                                 jnp.arange(batch, dtype=jnp.uint32))
+        if tracer.enabled:
+            jax.block_until_ready(hits)
     return dedup_table, keep, hits.astype(jnp.int32)

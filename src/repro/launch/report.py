@@ -1,13 +1,35 @@
-"""Render EXPERIMENTS.md tables from dry-run JSONL records."""
+"""Render EXPERIMENTS.md tables from dry-run JSONL records.
+
+Besides the dry-run/roofline tables this renders two telemetry sections:
+
+- ``table_metrics_section`` — the table-walk metrics a BENCH_*.json row
+  carries when the benchmark ran its op with ``stats=True``
+  (``probe_len_p50/p99``, ``load_factor``, ``bytes_moved``,
+  ``pct_of_roofline`` — see ``benchmarks.util.table_metric_extras``);
+- ``trace_section`` — span latency percentiles from a trace JSONL file
+  written by ``obs.trace.Tracer`` (the schema is shared: ``EVENT_FIELDS``).
+
+Input files may interleave record kinds (a dry-run sweep appending trace
+events to the same JSONL, partial reruns missing ``roofline`` because the
+census step was skipped): ``load`` keeps only well-formed dry-run records
+and every table guards the optional fields instead of KeyError-ing.
+"""
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 from collections import defaultdict
+
+_DRYRUN_KEYS = ("arch", "shape", "mesh")
 
 
 def load(path: str) -> list[dict]:
+    """Dry-run records from a JSONL file (latest per (arch, shape, mesh)).
+
+    Lines that are not dry-run records — trace events (``obs.trace``
+    schema) or malformed partials missing the identity keys — are skipped,
+    not fatal."""
     out = []
     with open(path) as f:
         for line in f:
@@ -16,8 +38,19 @@ def load(path: str) -> list[dict]:
     # keep the LAST record per (arch, shape, mesh) — reruns supersede
     seen = {}
     for r in out:
-        seen[(r["arch"], r["shape"], r["mesh"])] = r
+        if all(k in r for k in _DRYRUN_KEYS):
+            seen[(r["arch"], r["shape"], r["mesh"])] = r
     return list(seen.values())
+
+
+def meshes(recs: list[dict]) -> list[str]:
+    """Distinct meshes present in the records, smallest first."""
+    def key(m: str):
+        try:
+            return ([int(x) for x in m.split("x")], m)
+        except ValueError:
+            return ([1 << 30], m)
+    return sorted({r["mesh"] for r in recs}, key=key)
 
 
 def fmt_bytes(b: float) -> str:
@@ -30,25 +63,31 @@ def dryrun_table(recs: list[dict]) -> str:
             "dominant collective |",
             "|---|---|---|---|---|---|---|---|---|---|---|"]
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
-        rl = r["roofline"]
-        chips = r["chips"]
-        coll = rl["collectives"]["bytes"]
-        dom = max(coll, key=coll.get) if coll else "none"
+        rl = r.get("roofline")
+        chips = max(r.get("chips", 1), 1)
+        if rl:
+            coll = rl.get("collectives", {}).get("bytes", {})
+            dom = max(coll, key=coll.get) if coll else "none"
+            census = (f"{rl['flops_per_device']:.2e} | "
+                      f"{rl['bytes_per_device']:.2e} | "
+                      f"{rl['wire_bytes']:.2e} | {dom}")
+        else:
+            census = "— | — | — | —"
         rows.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
-            f"{r['compile_s']} | "
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('kind', '?')} | {r.get('compile_s', '—')} | "
             f"{fmt_bytes(r.get('temp_size_in_bytes', 0) / chips)} | "
             f"{fmt_bytes(r.get('argument_size_in_bytes', 0) / chips)} | "
-            f"{rl['flops_per_device']:.2e} | {rl['bytes_per_device']:.2e} | "
-            f"{rl['wire_bytes']:.2e} | {dom} |")
+            f"{census} |")
     return "\n".join(rows)
 
 
-def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+def roofline_table(recs: list[dict], mesh: str) -> str:
     rows = ["| arch | shape | compute s | memory s | collective s | "
             "bottleneck | MODEL_FLOPS | useful ratio | note |",
             "|---|---|---|---|---|---|---|---|---|"]
-    for r in sorted((r for r in recs if r["mesh"] == mesh),
+    for r in sorted((r for r in recs
+                     if r["mesh"] == mesh and r.get("roofline")),
                     key=lambda r: (r["arch"], r["shape"])):
         rl = r["roofline"]
         note = _note(rl)
@@ -65,7 +104,7 @@ def _note(rl: dict) -> str:
     if b == "memory":
         return "cut HBM traffic: fuse/remat-policy/layout"
     if b == "collective":
-        coll = rl["collectives"]["bytes"]
+        coll = rl.get("collectives", {}).get("bytes", {})
         dom = max(coll, key=coll.get) if coll else "?"
         return f"dominant {dom}: reshard to shrink it"
     if rl["useful_ratio"] < 0.3:
@@ -73,16 +112,86 @@ def _note(rl: dict) -> str:
     return "near-roofline compute"
 
 
-def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_all.jsonl"
-    recs = load(path)
+# ---------------------------------------------------------------------------
+# telemetry sections
+# ---------------------------------------------------------------------------
+
+_METRIC_COLS = ("probe_len_p50", "probe_len_p99", "load_factor",
+                "pct_of_roofline", "spread")
+
+
+def table_metrics_section(bench_path: str) -> str:
+    """Table-walk metrics of a BENCH_*.json: one row per benchmark row
+    that carried stats extras (others are omitted, not an error)."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    rows = ["| figure | row | Mops/s | p50 probe | p99 probe | load | "
+            "% roofline | spread |",
+            "|---|---|---|---|---|---|---|---|"]
+    found = 0
+    for fig, entries in bench.items():
+        for e in entries:
+            if not any(c in e for c in _METRIC_COLS):
+                continue
+            found += 1
+            def g(c, fmt="{:.3g}"):
+                return fmt.format(e[c]) if c in e else "—"
+            mops = (f"{e['ops_per_s'] / 1e6:.2f}"
+                    if "ops_per_s" in e else "—")
+            noisy = " (noisy)" if e.get("noisy") else ""
+            rows.append(
+                f"| {fig} | {e['name']} | {mops} | {g('probe_len_p50')} | "
+                f"{g('probe_len_p99')} | {g('load_factor')} | "
+                f"{g('pct_of_roofline')} | {g('spread')}{noisy} |")
+    if not found:
+        return f"(no table-metric rows in {bench_path})"
+    return "\n".join(rows)
+
+
+def trace_section(trace_path: str) -> str:
+    """Latency percentiles per span name from a Tracer JSONL file."""
+    from repro.obs import trace as _trace
+    events = _trace.load_events(trace_path)
+    by_name: dict[str, list[float]] = defaultdict(list)
+    for e in events:
+        by_name[e["event"]].append(float(e["dur_s"]))
+    import numpy as np
+    rows = ["| span | n | p50 ms | p95 ms | p99 ms | total s |",
+            "|---|---|---|---|---|---|"]
+    for name in sorted(by_name):
+        d = np.asarray(by_name[name])
+        rows.append(
+            f"| {name} | {d.size} | {np.percentile(d, 50) * 1e3:.3f} | "
+            f"{np.percentile(d, 95) * 1e3:.3f} | "
+            f"{np.percentile(d, 99) * 1e3:.3f} | {d.sum():.3f} |")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("jsonl", nargs="?", default="results/dryrun_all.jsonl",
+                    help="dry-run JSONL records")
+    ap.add_argument("--bench", metavar="PATH",
+                    help="BENCH_*.json to render as a table-metrics section")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="obs.trace JSONL to render as a latency section")
+    args = ap.parse_args(argv)
+    import os
+    recs = load(args.jsonl) if os.path.exists(args.jsonl) else []
     print(f"## Dry-run records: {len(recs)}\n")
-    print("### Single-pod roofline (16x16)\n")
-    print(roofline_table(recs, "16x16"))
-    print("\n### Multi-pod roofline (2x16x16)\n")
-    print(roofline_table(recs, "2x16x16"))
-    print("\n### Full dry-run table\n")
-    print(dryrun_table(recs))
+    if recs:
+        for mesh in meshes(recs):
+            print(f"### Roofline ({mesh})\n")
+            print(roofline_table(recs, mesh))
+            print()
+        print("### Full dry-run table\n")
+        print(dryrun_table(recs))
+    if args.bench:
+        print("\n### Table metrics (roofline-normalized)\n")
+        print(table_metrics_section(args.bench))
+    if args.trace:
+        print("\n### Span latencies\n")
+        print(trace_section(args.trace))
 
 
 if __name__ == "__main__":

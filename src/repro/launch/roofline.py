@@ -79,6 +79,34 @@ def analyze(compiled, *, chips: int, model_flops: float,
                      "loops": cen.loops[:12]})
 
 
+def table_walk_bytes(n_ops: float, probe_len_mean: float, *, window: int,
+                     key_words: int = 1, value_words: int = 1,
+                     value_ops: float = 1.0) -> float:
+    """Bytes-per-batch model for a hash-table probe walk.
+
+    Each of ``n_ops`` walking elements reads ``probe_len_mean`` windows of
+    ``window`` lanes x ``key_words`` u32 key planes; value traffic is one
+    ``value_words`` vector per value op (1 read or write per element for
+    insert/retrieve, the join multiplicity r for multi-value gathers —
+    callers pass ``value_ops`` accordingly).  This is the minimum HBM
+    traffic the walk must move, so
+
+        pct_of_roofline(table_walk_bytes(...), seconds)
+
+    reads as "fraction of peak memory bandwidth this op achieved" — the
+    paper's probes-per-second curves normalized to hardware instead of to
+    a rival implementation.
+    """
+    key_bytes = n_ops * probe_len_mean * window * key_words * 4.0
+    value_bytes = n_ops * value_ops * value_words * 4.0
+    return key_bytes + value_bytes
+
+
+def pct_of_roofline(bytes_moved: float, seconds: float) -> float:
+    """Achieved bytes/s as a percentage of HBM bandwidth."""
+    return 100.0 * (bytes_moved / max(seconds, 1e-12)) / HBM_BW
+
+
 def model_flops_for(cfg, cell) -> float:
     """MODEL_FLOPS: 6ND (train), 2ND (forward/prefill), 2N per token (decode),
     with N = active params (MoE-aware)."""

@@ -1,0 +1,26 @@
+"""Observability: in-graph table telemetry, host-side metrics, tracing.
+
+Three layers (ISSUE 6 / ROADMAP "sensor layer"):
+
+- ``obs.metrics`` — the jit-compatible ``TableStats`` pytree accumulated
+  *inside* the compiled graph by the bulk engines when an entry point is
+  called with ``stats=True`` (status histogram, power-of-two probe-length
+  histogram, fixpoint iteration count, live/tombstone slot census, load
+  factor).  ``stats=False`` (the default) is a static python flag: the
+  traced graph is unchanged and compiles to byte-identical HLO — the
+  invariant ``tests/test_obs.py`` census-asserts.
+- ``obs.registry`` — named host-side counters/gauges/histograms (the
+  process-wide ``REGISTRY``), tracer-safe: recording a jax tracer is a
+  silent no-op, so instrumented library code stays jittable.
+- ``obs.trace`` — a span tracer (``perf_counter`` wall times, p50/p95/p99
+  latency histograms per span name) with optional JSONL event emission in
+  the schema ``launch.report`` renders.
+"""
+
+from repro.obs import metrics, registry, trace
+from repro.obs.metrics import TableStats
+from repro.obs.registry import REGISTRY
+from repro.obs.trace import Tracer
+
+__all__ = ["metrics", "registry", "trace", "TableStats", "REGISTRY",
+           "Tracer"]

@@ -27,7 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import single_value as sv
-from repro.core.common import STATUS_INSERTED, register_struct, static_field
+from repro.core.common import (
+    STATUS_FULL,
+    STATUS_INSERTED,
+    register_struct,
+    static_field,
+)
+from repro.obs.registry import REGISTRY
 
 _I = jnp.int32
 _U = jnp.uint32
@@ -89,6 +95,11 @@ def allocate_pages(cache: PagedKVCache, seq_ids: jax.Array,
                               jnp.where(fresh, phys_new, 0), mask=fresh)
     got_new = status == STATUS_INSERTED
     n_new = jnp.sum(got_new, dtype=_I)
+    # registry counters: concrete in eager serving loops, silent no-op
+    # under jit (values are tracers there — see obs.registry._concrete)
+    REGISTRY.counter("kv_cache.pages_allocated").inc(n_new)
+    REGISTRY.counter("kv_cache.alloc_full").inc(
+        jnp.sum(status == STATUS_FULL, dtype=_I))
     vals, found = sv.retrieve(table, keys)
     cache = dataclasses.replace(cache, page_table=table,
                                 free_top=cache.free_top + n_new)
@@ -143,4 +154,6 @@ def free_sequences(cache: PagedKVCache, seq_ids: jax.Array, max_pages: int):
     pg = jnp.tile(pi, seq_ids.shape[0])
     keys = _pt_key(sq, pg)
     table, erased = sv.erase(cache.page_table, keys)
-    return dataclasses.replace(cache, page_table=table), jnp.sum(erased)
+    n_erased = jnp.sum(erased)
+    REGISTRY.counter("kv_cache.pages_evicted").inc(n_erased)
+    return dataclasses.replace(cache, page_table=table), n_erased

@@ -72,3 +72,43 @@ def make_serve_step(model):
         return model.decode_step(params, cache, tokens, pos)
 
     return serve_step
+
+
+def generate_traced(model, params, prompts: jax.Array, max_new: int, *,
+                    temperature: float = 0.0, seed: int = 0, tracer=None):
+    """``generate`` with per-step wall-time spans (p50/p95/p99 latencies).
+
+    The decode loop runs at the python level — one jitted ``serve_step``
+    call per token, each wrapped in ``tracer.span("serve.decode_step")``
+    and blocked to completion so the span measures real device time.
+    ``generate``'s fused ``lax.scan`` graph is untouched; this variant
+    exists for serving-latency observability (docs/OBSERVABILITY.md), not
+    peak throughput.  Returns ``(tokens, tracer)``.
+    """
+    from repro.obs.trace import Tracer
+
+    if tracer is None:
+        tracer = Tracer()
+    b, s_prompt = prompts.shape
+    max_seq = s_prompt + max_new
+    step_fn = jax.jit(make_serve_step(model))
+
+    with tracer.span("serve.prefill", batch=b, prompt_len=s_prompt):
+        # decode-scan warmup works for every family (incl. state-recurrent)
+        cache = model.init_cache(b, max_seq)
+        last_logits = jnp.zeros((b, model.cfg.vocab_size), jnp.float32)
+        for i in range(s_prompt):
+            lg, cache = step_fn(params, cache, prompts[:, i:i + 1], _I(i))
+            last_logits = lg[:, 0]
+        jax.block_until_ready(last_logits)
+
+    toks = []
+    for i in range(max_new):
+        with tracer.span("serve.decode_step", step=i):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+            tok = _sample(last_logits, key, temperature)[:, None]
+            lg, cache = step_fn(params, cache, tok, _I(s_prompt + i))
+            jax.block_until_ready(lg)
+        last_logits = lg[:, 0]
+        toks.append(tok[:, 0])
+    return jnp.stack(toks, axis=1), tracer
