@@ -1,0 +1,194 @@
+"""Fig. 10 (beyond the paper) — deletion churn at fixed live size.
+
+The workload none of the paper's figures touch: a long-running service
+holding a steady live set under sustained insert/erase cycles.  Each
+cycle erases the oldest batch and inserts a fresh one, so the live size
+(and load factor) is constant — but tombstones accumulate, the EMPTY
+frontier erodes, and every probe walk lengthens (tombstones do not stop
+walks; paper §IV-B.5).  This is the degradation WarpSpeed names as the
+WarpCore functionality gap, and the trigger the growth-policy layer
+(``repro.core.migrate``) compacts on.
+
+Trajectory recorded per cycle (BENCH_7): retrieval throughput over the
+live set plus ``cycle`` / ``live_size`` / ``tombstone_density`` /
+``load_factor`` / probe-length percentiles.  When the policy's
+tombstone-density threshold trips, the cycle is re-measured on the
+compacted table and emitted as a second row (``post_compaction=1``,
+``recovered_slots=N``) — degradation and recovery sit side by side in
+the same trajectory.  Probe lengths are the deterministic signal (wall
+time follows but wobbles on shared CPU runners).
+
+Parity gate (the CI smoke assertion): compaction must preserve the live
+key/value set bit-exactly.  Every compaction re-retrieves the full live
+set on old and new tables and RAISES on any mismatch of values or found
+masks; a final sweep additionally asserts every erased key stays absent.
+The ``fig10.churn.parity`` row records the gate passing plus the total
+recovered-slot count.
+
+Set ``REPRO_BENCH_SMOKE=1`` for the small CI config.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import (
+    fmt_extras,
+    row,
+    table_metric_extras,
+    time_stats,
+    timing_extras,
+)
+from repro.core import migrate
+from repro.core import single_value as sv
+from repro.core.common import STATUS_FULL
+from repro.obs import metrics
+
+_U = jnp.uint32
+
+
+class _ChurnCfg:
+    def __init__(self, capacity, window, batch, keep, cycles, tomb_density):
+        self.capacity = capacity      # table min_capacity
+        self.window = window
+        self.batch = batch            # erased + inserted per cycle
+        self.keep = keep              # live batches (live = keep * batch)
+        self.cycles = cycles
+        self.policy = migrate.GrowthPolicy(
+            max_load_factor=0.97,     # live size is fixed; never grow
+            max_tombstone_density=tomb_density)
+
+
+# live load ~0.86: high enough that tombstone buildup visibly lengthens
+# walks, low enough that the table never saturates.  The density threshold
+# sits just under the churn equilibrium (~0.14 at this geometry), so the
+# trajectory shows several degrading cycles before the first compaction.
+FULL = _ChurnCfg(capacity=4096, window=8, batch=512, keep=7, cycles=16,
+                 tomb_density=0.13)
+SMOKE = _ChurnCfg(capacity=1024, window=8, batch=128, keep=5, cycles=8,
+                  tomb_density=0.10)
+
+
+def _cfg() -> _ChurnCfg:
+    return SMOKE if os.environ.get("REPRO_BENCH_SMOKE") else FULL
+
+
+def _batch_keys(cfg, c):
+    return jnp.arange(1 + c * cfg.batch, 1 + (c + 1) * cfg.batch, dtype=_U)
+
+
+def _value_of(keys):
+    return keys ^ _U(0xABCD)
+
+
+def _live_keys(cfg, next_cycle):
+    """The fixed-size live set after ``next_cycle`` churn cycles."""
+    return jnp.concatenate([_batch_keys(cfg, c)
+                            for c in range(next_cycle,
+                                           next_cycle + cfg.keep)])
+
+
+def _assert_live_set(table, live_keys, dead_keys, where):
+    """In-run parity gate: the live set is intact, the dead set absent."""
+    vals, found = sv.retrieve(table, live_keys)
+    if not bool(jnp.all(found)):
+        raise AssertionError(f"fig10 parity [{where}]: live key lost")
+    if not bool(jnp.all(vals == _value_of(live_keys))):
+        raise AssertionError(f"fig10 parity [{where}]: live value corrupted")
+    if dead_keys.shape[0]:
+        _, dfound = sv.retrieve(table, dead_keys)
+        if bool(jnp.any(dfound)):
+            raise AssertionError(f"fig10 parity [{where}]: erased key "
+                                 "resurrected")
+
+
+def run(out=print):
+    cfg = _cfg()
+    live_size = cfg.keep * cfg.batch
+    table = sv.create(cfg.capacity, window=cfg.window)
+    for c in range(cfg.keep):
+        table, status = sv.insert(table, _batch_keys(cfg, c),
+                                  _value_of(_batch_keys(cfg, c)))
+        if bool(jnp.any(status == STATUS_FULL)):
+            raise AssertionError("fig10 prefill reported FULL")
+
+    ret = jax.jit(lambda t, k: sv.retrieve(t, k))
+    rets = jax.jit(lambda t, k: sv.retrieve(t, k, stats=True))
+
+    def measure(t, live, cyc, post, extra=""):
+        ts = time_stats(ret, t, live)
+        _, _, s = rets(t, live)
+        _, tomb, _ = metrics.slot_stats(t.ops, t.store)
+        dens = float(tomb) / t.capacity
+        name = f"fig10.churn.c{cyc:02d}" + (".post" if post else "")
+        out(row(name, ts["seconds"], live_size,
+                extra=fmt_extras(cycle=cyc, live_size=live_size,
+                                 tombstone_density=dens,
+                                 post_compaction=int(post))
+                + (("," + extra) if extra else "")
+                + "," + timing_extras(ts)
+                + "," + table_metric_extras(s, ts["seconds"], live_size,
+                                            window=cfg.window)))
+        return ts["seconds"]
+
+    compactions = 0
+    recovered_total = 0
+    last_post_seconds = None
+    for cyc in range(cfg.cycles):
+        old = _batch_keys(cfg, cyc)
+        new = _batch_keys(cfg, cyc + cfg.keep)
+        table, erased = sv.erase(table, old)
+        if not bool(jnp.all(erased)):
+            raise AssertionError("fig10 churn: erase missed a live key")
+        table, status = sv.insert(table, new, _value_of(new))
+        if bool(jnp.any(status == STATUS_FULL)):
+            raise AssertionError("fig10 churn: insert reported FULL")
+        live = _live_keys(cfg, cyc + 1)
+        measure(table, live, cyc, post=False)
+
+        # policy check after the measurement so the row shows the churned
+        # state; force one compaction at the end so every run (incl. the
+        # CI smoke config) exercises the parity gate
+        candidate = migrate.maybe_migrate(table, cfg.policy)
+        if candidate is table and cyc == cfg.cycles - 1 and compactions == 0:
+            candidate = migrate.compact(table)
+        if candidate is not table:
+            _, tomb_before, _ = metrics.slot_stats(table.ops, table.store)
+            _, tomb_after, _ = metrics.slot_stats(candidate.ops,
+                                                  candidate.store)
+            recovered = int(tomb_before) - int(tomb_after)
+            # bit-exact live-set parity across the migration
+            old_vals, old_found = ret(table, live)
+            new_vals, new_found = ret(candidate, live)
+            if not (bool(jnp.array_equal(old_found, new_found))
+                    and bool(jnp.array_equal(old_vals, new_vals))):
+                raise AssertionError("fig10 parity: compaction changed "
+                                     "the live set")
+            _assert_live_set(candidate, live, old, f"compact@c{cyc}")
+            table = candidate
+            compactions += 1
+            recovered_total += recovered
+            last_post_seconds = measure(
+                table, live, cyc, post=True,
+                extra=fmt_extras(recovered_slots=recovered))
+
+    # final sweep: live set exact, every erased batch absent
+    dead = jnp.concatenate([_batch_keys(cfg, c) for c in range(cfg.cycles)])
+    _assert_live_set(table, _live_keys(cfg, cfg.cycles), dead, "final")
+    if compactions == 0:
+        raise AssertionError("fig10: no compaction ran — parity gate "
+                             "never exercised")
+    out(row("fig10.churn.parity", last_post_seconds, live_size,
+            extra="parity=ok," + fmt_extras(
+                compactions=compactions,
+                recovered_slots=recovered_total,
+                live_size=live_size,
+                tombstone_density=0.0,
+                post_compaction=1)))
+
+
+if __name__ == "__main__":
+    run()

@@ -7,7 +7,7 @@ shards) are the reproduction target — see EXPERIMENTS.md §Paper-claims.
 
 Usage::
 
-    python -m benchmarks.run [fig5|fig6|fig7|fig8|fig9 ...] [--csv PATH] [--json PATH]
+    python -m benchmarks.run [fig5|...|fig9|fig10 ...] [--csv PATH] [--json PATH]
 
 Any number of figures may be named (e.g. ``fig7 fig8``); none means all.
 
@@ -58,13 +58,14 @@ def parse_row(line: str):
 def main(argv=None) -> None:
     from benchmarks import (fig5_single_value, fig6_weak_scaling,
                             fig7_multi_value, fig8_metagenomics,
-                            fig9_relational)
+                            fig9_relational, fig10_churn)
     figures = {
         "fig5": fig5_single_value.run,
         "fig6": fig6_weak_scaling.run,
         "fig7": fig7_multi_value.run,
         "fig8": fig8_metagenomics.run,
         "fig9": fig9_relational.run,
+        "fig10": fig10_churn.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="*", choices=sorted(figures),

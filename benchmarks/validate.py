@@ -11,9 +11,10 @@ the build instead of silently polluting the perf trajectory.
 
 Usage::
 
-    python -m benchmarks.validate BENCH_6.json [--schema PATH]
+    python -m benchmarks.validate BENCH_6.json [BENCH_7.json ...] [--schema PATH]
 
-Exit status 0 iff valid; errors are printed one per line as
+Any number of bench files may be named; each is validated independently.
+Exit status 0 iff all are valid; errors are printed one per line as
 ``<json-path>: <message>``.
 """
 
@@ -81,20 +82,24 @@ def default_schema_path() -> str:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("bench", help="BENCH_*.json to validate")
+    ap.add_argument("bench", nargs="+", help="BENCH_*.json file(s) to validate")
     ap.add_argument("--schema", default=default_schema_path())
     args = ap.parse_args(argv)
-    with open(args.bench) as f:
-        bench = json.load(f)
     with open(args.schema) as f:
         schema = json.load(f)
-    errs = validate(bench, schema)
-    for e in errs:
-        print(e)
-    n_rows = sum(map(len, bench.values())) if isinstance(bench, dict) else 0
-    if not errs:
-        print(f"# {args.bench}: {n_rows} rows valid against {args.schema}")
-    return 1 if errs else 0
+    failed = False
+    for bench_path in args.bench:
+        with open(bench_path) as f:
+            bench = json.load(f)
+        errs = validate(bench, schema)
+        for e in errs:
+            print(f"{bench_path}: {e}")
+        n_rows = sum(map(len, bench.values())) if isinstance(bench, dict) else 0
+        if errs:
+            failed = True
+        else:
+            print(f"# {bench_path}: {n_rows} rows valid against {args.schema}")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -19,6 +19,43 @@ from repro.obs.registry import REGISTRY
 from repro.serving import kv_cache as pkv
 
 
+def sequence_flood(num_pages: int = 512, waves: int = 8, batch: int = 64,
+                   pages_per_seq: int = 1, verbose: bool = False) -> dict:
+    """Flood the cache with new sequences until every physical page is out.
+
+    The robustness scenario: the page table starts deliberately undersized
+    (slack 0.125 — it could hold ~1/8 of the pages) but carries an
+    auto-growth policy (``repro.core.migrate.GrowthPolicy``), so table
+    occupancy NEVER fails an allocation — the table grows online and the
+    flood runs until genuine physical-page exhaustion.  Returns the tally
+    the serving test asserts on: ``failures`` must be 0 and the table must
+    have grown.
+    """
+    from repro.core.migrate import GrowthPolicy
+    cache = pkv.create(1, num_pages, 8, 1, 8, table_slack=0.125,
+                       policy=GrowthPolicy(max_load_factor=0.8))
+    cap0 = cache.page_table.capacity
+    failures = 0
+    allocated = 0
+    per_wave = (batch // pages_per_seq) * pages_per_seq
+    for wave in range(waves):
+        seq = jnp.arange(per_wave // pages_per_seq, dtype=jnp.int32) \
+            + jnp.int32(wave * 10_000)
+        sq = jnp.repeat(seq, pages_per_seq)
+        pg = jnp.tile(jnp.arange(pages_per_seq, dtype=jnp.int32),
+                      seq.shape[0])
+        cache, _, ok = pkv.allocate_pages(cache, sq, pg)
+        failures += int(jnp.sum(~ok))
+        allocated += int(jnp.sum(ok))
+        if verbose:
+            print(f"  wave {wave}: {int(jnp.sum(ok))}/{sq.shape[0]} pages, "
+                  f"table capacity {cache.page_table.capacity}")
+    return {"failures": failures, "allocated": allocated,
+            "capacity_before": cap0,
+            "capacity_after": cache.page_table.capacity,
+            "free_top": int(cache.free_top), "num_pages": num_pages}
+
+
 def main():
     cfg = configs.get_smoke_config("smollm-360m")
     model = zoo.build(cfg)
@@ -69,6 +106,16 @@ def main():
     print(f"page table: load_factor={float(stats.load_factor):.3f} "
           f"live={int(stats.live_slots)} tombstones={int(stats.tombstone_slots)} "
           f"mean_probe_len={stats.mean_probe_len():.2f}")
+    # robustness: a sequence flood against an undersized page table —
+    # the auto-growth policy keeps allocations succeeding until the
+    # physical pages themselves run out
+    print("--- sequence flood (auto-growth) ---")
+    tally = sequence_flood(verbose=True)
+    print(f"flood: {tally['allocated']}/{tally['num_pages']} pages handed "
+          f"out, {tally['failures']} failures, page table "
+          f"{tally['capacity_before']} -> {tally['capacity_after']} slots")
+    assert tally["failures"] == 0, "allocation failed despite growth policy"
+
     print("--- metrics registry ---")
     print(REGISTRY.render())
 

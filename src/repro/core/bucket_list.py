@@ -480,6 +480,19 @@ def _insert_bulk(table: BucketListHashTable, keys, values, mask,
                                alloc_top=new_top), status
 
 
+def insert_or_grow(table: BucketListHashTable, keys, values, mask=None, *,
+                   policy=None, max_attempts: int = 4):
+    """``insert`` under the auto-growth policy: migrates (key store and/or
+    value pool) instead of ever returning ``STATUS_FULL`` /
+    ``STATUS_POOL_FULL`` while capacity headroom remains.  Host-side
+    wrapper — see ``repro.core.migrate``."""
+    from repro.core import migrate
+    return migrate.insert_or_grow(
+        table, keys, values, mask,
+        policy=migrate.DEFAULT_POLICY if policy is None else policy,
+        max_attempts=max_attempts)
+
+
 # ---------------------------------------------------------------------------
 # retrieval — O(1) counts from handles; fused chain walk over the pool arena
 # ---------------------------------------------------------------------------

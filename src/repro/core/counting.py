@@ -50,6 +50,21 @@ def insert(table: CountingHashTable, keys, mask=None, stats: bool = False):
                             combine=("add",), stats=stats)
 
 
+def insert_or_grow(table: CountingHashTable, keys, mask=None, *,
+                   policy=None, max_attempts: int = 4):
+    """``insert`` under the auto-growth policy (see ``repro.core.migrate``).
+
+    The RMW fold rides through ``insert_or_grow``'s adapter hook: counter
+    state migrates with the values (a grow/compact sweep carries each
+    key's running count into the fresh store untouched)."""
+    from repro.core import migrate
+    return migrate.insert_or_grow(
+        table, keys, None, mask,
+        policy=migrate.DEFAULT_POLICY if policy is None else policy,
+        insert_fn=lambda t, k, v, m: insert(t, k, m),
+        max_attempts=max_attempts)
+
+
 def counts(table: CountingHashTable, keys, stats: bool = False):
     """Occurrence count per key (0 when absent).
 

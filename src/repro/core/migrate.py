@@ -1,0 +1,417 @@
+"""Online table growth + tombstone compaction (the WarpSpeed gap).
+
+The paper's tables — and every table in this library until now — are
+fixed-capacity at construction: a long-running consumer degrades as
+tombstones accumulate (probe walks no longer stop early) and hard-fails
+with ``STATUS_FULL`` once traffic outgrows the initial sizing.  WarpSpeed
+(PAPERS.md) names exactly this functionality gap in WarpCore-class
+tables.  This module closes it with a **bulk migration engine** plus an
+**auto-growth policy layer**:
+
+- ``grow(table, new_capacity)`` / ``compact(table)`` sweep every live
+  slot out of the old store (tombstones dropped) and re-insert them into
+  a fresh store through the existing bulk-build engine — the sort/dedup
+  front-end in ``core.bulk`` is already the rehash inner loop, so
+  migration is one arena sweep plus one bulk insert, bit-exact on the
+  live key/value set.  All three table kinds are covered: single-value
+  and multi-value via the open-addressing arena, bucket-list via the
+  chain-as-arena walk (``bucket_list.chain_arena``), which also repacks
+  the value pool dense (``compact`` reclaims tail-bucket slack and
+  abandoned chains).
+- ``GrowthPolicy`` captures the when: load-factor threshold,
+  tombstone-density threshold, growth factor, max-capacity cap.
+- ``insert_or_grow(...)`` is the host-side wrapper consumers call on
+  their insert path: it migrates *before* inserting when the policy says
+  the batch won't fit cleanly, and retries any ``STATUS_FULL`` /
+  ``STATUS_POOL_FULL`` residue after an emergency grow, so insertion
+  failure becomes a recoverable event instead of silent data loss.
+
+Policy decisions are recorded to ``obs.registry.REGISTRY``
+(``table.grows``, ``table.compactions``, ``table.migrated_slots``) — the
+same host-side registry the serving loop already reads.
+
+**Host-side by design.**  Growth changes array shapes, which jit cannot
+do mid-graph: the policy reads concrete occupancy numbers and the retry
+loop is a Python loop.  ``insert_or_grow`` therefore runs eagerly; when
+called under ``jit`` (its inputs are tracers) it degrades gracefully to
+the plain insert — the policy is a static *flag* on the consumer, not a
+traced branch.  See docs/GROWTH.md for the cost model (a migration is
+O(capacity) — amortized O(1) per insert under geometric growth) and for
+when compaction beats growth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bucket_list as bl
+from repro.core import multi_value as mv
+from repro.core import single_value as sv
+from repro.core.common import (
+    EMPTY_KEY,
+    STATUS_FULL,
+    STATUS_POOL_FULL,
+    TOMBSTONE_KEY,
+)
+from repro.obs.registry import REGISTRY
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GrowthPolicy:
+    """When to migrate, and by how much.
+
+    Frozen (hashable), so a policy can ride as a *static* pytree field on
+    a consumer (e.g. ``serving.PagedKVCache.policy``) — two caches with
+    different policies compile separately, and ``policy=None`` consumers
+    keep the exact pre-policy graph.
+
+    - ``max_load_factor``: grow when (live + incoming) / capacity would
+      exceed this.  COPS probe walks degenerate near-full (fig9), so the
+      default leaves headroom well before the hard ceiling.
+    - ``max_tombstone_density``: compact when tombstones / capacity
+      exceeds this.  Tombstones don't stop probe walks, so density is
+      pure probe-length tax — compaction reclaims the slots without
+      paying for a larger store.
+    - ``growth_factor``: capacity multiplier per grow (geometric growth
+      keeps total migration work amortized O(1) per insert).
+    - ``max_capacity``: hard cap; at the cap the policy compacts if it
+      can and otherwise lets ``STATUS_FULL`` surface to the caller.
+    """
+    max_load_factor: float = 0.85
+    max_tombstone_density: float = 0.25
+    growth_factor: float = 2.0
+    max_capacity: int = 1 << 24
+
+
+DEFAULT_POLICY = GrowthPolicy()
+
+
+def _host_int(x):
+    """int(x) for concrete (host-readable) values, None under tracing."""
+    if isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return int(x)
+    except (TypeError, ValueError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# arena sweeps — (keys, values, live) of every slot, tombstones dropped
+# ---------------------------------------------------------------------------
+
+def _sweep_oa(table):
+    """Live-slot sweep of an open-addressing store.
+
+    Returns (keys (c, kw), values (c, vw), live (c,)) over the slot
+    arena; masked-out slots are zeroed so the batch is sentinel-free.
+    """
+    ops = table.ops
+    kp = ops.key_planes(table.store).reshape(table.key_words, -1).T
+    vp = ops.value_planes(table.store).reshape(table.value_words, -1).T
+    live = (kp[:, 0] != EMPTY_KEY) & (kp[:, 0] != TOMBSTONE_KEY)
+    return (jnp.where(live[:, None], kp, 0),
+            jnp.where(live[:, None], vp, 0), live)
+
+
+def _replace_max_probes(table):
+    """max_probes for the migrated table: a full-table default follows the
+    new geometry; an explicit tighter bound is preserved."""
+    return None if table.max_probes >= table.num_rows else table.max_probes
+
+
+def _fresh_like_single(table, new_capacity):
+    return sv.create(new_capacity, key_words=table.key_words,
+                     value_words=table.value_words, window=table.window,
+                     scheme=table.scheme, layout=table.layout,
+                     seed=table.seed, max_probes=_replace_max_probes(table),
+                     backend=table.backend)
+
+
+def _fresh_like_multi(table, new_capacity):
+    return mv.create(new_capacity, key_words=table.key_words,
+                     value_words=table.value_words, window=table.window,
+                     scheme=table.scheme, layout=table.layout,
+                     seed=table.seed, max_probes=_replace_max_probes(table),
+                     backend=table.backend)
+
+
+def _check_migration(old_count, new_count, what: str) -> None:
+    """Bit-exact live-set guard: the fresh table must hold every live
+    entry.  Host-side only (skipped under tracing, where the in-run
+    parity gates in tests/benchmarks cover it)."""
+    oc, nc = _host_int(old_count), _host_int(new_count)
+    if oc is not None and nc is not None and oc != nc:
+        raise ValueError(
+            f"{what}: migrated {nc} of {oc} live entries — target capacity "
+            f"too small for the live set (grow further or raise max_probes)")
+
+
+def _migrate_single(table, new_capacity):
+    keys, vals, live = _sweep_oa(table)
+    fresh = _fresh_like_single(table, new_capacity)
+    fresh, _ = sv.insert(fresh, keys, vals, mask=live)
+    _check_migration(table.count, fresh.count, "grow/compact(single_value)")
+    return fresh, jnp.sum(live, dtype=_I)
+
+
+def _migrate_multi(table, new_capacity):
+    keys, vals, live = _sweep_oa(table)
+    fresh = _fresh_like_multi(table, new_capacity)
+    fresh, _ = mv.insert(fresh, keys, vals, mask=live)
+    _check_migration(table.count, fresh.count, "grow/compact(multi_value)")
+    return fresh, jnp.sum(live, dtype=_I)
+
+
+def _migrate_bucket(table, new_key_capacity, new_pool_capacity):
+    """Bucket-list migration: chain walk -> ordered (key, value) stream.
+
+    The key store's slot arena yields every live key and its handle; one
+    ``chain_arena`` walk stamps each pool slot with (owning key-slot,
+    head-first value rank).  A single scatter linearizes the pool into a
+    per-key-contiguous stream in original insertion order, and the bulk
+    insert rebuilds the table — re-bucketing every chain from the growth
+    schedule's first size, so the fresh pool is dense (tail slack and
+    links of the old layout are reclaimed).
+    """
+    ks = table.key_store
+    kp = ks.ops.key_planes(ks.store).reshape(ks.key_words, -1).T
+    handles = ks.ops.value_planes(ks.store).reshape(2, -1).T      # (c, 2)
+    live = (kp[:, 0] != EMPTY_KEY) & (kp[:, 0] != TOMBSTONE_KEY)
+    ptr, cnt, bidx, _ = bl.unpack_handle(handles)
+    counts = jnp.where(live, cnt, 0)
+    offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
+    total = offsets[-1]
+    kcap = kp.shape[0]
+    pool_cap = table.pool_capacity
+
+    qa, ra = bl.chain_arena(table, live, ptr, counts, bidx)
+    # destination of each pool slot in the ordered stream (OOR -> dropped)
+    owner = jnp.clip(qa, 0, kcap - 1)
+    pos = jnp.where(qa < kcap, offsets[owner] + ra, pool_cap)
+    stream_vals = jnp.zeros((pool_cap,), _U).at[pos].set(
+        table.pool, mode="drop")
+    stream_keys = jnp.zeros((pool_cap, ks.key_words), _U).at[pos].set(
+        jnp.where((qa < kcap)[:, None], kp[owner], 0), mode="drop")
+    stream_mask = jnp.arange(pool_cap) < total
+
+    fresh = bl.create(new_key_capacity, new_pool_capacity, s0=table.s0,
+                      growth=table.growth, window=ks.window,
+                      scheme=ks.scheme, seed=ks.seed,
+                      key_words=ks.key_words, backend=ks.backend)
+    fresh, _ = bl.insert(fresh, stream_keys, stream_vals, mask=stream_mask)
+    _check_migration(ks.count, fresh.key_store.count,
+                     "grow/compact(bucket_list) keys")
+    _check_migration(total, jnp.sum(fresh._counts_all()),
+                     "grow/compact(bucket_list) values")
+    return fresh, total
+
+
+# ---------------------------------------------------------------------------
+# public migration API
+# ---------------------------------------------------------------------------
+
+def _dispatch_migrate(table, new_capacity, new_pool_capacity=None):
+    if isinstance(table, bl.BucketListHashTable):
+        if new_pool_capacity is None:
+            # scale the pool with the key store (same growth ratio)
+            ratio = max(1.0, new_capacity / max(table.key_capacity, 1))
+            new_pool_capacity = int(math.ceil(table.pool_capacity * ratio))
+        return _migrate_bucket(table, new_capacity, new_pool_capacity)
+    if isinstance(table, mv.MultiValueHashTable):
+        return _migrate_multi(table, new_capacity)
+    return _migrate_single(table, new_capacity)
+
+
+def grow(table, new_capacity: int, *, new_pool_capacity: int | None = None):
+    """Migrate every live entry into a fresh store of >= ``new_capacity``.
+
+    Tombstones are dropped in transit; the live key/value set (and, for
+    multi-value / bucket-list, each key's value multiset in insertion
+    order) is preserved bit-exactly.  For bucket-list tables
+    ``new_capacity`` sizes the key store and ``new_pool_capacity`` the
+    value pool (default: scaled by the same ratio).  Works at any target
+    >= the live set — growth and shrink are the same sweep.
+    """
+    fresh, migrated = _dispatch_migrate(table, new_capacity,
+                                        new_pool_capacity)
+    REGISTRY.counter("table.grows").inc(1)
+    REGISTRY.counter("table.migrated_slots").inc(migrated)
+    return fresh
+
+
+def compact(table):
+    """Rebuild the table at its current capacity, dropping tombstones.
+
+    Same-size migration: ``table_geometry`` is idempotent on an existing
+    prime row count, so the fresh store has identical geometry — only
+    the tombstones (and, for bucket-list, pool fragmentation) disappear.
+    Restores early-exit probe walks after deletion churn without paying
+    for a larger store.
+    """
+    if isinstance(table, bl.BucketListHashTable):
+        fresh, migrated = _migrate_bucket(table, table.key_capacity,
+                                          table.pool_capacity)
+    else:
+        fresh, migrated = _dispatch_migrate(table, table.capacity)
+    REGISTRY.counter("table.compactions").inc(1)
+    REGISTRY.counter("table.migrated_slots").inc(migrated)
+    return fresh
+
+
+# ---------------------------------------------------------------------------
+# occupancy + policy decisions (host-side)
+# ---------------------------------------------------------------------------
+
+def occupancy(table):
+    """Host-side occupancy census: (live, tombstones, capacity).
+
+    ``None`` live/tombstones under tracing (policy callers skip).  For
+    bucket-list tables the numbers describe the key store; pool usage is
+    ``alloc_top`` (checked separately by the policy).
+    """
+    if isinstance(table, bl.BucketListHashTable):
+        store_table = table.key_store
+    else:
+        store_table = table
+    from repro.obs import metrics
+    live, tomb, _ = metrics.slot_stats(store_table.ops, store_table.store)
+    return _host_int(live), _host_int(tomb), store_table.capacity
+
+
+def _grown_capacity(cap: int, need: int, policy: GrowthPolicy) -> int:
+    """Smallest geometric step of ``cap`` that fits ``need`` under the
+    policy's load-factor threshold, clamped to ``max_capacity``."""
+    new_cap = cap
+    while (new_cap < policy.max_capacity
+           and need > policy.max_load_factor * new_cap):
+        new_cap = min(int(math.ceil(new_cap * policy.growth_factor)),
+                      policy.max_capacity)
+    return new_cap
+
+
+def maybe_migrate(table, policy: GrowthPolicy, incoming: int = 0):
+    """Apply the policy ahead of an ``incoming``-element batch.
+
+    Grows when the batch could push live occupancy past the load-factor
+    threshold (at the capacity cap: compacts instead if tombstones are
+    the blocker); compacts when tombstone density alone crosses its
+    threshold.  No-op under tracing or when neither trigger fires.
+    Returns the (possibly migrated) table.
+    """
+    live, tomb, cap = occupancy(table)
+    if live is None or tomb is None:
+        return table                      # traced: policy is host-side only
+    need = live + incoming
+    if need > policy.max_load_factor * cap:
+        new_cap = _grown_capacity(cap, need, policy)
+        if new_cap > cap:
+            return grow(table, new_cap)
+        if tomb > 0:                      # at the cap: reclaim what we can
+            return compact(table)
+        return table
+    if (tomb > policy.max_tombstone_density * cap
+            or need + tomb > policy.max_load_factor * cap):
+        return compact(table)
+    if isinstance(table, bl.BucketListHashTable):
+        top = _host_int(table.alloc_top)
+        if (top is not None
+                and top + incoming > policy.max_load_factor
+                * table.pool_capacity):
+            new_pool = _grown_capacity(table.pool_capacity, top + incoming,
+                                       policy)
+            if new_pool > table.pool_capacity:
+                return grow(table, table.key_capacity,
+                            new_pool_capacity=new_pool)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# insert_or_grow — the consumer-facing wrapper
+# ---------------------------------------------------------------------------
+
+def _default_insert(table, keys, values, mask):
+    if isinstance(table, bl.BucketListHashTable):
+        return bl.insert(table, keys, values, mask)
+    if isinstance(table, mv.MultiValueHashTable):
+        return mv.insert(table, keys, values, mask)
+    return sv.insert(table, keys, values, mask)
+
+
+def insert_or_grow(table, keys, values=None, mask=None, *,
+                   policy: GrowthPolicy = DEFAULT_POLICY,
+                   insert_fn=None, max_attempts: int = 4):
+    """Insert with the auto-growth policy: never hard-fail while capacity
+    headroom remains.  Returns ``(table, status)`` like ``insert``.
+
+    Host-side (eager) by design — see the module docstring.  The flow:
+
+    1. ``maybe_migrate`` pre-checks the policy (grow for load, compact
+       for tombstone churn) so the common case inserts into a table with
+       headroom and no element ever reports FULL;
+    2. the batch inserts through ``insert_fn`` (default: the table
+       kind's own ``insert``; pass an adapter for RMW tables — see
+       ``counting.insert_or_grow``);
+    3. any ``STATUS_FULL`` / ``STATUS_POOL_FULL`` residue triggers an
+       emergency grow (pool grow for POOL_FULL) and the *failed subset*
+       retries under its own mask, statuses merged — at most
+       ``max_attempts`` rounds, geometric capacity each round.
+
+    At ``policy.max_capacity`` with nothing left to compact, FULL
+    statuses surface to the caller unchanged (the policy bounds memory;
+    it does not hide genuine exhaustion).
+    """
+    if insert_fn is None:
+        insert_fn = _default_insert
+    n = jnp.asarray(keys[0] if isinstance(keys, tuple) else keys).shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    table = maybe_migrate(table, policy, incoming=n)
+    table, status = insert_fn(table, keys, values, mask)
+
+    for _ in range(max_attempts):
+        failed = (status == STATUS_FULL) | (status == STATUS_POOL_FULL)
+        n_failed = _host_int(jnp.sum(failed, dtype=_I))
+        if n_failed is None or n_failed == 0:
+            break
+        pool_full = _host_int(
+            jnp.sum(status == STATUS_POOL_FULL, dtype=_I)) or 0
+        live, tomb, cap = occupancy(table)
+        if live is None:
+            break                          # traced: no host retry possible
+        if pool_full and isinstance(table, bl.BucketListHashTable):
+            new_pool = _grown_capacity(
+                table.pool_capacity,
+                int(math.ceil(table.pool_capacity * policy.growth_factor)),
+                policy)
+            if new_pool <= table.pool_capacity:
+                break
+            table = grow(table, table.key_capacity,
+                         new_pool_capacity=new_pool)
+        elif tomb and live + n_failed <= policy.max_load_factor * cap:
+            table = compact(table)         # tombstones were the blocker
+        else:
+            new_cap = _grown_capacity(cap, live + n_failed, policy)
+            if new_cap <= cap:
+                # occupancy says "fits" yet FULL happened: probe-sequence
+                # exhaustion — take one geometric step for fresh geometry
+                new_cap = min(int(math.ceil(cap * policy.growth_factor)),
+                              policy.max_capacity)
+            if new_cap <= cap:
+                break                      # at max_capacity: surface FULL
+            table = grow(table, new_cap)
+        retry_mask = mask & failed
+        table, status2 = insert_fn(table, keys, values, retry_mask)
+        status = jnp.where(retry_mask, status2, status)
+    return table, status

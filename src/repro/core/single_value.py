@@ -467,6 +467,18 @@ def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
     return dataclasses.replace(table, store=store, count=count), status
 
 
+def insert_or_grow(table: SingleValueHashTable, keys, values, mask=None, *,
+                   policy=None, max_attempts: int = 4):
+    """``insert`` under the auto-growth policy: migrates (grow/compact)
+    instead of ever returning ``STATUS_FULL`` while capacity headroom
+    remains.  Host-side wrapper — see ``repro.core.migrate``."""
+    from repro.core import migrate
+    return migrate.insert_or_grow(
+        table, keys, values, mask,
+        policy=migrate.DEFAULT_POLICY if policy is None else policy,
+        max_attempts=max_attempts)
+
+
 # ---------------------------------------------------------------------------
 # higher-order ops (paper §IV-B.4: for_each / for_all)
 # ---------------------------------------------------------------------------

@@ -105,17 +105,42 @@ def sequence_fingerprints(tokens: jax.Array, seed: int = 0x1234) -> jax.Array:
     return jnp.minimum(acc, jnp.uint32(0xFFFFFFFD))
 
 
-def dedup_filter(table, tokens: jax.Array):
+def dedup_filter(table, tokens: jax.Array, *, policy=None):
     """Drop sequences whose fingerprint was already seen.
 
     Returns (table, keep_mask).  Uses the CountingHashTable insert status:
     STATUS_INSERTED <=> first occurrence (paper C2 as a pipeline feature).
+
+    ``policy`` (a ``repro.core.migrate.GrowthPolicy``) puts the filter's
+    table under the auto-growth layer: a stream that outgrows the initial
+    sizing grows the table instead of reporting FULL (dropped sequences),
+    and ``dedup_forget`` churn compacts away tombstone buildup once the
+    density threshold trips.  Host-side only (see ``repro.core.migrate``);
+    the default ``policy=None`` keeps the fixed-capacity jittable path.
     """
     from repro.core import counting
     from repro.core.common import STATUS_INSERTED
     fps = sequence_fingerprints(tokens)
-    table, status = counting.insert(table, fps)
+    if policy is not None:
+        table, status = counting.insert_or_grow(table, fps, policy=policy)
+    else:
+        table, status = counting.insert(table, fps)
     return table, status == STATUS_INSERTED
+
+
+def dedup_forget(table, tokens: jax.Array):
+    """Forget sequences: erase their fingerprints from the dedup table.
+
+    Sliding-window dedup — a retention pass drops expired batches so
+    their sequences may appear again.  Erasure tombstones the slots
+    (paper §IV-B.5); under sustained churn tombstones accumulate and tax
+    every probe walk, which is exactly the trigger
+    ``dedup_filter(policy=...)`` compacts on.  Returns
+    (table, forgotten_mask).
+    """
+    from repro.core import single_value as sv
+    fps = sequence_fingerprints(tokens)
+    return sv.erase(table, fps)
 
 
 # ---------------------------------------------------------------------------

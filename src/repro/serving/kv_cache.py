@@ -51,6 +51,10 @@ class PagedKVCache:
     free_list: jax.Array              # (num_pages,) physical ids
     page_size: int = static_field()
     num_pages: int = static_field()
+    # auto-growth policy for the page table (repro.core.migrate.GrowthPolicy,
+    # frozen/hashable -> static).  None keeps the fixed-capacity behavior:
+    # a sequence flood eventually reports per-key allocation failures.
+    policy: object = static_field(default=None)
 
     @property
     def num_layers(self) -> int:
@@ -58,7 +62,8 @@ class PagedKVCache:
 
 
 def create(num_layers: int, num_pages: int, page_size: int, num_kv_heads: int,
-           head_dim: int, *, table_slack: float = 1.5) -> PagedKVCache:
+           head_dim: int, *, table_slack: float = 1.5,
+           policy=None) -> PagedKVCache:
     table = sv.create(int(num_pages * table_slack) + 64, window=32)
     shape = (num_layers, num_pages, page_size, num_kv_heads, head_dim)
     return PagedKVCache(
@@ -67,7 +72,7 @@ def create(num_layers: int, num_pages: int, page_size: int, num_kv_heads: int,
         page_table=table,
         free_top=jnp.zeros((), _I),
         free_list=jnp.arange(num_pages, dtype=_U),
-        page_size=page_size, num_pages=num_pages)
+        page_size=page_size, num_pages=num_pages, policy=policy)
 
 
 def _pt_key(seq_ids: jax.Array, page_idx: jax.Array) -> jax.Array:
@@ -77,33 +82,62 @@ def _pt_key(seq_ids: jax.Array, page_idx: jax.Array) -> jax.Array:
 
 def allocate_pages(cache: PagedKVCache, seq_ids: jax.Array,
                    page_idx: jax.Array, mask=None):
-    """Map (seq, page_idx) -> fresh physical pages.  Returns (cache, phys).
+    """Map (seq, page_idx) -> fresh physical pages.  Returns
+    ``(cache, phys, ok)`` — ``ok[i]`` False means key i got NO page
+    (free list exhausted, or the page table was full with no growth
+    policy); ``phys`` is 0 there and must not be written to.
 
-    Already-mapped pairs return their existing page (idempotent; the insert
-    status distinguishes INSERTED from UPDATED)."""
+    Already-mapped pairs return their existing page (idempotent).
+    Duplicate (seq, page) keys inside one batch resolve to the SAME
+    physical page: only the first occurrence of each fresh key draws
+    from the free list.  When the free list runs out, the trailing fresh
+    keys are reported failed (``kv_cache.alloc_full``) instead of being
+    silently aliased onto the last physical page.  With
+    ``cache.policy`` set, the page *table* auto-grows through
+    ``migrate.insert_or_grow`` so table occupancy never causes a
+    failure — only genuine physical-page exhaustion can.
+    """
+    from repro.core import bulk_retrieve
     n = seq_ids.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
     keys = _pt_key(seq_ids, page_idx)
-    # tentatively hand out the next free pages to genuinely-new keys
     present = sv.contains(cache.page_table, keys)
     fresh = mask & ~present
-    order = jnp.cumsum(fresh.astype(_I)) - 1
+    # one free-list draw per DISTINCT fresh key (first occurrence is the
+    # representative; duplicates map to its page via the final retrieve)
+    is_rep, _ = bulk_retrieve.group_queries(keys[:, None], fresh)
+    rep = fresh & is_rep
+    order = jnp.cumsum(rep.astype(_I)) - 1          # free-list rank per rep
+    avail = _I(cache.num_pages) - cache.free_top
+    has_page = rep & (order < avail)                # free list can cover it
     phys_new = cache.free_list[
         jnp.clip(cache.free_top + order, 0, cache.num_pages - 1)]
-    table, status = sv.insert(cache.page_table, keys,
-                              jnp.where(fresh, phys_new, 0), mask=fresh)
+    table = cache.page_table
+    new_vals = jnp.where(has_page, phys_new, 0)
+    if cache.policy is not None:
+        from repro.core import migrate
+        table, status = migrate.insert_or_grow(table, keys, new_vals,
+                                               mask=has_page,
+                                               policy=cache.policy)
+    else:
+        table, status = sv.insert(table, keys, new_vals, mask=has_page)
     got_new = status == STATUS_INSERTED
     n_new = jnp.sum(got_new, dtype=_I)
+    # advance past the highest rank actually inserted (== n_new unless a
+    # FULL without policy skipped a mid-batch rank; those pages leak and
+    # are accounted by alloc_full rather than handed out twice)
+    top_adv = jnp.max(jnp.where(got_new, order + 1, 0), initial=0)
+    vals, found = sv.retrieve(table, keys)
+    ok = mask & found
     # registry counters: concrete in eager serving loops, silent no-op
     # under jit (values are tracers there — see obs.registry._concrete)
     REGISTRY.counter("kv_cache.pages_allocated").inc(n_new)
     REGISTRY.counter("kv_cache.alloc_full").inc(
-        jnp.sum(status == STATUS_FULL, dtype=_I))
-    vals, found = sv.retrieve(table, keys)
+        jnp.sum(mask & ~found, dtype=_I))
     cache = dataclasses.replace(cache, page_table=table,
-                                free_top=cache.free_top + n_new)
-    return cache, jnp.where(found, vals, 0)
+                                free_top=cache.free_top + top_adv)
+    return cache, jnp.where(ok, vals, 0), ok
 
 
 def lookup_pages(cache: PagedKVCache, seq_ids: jax.Array,
@@ -121,9 +155,13 @@ def append_token(cache: PagedKVCache, seq_ids: jax.Array, pos: jax.Array,
     on first touch."""
     page_idx = pos // cache.page_size
     offset = pos % cache.page_size
-    cache, phys = allocate_pages(cache, seq_ids, page_idx)
-    pk = cache.pages_k.at[:, phys, offset].set(k.astype(jnp.bfloat16))
-    pv = cache.pages_v.at[:, phys, offset].set(v.astype(jnp.bfloat16))
+    cache, phys, ok = allocate_pages(cache, seq_ids, page_idx)
+    # failed allocations must not corrupt page 0: OOR drop their writes
+    wphys = jnp.where(ok, phys.astype(_I), _I(cache.num_pages))
+    pk = cache.pages_k.at[:, wphys, offset].set(k.astype(jnp.bfloat16),
+                                                mode="drop")
+    pv = cache.pages_v.at[:, wphys, offset].set(v.astype(jnp.bfloat16),
+                                                mode="drop")
     return dataclasses.replace(cache, pages_k=pk, pages_v=pv)
 
 

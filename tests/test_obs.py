@@ -307,7 +307,7 @@ class TestRegistry:
         c = pkv.create(num_layers=1, num_pages=16, page_size=4,
                        num_kv_heads=1, head_dim=4)
         seq = jnp.asarray([1, 2], jnp.int32)
-        c, _ = pkv.allocate_pages(c, seq, jnp.zeros((2,), jnp.int32))
+        c, _, _ = pkv.allocate_pages(c, seq, jnp.zeros((2,), jnp.int32))
         c, _ = pkv.free_sequences(c, seq[:1], max_pages=2)
         assert REGISTRY.counter("kv_cache.pages_allocated").value == alloc0 + 2
         assert REGISTRY.counter("kv_cache.pages_evicted").value == evict0 + 1

@@ -32,7 +32,8 @@ class TestPagedKVCache:
                        num_kv_heads=1, head_dim=4)
         seq = jnp.asarray([3, 3, 4], jnp.int32)
         page = jnp.asarray([0, 0, 0], jnp.int32)
-        c, phys = pkv.allocate_pages(c, seq, page)
+        c, phys, ok = pkv.allocate_pages(c, seq, page)
+        assert bool(jnp.all(ok))
         assert int(phys[0]) == int(phys[1])    # same (seq, page) -> same page
         assert int(phys[0]) != int(phys[2])
         assert int(c.free_top) == 2
@@ -41,7 +42,7 @@ class TestPagedKVCache:
         c = pkv.create(num_layers=1, num_pages=16, page_size=4,
                        num_kv_heads=1, head_dim=4)
         seq = jnp.asarray([1, 2], jnp.int32)
-        c, _ = pkv.allocate_pages(c, seq, jnp.zeros((2,), jnp.int32))
+        c, _, _ = pkv.allocate_pages(c, seq, jnp.zeros((2,), jnp.int32))
         c, freed = pkv.free_sequences(c, seq[:1], max_pages=2)
         assert int(freed) == 1
         _, found = pkv.lookup_pages(c, seq, jnp.zeros((2,), jnp.int32))
@@ -52,6 +53,24 @@ class TestPagedKVCache:
         c = pkv.create(num_layers=1, num_pages=8, page_size=2,
                        num_kv_heads=1, head_dim=2)
         assert isinstance(c.page_table, SingleValueHashTable)
+
+    def test_sequence_flood_zero_full_under_growth(self):
+        """The example's flood scenario: an undersized page table with an
+        auto-growth policy absorbs a sequence flood with ZERO allocation
+        failures — the table grows online until the physical pages (not
+        the table) are the limit."""
+        import importlib.util
+        import pathlib
+        path = (pathlib.Path(__file__).parent.parent / "examples"
+                / "paged_serving.py")
+        spec = importlib.util.spec_from_file_location("paged_serving", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        tally = mod.sequence_flood(num_pages=256, waves=8, batch=32)
+        assert tally["failures"] == 0
+        assert tally["allocated"] == 256           # every physical page
+        assert tally["free_top"] == 256
+        assert tally["capacity_after"] > tally["capacity_before"]
 
 
 class TestGeneration:
