@@ -79,6 +79,46 @@ def run(out=print):
                                             window=btable.window) + ","
                       + timing_extras(ts)))
 
+    # --- bucketed build table at high load (two-choice storage lane) --------
+    # The build table on the bucketed lane keeps probe walks at <= 2 buckets
+    # regardless of rho, so inner-join throughput should hold flat to 0.95
+    # where the cops walk above degrades.  Each row gates jax-vs-scan join
+    # output parity in-run (build_idx/probe_idx/valid/matched/total) and
+    # records the bucket geometry.
+    for rho in (0.5, 0.95):
+        bk = jnp.asarray(rng.choice(np.arange(1, 8 * n, dtype=np.uint32), n,
+                                    replace=False))
+        pk = _keys(rng, n, 8 * n)
+        cap = int(n / rho)
+        fj = jax.jit(lambda b, p, cap=cap: rjoin.hash_join(
+            b, p, 2 * n, "inner", capacity=cap, scheme="bucketed"))
+        res_j = fj(bk, pk)
+        res_s = rjoin.hash_join(bk, pk, 2 * n, "inner", capacity=cap,
+                                scheme="bucketed", backend="scan")
+        for fld in ("build_idx", "probe_idx", "valid", "matched"):
+            if not bool((getattr(res_j, fld) == getattr(res_s, fld)).all()):
+                raise AssertionError(
+                    f"fig9 bucketed join jax/scan parity FAILED on {fld} "
+                    f"(rho{rho})")
+        if int(res_j.total) != int(res_s.total):
+            raise AssertionError(
+                f"fig9 bucketed join jax/scan parity FAILED on total "
+                f"(rho{rho})")
+        ts = time_stats(fj, bk, pk)
+        btable, _ = rjoin.build(bk, capacity=cap, scheme="bucketed")
+        _, jstats = jax.jit(
+            lambda t, k: mv.count_values(t, k, stats=True))(btable, pk)
+        out(row(f"fig9.join.inner.bucketed.rho{rho}", ts["seconds"], 2 * n,
+                extra="parity=ok,"
+                      + fmt_extras(pairs=int(res_j.total),
+                                   geometry=f"p{btable.num_rows}"
+                                            f"xW{btable.window}",
+                                   bits_per_slot=btable.ops.bits_per_slot)
+                      + "," + table_metric_extras(jstats, ts["seconds"],
+                                                  2 * n,
+                                                  window=btable.window)
+                      + "," + timing_extras(ts)))
+
     # --- join vs build:probe ratio (fixed rho 0.5) --------------------------
     for ratio in (4, 2, 1):
         nb, npb = n // ratio, n

@@ -25,12 +25,18 @@ import json
 import time
 
 
+#: non-numeric extras lifted into first-class (string) JSON fields;
+#: everything else non-numeric stays in the joined ``extra`` string only
+STRING_FIELDS = ("geometry",)
+
+
 def parse_row(line: str):
     """CSV row -> {name, us_per_call, ops_per_s, extra?} (None if header/na).
 
     Numeric ``k=v`` extras (``probe_len_p99=4``, ``spread=0.03``, ...) are
     lifted into first-class fields of the JSON row; non-numeric ones stay
-    in the joined ``extra`` string only.
+    in the joined ``extra`` string only, except the declared
+    ``STRING_FIELDS`` (``geometry=p8191xW32``), which are lifted verbatim.
     """
     parts = line.split(",")
     if len(parts) < 3 or parts[0] == "name":
@@ -51,7 +57,8 @@ def parse_row(line: str):
                 try:
                     entry[k] = float(v)
                 except ValueError:
-                    pass
+                    if k in STRING_FIELDS:
+                        entry[k] = v
     return entry
 
 

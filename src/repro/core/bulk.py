@@ -90,8 +90,19 @@ _I = jnp.int32
 
 
 def _tstatic(table):
-    """(store protocol, scheme, seed, max_probes) — the engines' static tuple."""
-    return (table.ops, table.scheme, table.seed, table.max_probes)
+    """(store protocol, scheme, seed, max_probes) — the engines' static tuple.
+
+    ``max_probes`` is the COVERAGE-CLAMPED budget (``probing.
+    effective_probes``): a walk never spends attempts revisiting rows its
+    scheme cannot leave (quadratic reaches only (p+1)/2 distinct rows,
+    bucketed exactly 2).  Identity for cops/linear with the default
+    budget; for quadratic it is the spurious-FULL bugfix — revisited rows
+    re-entered the claim fixpoint as fresh candidates and burned the
+    budget the sequential reference spent on distinct rows.
+    """
+    return (table.ops, table.scheme, table.seed,
+            probing.effective_probes(table.scheme, table.max_probes,
+                                     table.ops.num_rows))
 
 
 # ---------------------------------------------------------------------------
@@ -290,8 +301,8 @@ def probe_matches(tstatic, store, keys, words, active, count=None,
     ops, scheme, seed, max_probes = tstatic
     num_rows, w = ops.num_rows, ops.window
     n = keys.shape[0]
-    row0 = probing.initial_row(words, num_rows, seed)
-    step = probing.row_step(scheme, words, num_rows, seed)
+    row0 = probing.initial_row(words, num_rows, seed, ops.quotient)
+    step = probing.row_step(scheme, words, num_rows, seed, ops.quotient)
 
     def empty(_):
         out = (jnp.zeros((n,), bool), row0, jnp.zeros((n,), _U))
@@ -310,7 +321,14 @@ def probe_matches(tstatic, store, keys, words, active, count=None,
                 attempt, row, done, mrow, mlane, matched = st
             win = ops.key_windows(store, row)
             has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
-            match = jnp.all(win == keys[:, :, None], axis=1)
+            if ops.quotient:
+                # quotient stores hold q*2 + choice: the compare target is
+                # attempt-dependent (choice == attempt on the bucketed walk)
+                tgt = probing.match_word(words, num_rows, attempt,
+                                         quotient=True)
+                match = win[:, 0, :] == tgt[:, None]
+            else:
+                match = jnp.all(win == keys[:, :, None], axis=1)
             m_lane = probing.vote_lowest(match)
             hit = (m_lane < w) & ~done
             mrow = jnp.where(hit, row, mrow)
@@ -326,7 +344,15 @@ def probe_matches(tstatic, store, keys, words, active, count=None,
         st = (jnp.zeros((), _I), row0, ~active, z, z, jnp.zeros((n,), bool))
         if stats:
             st = st + (jnp.zeros((n,), _I),)
-        res = jax.lax.while_loop(cond, body, st)
+        if max_probes <= probing.UNROLL_PROBES:
+            # static <= 2-window budget (the bucketed walk): unroll so the
+            # walk costs the same at every load factor; body is a no-op
+            # once an element is done, so outputs are identical
+            res = st
+            for _ in range(max_probes):
+                res = body(res)
+        else:
+            res = jax.lax.while_loop(cond, body, st)
         matched, mrow, mlane = res[5], res[3], res[4]
         if stats:
             return matched, mrow, mlane, res[6]
@@ -419,8 +445,8 @@ def place_claims(tstatic, store, words, claim, prio, prio_is_iota=False,
     else:
         cmask = None
         n_cand = jnp.sum(cand.astype(_I), axis=1)             # (p,)
-    row0 = probing.initial_row(words, num_rows, seed)
-    step = probing.row_step(scheme, words, num_rows, seed)
+    row0 = probing.initial_row(words, num_rows, seed, ops.quotient)
+    step = probing.row_step(scheme, words, num_rows, seed, ops.quotient)
 
     def advance(attempt, row, move, full):
         """Advance bumped claimers to their next row with any free lane."""
@@ -526,6 +552,21 @@ def _apply(table, keys, matched, mrow, mlane, placed, crow, clane,
 # public entry points
 # ---------------------------------------------------------------------------
 
+def _write_keys(table, keys, words, crow):
+    """Key planes to scatter for placed claimers.
+
+    Raw keys for every store except quotient, which writes the encoded
+    remainder ``q*2 + choice``; ``choice`` falls out of the claim row
+    (claim_row != first bucket — the bucketed walk has only two rows).
+    """
+    if not table.ops.quotient:
+        return keys
+    p = table.ops.num_rows
+    row0 = probing.initial_row(words, p, table.seed, quotient=True)
+    choice = (crow != row0)
+    return probing.stored_word(words, p, choice, quotient=True)[:, None]
+
+
 def _walk_plen(matched, probe_plen, claim_attempt, max_probes):
     """Per-element walk length: match-walk windows for matched elements,
     final placement attempt for claimers (clipped to max_probes)."""
@@ -574,7 +615,7 @@ def insert_single(table, keys, values, mask=None, stats=False):
     if table.key_words != 1:
         return _insert_general(table, tstat, keys, values, mask, stats=stats)
     is_rep, rep_of, lww_of, _, _ = _group_fast(keys[:, 0], mask)
-    words = sv.key_hash_word(keys)
+    words = sv.probe_words(table, keys)
     pm = probe_matches(tstat, table.store, keys, words, is_rep, table.count,
                        stats=stats)
     matched, mrow, mlane = pm[:3]
@@ -582,7 +623,8 @@ def insert_single(table, keys, values, mask=None, stats=False):
                       jnp.arange(n, dtype=_U), prio_is_iota=True, stats=stats)
     placed, crow, clane = pc[0], pc[1], pc[2]
     lww = values[lww_of]                         # group's last live writer
-    out = _finish_fast(table, keys, mask, is_rep, rep_of, matched, mrow,
+    wkeys = _write_keys(table, keys, words, crow)
+    out = _finish_fast(table, wkeys, mask, is_rep, rep_of, matched, mrow,
                        mlane, placed, crow, clane, lww, lww)
     if not stats:
         return out
@@ -619,7 +661,7 @@ def update_single(table, keys, update_fn, combine, init, values, mask=None,
     vw = table.value_words
     vfold = jax.vmap(update_fn)
     is_rep, rep_of, lww_of, gid, has_dups = _group_fast(keys[:, 0], mask)
-    words = sv.key_hash_word(keys)
+    words = sv.probe_words(table, keys)
     pm = probe_matches(tstat, table.store, keys, words, is_rep, table.count,
                        stats=stats)
     matched, mrow, mlane = pm[:3]
@@ -648,7 +690,8 @@ def update_single(table, keys, update_fn, combine, init, values, mask=None,
     old = jnp.take_along_axis(
         old, mlane.astype(_I)[:, None, None], axis=2)[:, :, 0]
     matched_vals = vfold(old, keys, agg_all)
-    out = _finish_fast(table, keys, mask, is_rep, rep_of, matched, mrow,
+    wkeys = _write_keys(table, keys, words, crow)
+    out = _finish_fast(table, wkeys, mask, is_rep, rep_of, matched, mrow,
                        mlane, placed, crow, clane, matched_vals, claim_vals)
     if not stats:
         return out

@@ -76,10 +76,15 @@ from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
 _U = jnp.uint32
 _I = jnp.int32
 
+UNROLL_PROBES = probing.UNROLL_PROBES
+
 
 def _tstatic(table):
-    """(store protocol, scheme, seed, max_probes) — the engines' static tuple."""
-    return (table.ops, table.scheme, table.seed, table.max_probes)
+    """(store protocol, scheme, seed, effective_probes) — the engines'
+    static tuple; the budget is coverage-clamped like ``bulk._tstatic``."""
+    return (table.ops, table.scheme, table.seed,
+            probing.effective_probes(table.scheme, table.max_probes,
+                                     table.num_rows))
 
 
 def fused_ok(table) -> bool:
@@ -87,17 +92,19 @@ def fused_ok(table) -> bool:
 
     The arena maps each store slot to at most one (query, rank) pair, so
     the fused gather/erase requires *revisit-free* walks — no probe row
-    visited twice.  cops (double hashing, step in [1, p-1], p prime) and
-    linear visit distinct rows for the first ``num_rows`` attempts;
-    quadratic may cycle back sooner, and ``max_probes > num_rows`` wraps
-    every scheme.  On a saturated table (no EMPTY frontier) a revisiting
-    reference walk re-emits the same slots each pass — semantics only the
-    two-walk reference can produce, so dispatchers fall back to it.
-    Counting is unaffected (same loop, no arena): ``count_multi`` stays
-    fused regardless.
+    visited twice.  With every engine's budget clamped to the scheme's
+    distinct-row coverage (``probing.effective_probes`` — the
+    coverage-clamp bugfix), EVERY scheme's walk is revisit-free by
+    construction: cops/linear generate Z_p for the first ``num_rows``
+    attempts, quadratic's first (p+1)/2 residues ``l^2 mod p`` are
+    distinct, bucketed visits exactly its two buckets.  This predicate
+    therefore now always holds; it is kept as the documented eligibility
+    switch for future walks that may revisit (e.g. multi-pass or wrapped
+    schemes with an un-clampable budget).
     """
-    return (table.scheme in ("cops", "linear")
-            and table.max_probes <= table.num_rows)
+    return (probing.effective_probes(table.scheme, table.max_probes,
+                                     table.num_rows)
+            <= probing.scheme_coverage(table.scheme, table.num_rows))
 
 
 # ---------------------------------------------------------------------------
@@ -162,8 +169,8 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None,
     # pack (query, rank) into one i32 arena when it cannot overflow —
     # halves the per-window scatter traffic on the hot path
     packed = collect and n * cap < 2 ** 31
-    row0 = probing.initial_row(words, num_rows, seed)
-    step = probing.row_step(scheme, words, num_rows, seed)
+    row0 = probing.initial_row(words, num_rows, seed, ops.quotient)
+    step = probing.row_step(scheme, words, num_rows, seed, ops.quotient)
     qa0 = jnp.full(ashape, _I(-1) if packed else _I(n), _I)
     ra0 = jnp.zeros(ashape if not packed else (1,), _I)
     idx = jnp.arange(n, dtype=_I)
@@ -184,7 +191,13 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None,
             else:
                 attempt, row, done, seen, qa, ra = st
             win = ops.key_windows(store, row)
-            match = jnp.all(win == keys[:, :, None], axis=1) & ~done[:, None]
+            if ops.quotient:
+                tgt = probing.match_word(words, num_rows, attempt,
+                                         quotient=True)
+                match = (win[:, 0, :] == tgt[:, None]) & ~done[:, None]
+            else:
+                match = (jnp.all(win == keys[:, :, None], axis=1)
+                         & ~done[:, None])
             has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)
             if collect:
                 lanes = jax.lax.broadcasted_iota(_I, match.shape, 1)
@@ -209,7 +222,16 @@ def fused_walk(tstatic, store, keys, words, active, *, collect, count=None,
         st = (jnp.zeros((), _I), row0, ~active, jnp.zeros((n,), _I), qa0, ra0)
         if stats:
             st = st + (jnp.zeros((n,), _I),)
-        res = jax.lax.while_loop(cond, body, st)
+        if max_probes <= UNROLL_PROBES:
+            # bucketed walks have a static <= 2-window budget: unroll the
+            # attempts so the walk costs the same at every load factor
+            # (no early-exit all-done reduction; body is a no-op once an
+            # element is done, so the outputs are identical)
+            res = st
+            for _ in range(max_probes):
+                res = body(res)
+        else:
+            res = jax.lax.while_loop(cond, body, st)
         out = (res[3], res[4], res[5])
         return out + ((res[6],) if stats else ())
 
@@ -304,7 +326,7 @@ def count_multi(table, keys, mask=None, stats=False):
         return (out, _retrieval_stats(table)) if stats else out
     live = jnp.ones((n,), bool) if mask is None else mask
     is_rep, rep_of = group_queries(keys, live)
-    words = sv.key_hash_word(keys)
+    words = sv.probe_words(table, keys)
     fw = fused_walk(_tstatic(table), table.store, keys, words, is_rep,
                     collect=False, count=table.count, stats=stats)
     counts = _fan_out(fw[0], rep_of, live, n)
@@ -327,7 +349,7 @@ def retrieve_all_multi(table, keys, out_capacity, mask=None, stats=False):
         return res + ((_retrieval_stats(table),) if stats else ())
     live = jnp.ones((n,), bool) if mask is None else mask
     is_rep, rep_of = group_queries(keys, live)
-    words = sv.key_hash_word(keys)
+    words = sv.probe_words(table, keys)
     fw = fused_walk(
         _tstatic(table), table.store, keys, words, is_rep, collect=True,
         count=table.count, stats=stats)
@@ -351,7 +373,7 @@ def erase_multi(table, keys):
         return table, jnp.zeros((0,), _I)
     live = jnp.ones((n,), bool)
     is_rep, rep_of = group_queries(keys, live)
-    words = sv.key_hash_word(keys)
+    words = sv.probe_words(table, keys)
     rcnt, qarena, _ = fused_walk(_tstatic(table), table.store, keys, words,
                                  is_rep, collect=True, count=table.count)
     store = table.ops.arena_tombstone(table.store, qarena < n)
@@ -371,7 +393,7 @@ def _locate_reps(table, keys, stats=False):
     n = keys.shape[0]
     live = jnp.ones((n,), bool)
     is_rep, rep_of = group_queries(keys, live)
-    words = sv.key_hash_word(keys)
+    words = sv.probe_words(table, keys)
     pm = bulk.probe_matches(
         _tstatic(table), table.store, keys, words, is_rep, table.count,
         stats=stats)
@@ -424,7 +446,7 @@ def erase_single(table, keys, mask=None):
         return table, jnp.zeros((0,), bool)
     live = jnp.ones((n,), bool) if mask is None else mask
     is_rep, rep_of = group_queries(keys, live)
-    words = sv.key_hash_word(keys)
+    words = sv.probe_words(table, keys)
     matched, mrow, mlane = bulk.probe_matches(
         _tstatic(table), table.store, keys, words, is_rep, table.count)
     hit = is_rep & matched

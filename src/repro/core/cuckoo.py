@@ -1,0 +1,197 @@
+"""Bounded cuckoo-eviction rescue for the bucketed two-choice lane.
+
+The ``"bucketed"`` scheme gives every key exactly two candidate buckets;
+the bulk-build fixpoint (``core.bulk``) or sequential scan places each
+claimer in the first of its two rows with a free lane, exactly like the
+other schemes.  Near capacity some claimers find BOTH buckets full and
+report FULL even though a short eviction chain would make room — the
+cuckoo trade (Compact Parallel Hash Tables, PAPERS.md).  This module adds
+that chain as a **vectorized rescue pass** on top of the finished insert:
+
+1. select, per failed claimer, a *victim* — an occupied slot in one of the
+   claimer's two buckets whose OWN alternate bucket has a free lane
+   (victims are decodable in place: plain stores re-hash the stored key,
+   quotient stores read the ``q*2 + choice`` word directly);
+2. arbitrate: scatter-min by claimer priority makes victim slots unique,
+   then the virtual-fill ranking (``bulk._rank_by_row``) hands each moved
+   victim a unique free lane of its target bucket — no two victims, and
+   no victim and claimer, ever collide on a slot;
+3. move the victims (one batched scatter + tombstone of the vacated
+   slots — the vacated slot becomes a TOMBSTONE, never EMPTY, which is
+   what keeps stop-at-EMPTY retrieval sound under eviction);
+4. re-insert the failed claimers through the table's ordinary insert path
+   (no recursion into the rescue), where they claim the fresh tombstones.
+
+The pass repeats ``BUCKETED_MAX_EVICTIONS`` times (python loop — the
+bound is static); claimers still FULL after the last round keep the
+plain two-choice walk's verdict — the bounded-eviction guard's fallback
+to the reference walk.  Every step is one shared vectorized function
+driven only by batch order, so the jax, scan and pallas backends remain
+bit-exact by construction: they feed the same post-insert state in and
+run the identical rescue graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bulk, hashing, probing
+from repro.core.common import (
+    EMPTY_KEY,
+    STATUS_FULL,
+    TOMBSTONE_KEY,
+)
+
+_U = jnp.uint32
+_I = jnp.int32
+
+#: eviction rounds per insert call (static).  Two rounds clear the
+#: overwhelming majority of residual FULLs at rho <= 0.95 with W >= 8
+#: buckets; the fallback past that is the plain two-choice verdict.
+BUCKETED_MAX_EVICTIONS = 2
+
+
+def _fold_planes(kp_flat):
+    """(kw, cap) stored key planes -> (cap,) probe word (hash fold)."""
+    kw = kp_flat.shape[0]
+    if kw == 1:
+        return kp_flat[0]
+    word = kp_flat[0]
+    for w in range(1, kw):
+        word = hashing.combine_planes(kp_flat[w], word)
+    return word
+
+
+def _alt_rows_flat(ops, seed, kp_flat):
+    """Per-slot ALTERNATE bucket row, flat (cap,) — garbage on dead slots.
+
+    Plain stores re-derive (b1, b2) from the stored key word; quotient
+    stores decode the choice bit and step straight off the stored
+    ``q*2 + choice`` word (g is a function of q only, by construction).
+    """
+    p = ops.num_rows
+    cap = ops.arena_capacity
+    rows = (jnp.arange(cap, dtype=_U) // _U(ops.window))
+    if ops.quotient:
+        stored = kp_flat[0]
+        q = stored >> _U(1)
+        choice = (stored & _U(1)) == _U(1)
+        g = hashing.hash_step(q, p, seed)
+        return jnp.where(choice, (rows + _U(p) - g) % _U(p),
+                         (rows + g) % _U(p))
+    word = _fold_planes(kp_flat)
+    b1 = hashing.hash_rows(word, p, seed)
+    g = hashing.hash_step(word, p, seed)
+    b2 = (b1 + g) % _U(p)
+    return jnp.where(rows == b1, b2, b1)
+
+
+def _free_lane_mask(ops, store):
+    """(p, W) candidate mask + per-row free count + u32 ballot (W<=32)."""
+    kp0 = ops.key_planes(store)[0]
+    cand = (kp0 == EMPTY_KEY) | (kp0 == TOMBSTONE_KEY)
+    if ops.window <= 32:
+        bits = jax.lax.broadcasted_iota(_U, cand.shape, 1)
+        cmask = jnp.sum(jnp.where(cand, _U(1) << bits, _U(0)), axis=1)
+        n_free = jax.lax.population_count(cmask).astype(_I)
+    else:
+        cmask = None
+        n_free = jnp.sum(cand.astype(_I), axis=1)
+    return cand, n_free, cmask
+
+
+def _nth_lane(cand, cmask, rows, rank, window):
+    """rank-th free lane of each row (mirrors ``bulk.place_claims``)."""
+    if cmask is not None:
+        return bulk._nth_set_lane(cmask[rows], rank, window)
+    crow = cand[rows]
+    crank = jnp.cumsum(crow.astype(_I), axis=1) - 1
+    lanes = jax.lax.broadcasted_iota(_I, crow.shape, 1)
+    return jnp.min(jnp.where(crow & (crank == rank[:, None]), lanes,
+                             _I(window)), axis=1)
+
+
+def _one_round(table, keys_n, values_n, live, status, core_insert):
+    """One eviction round: move victims, then re-insert failed claimers."""
+    ops = table.ops
+    p, w = ops.num_rows, ops.window
+    n = keys_n.shape[0]
+    idx = jnp.arange(n, dtype=_U)
+    failed = live & (status == STATUS_FULL)
+
+    kp_flat = ops.key_planes(table.store).reshape(table.key_words,
+                                                  ops.arena_capacity)
+    alt = _alt_rows_flat(ops, table.seed, kp_flat)
+    cand, n_free, cmask = _free_lane_mask(ops, table.store)
+    live_slot = ~cand.reshape(-1)
+    # a slot is an eligible victim iff occupied and its alternate bucket
+    # has at least one free lane to receive it
+    eligible = (live_slot & (n_free[alt] > 0)).reshape(p, w)
+
+    from repro.core import single_value as sv
+    words = sv.probe_words(table, keys_n)
+    c1 = probing.initial_row(words, p, table.seed, ops.quotient)
+    g = probing.row_step("bucketed", words, p, table.seed, ops.quotient)
+    c2 = (c1 + g) % _U(p)
+
+    elig1, elig2 = eligible[c1], eligible[c2]
+    lane1 = probing.vote_lowest(elig1)
+    lane2 = probing.vote_lowest(elig2)
+    has1, has2 = lane1 < w, lane2 < w
+    vrow = jnp.where(has1, c1, c2)
+    vlane = jnp.where(has1, lane1, lane2).astype(_U)
+    propose = failed & (has1 | has2)
+
+    # victim slots unique: lowest claimer index wins each slot
+    cap = ops.arena_capacity
+    vslot = jnp.where(propose, vrow.astype(_I) * w + vlane.astype(_I), cap)
+    arena = jnp.full((cap + 1,), _U(n), _U).at[vslot].min(idx)
+    win = propose & (arena[vslot] == idx)
+
+    # target lanes unique: rank winners per target row, rank-th free lane
+    t_row = alt[jnp.clip(vslot, 0, cap - 1)].astype(_U)
+    rank = bulk._rank_by_row(t_row, idx, win, p, True)
+    moved = win & (rank < n_free[t_row])
+    t_lane = _nth_lane(cand, cmask, t_row, rank, w).astype(_U)
+
+    # gather victim key/value words, flip the quotient choice bit
+    vk = kp_flat[:, jnp.clip(vslot, 0, cap - 1)].T             # (n, kw)
+    if ops.quotient:
+        vk = vk ^ _U(1)
+    vp_flat = ops.value_planes(table.store).reshape(table.value_words, cap)
+    vv = vp_flat[:, jnp.clip(vslot, 0, cap - 1)].T             # (n, vw)
+
+    oor = _U(p)
+    mrow = jnp.where(moved, t_row, oor)
+    store = ops.scatter_keys(table.store, mrow, t_lane, vk)
+    store = ops.scatter_values(store, mrow, t_lane, vv)
+    store = ops.scatter_key_word(store, jnp.where(moved, vrow, oor), vlane,
+                                 TOMBSTONE_KEY)
+    import dataclasses
+    table = dataclasses.replace(table, store=store)
+
+    # re-insert the failed claimers through the plain insert (no rescue)
+    table, st2 = core_insert(table, keys_n, values_n, failed)
+    status = jnp.where(failed, st2, status)
+    return table, status
+
+
+def rescue(table, keys_n, values_n, mask, status, core_insert):
+    """Run the bounded eviction rescue; returns (table, status).
+
+    ``core_insert(table, keys, values, mask) -> (table, status)`` must be
+    the table kind's plain insert for the table's backend (never the
+    rescue-wrapped entry point).  The whole pass is skipped via
+    ``lax.cond`` when no element is FULL.
+    """
+    n = keys_n.shape[0]
+    live = jnp.ones((n,), bool) if mask is None else mask
+    for _ in range(BUCKETED_MAX_EVICTIONS):
+        table, status = jax.lax.cond(
+            jnp.any(live & (status == STATUS_FULL)),
+            lambda t, s: _one_round(t, keys_n, values_n, live, s,
+                                    core_insert),
+            lambda t, s: (t, s),
+            table, status)
+    return table, status

@@ -43,6 +43,44 @@ def mix_murmur3(x: jax.Array) -> jax.Array:
     return x
 
 
+# modular inverses of the fmix32 multiply constants (odd => invertible
+# mod 2^32); computed once so unmix stays in cheap 32-bit arithmetic
+_M1_INV = np.uint32(pow(int(_M1), -1, 1 << 32))
+_M2_INV = np.uint32(pow(int(_M2), -1, 1 << 32))
+
+
+def unmix_murmur3(x: jax.Array) -> jax.Array:
+    """Exact inverse of :func:`mix_murmur3` (fmix32 is a bijection on u32).
+
+    xorshift-by-16 is self-inverse; xorshift-by-13 inverts as
+    ``x ^ (x>>13) ^ (x>>26)``; the multiplies invert via the modular
+    inverses of the (odd) constants.  The quotient store decodes stored
+    remainders back to user keys with this (migration sweeps, debugging).
+    """
+    x = x.astype(_U)
+    x = x ^ _shr(x, 16)
+    x = x * _M2_INV
+    x = x ^ _shr(x, 13) ^ _shr(x, 26)
+    x = x * _M1_INV
+    x = x ^ _shr(x, 16)
+    return x
+
+
+def full_hash(key_word: jax.Array, seed: int) -> jax.Array:
+    """The (invertible) pre-modulo hash behind :func:`hash_rows`.
+
+    Quotient stores keep ``h // p`` in the table instead of the key, so
+    they need ``h`` itself — encode with this, decode with
+    :func:`unfull_hash`.
+    """
+    return mix_murmur3(key_word.astype(_U) ^ _U(np.uint32(seed)))
+
+
+def unfull_hash(h: jax.Array, seed: int) -> jax.Array:
+    """Recover the key word from :func:`full_hash` output."""
+    return unmix_murmur3(h) ^ _U(np.uint32(seed))
+
+
 def mix_xxhash(x: jax.Array) -> jax.Array:
     """xxhash32 avalanche — independent second mixer for double hashing."""
     x = x.astype(_U)
@@ -130,8 +168,7 @@ def unpack_columns(keys: jax.Array) -> tuple[jax.Array, ...]:
 
 def hash_rows(key_word: jax.Array, num_rows: int, seed: int) -> jax.Array:
     """Initial probe row: h1(k) in [0, num_rows)."""
-    h = mix_murmur3(key_word ^ _U(np.uint32(seed)))
-    return (h % _U(num_rows)).astype(_U)
+    return (full_hash(key_word, seed) % _U(num_rows)).astype(_U)
 
 
 def hash_step(key_word: jax.Array, num_rows: int, seed: int) -> jax.Array:

@@ -75,7 +75,7 @@ from repro.core.common import EMPTY_KEY, TOMBSTONE_KEY
 
 _U = jnp.uint32
 
-LAYOUTS = ("soa", "aos", "packed")
+LAYOUTS = ("soa", "aos", "packed", "bucketed", "bucketedq")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +96,9 @@ class StoreOps:
     #: plane arrays individually addressable (SOA) — the Pallas kernels'
     #: eligibility predicate (they take bare (p, W) planes).
     planar = False
+    #: key plane holds quotient remainders instead of raw keys (overridden
+    #: by the bucketed lane; engines read this to pick compare targets).
+    quotient = False
 
     # -- slot arena (flat slot-id view; shared by SOA/AOS) -------------------
     @property
@@ -227,6 +230,44 @@ class SoaOps(StoreOps):
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketedOps(SoaOps):
+    """Fixed-width buckets as the vector lane (two-choice storage lane).
+
+    Physically identical to SOA — the (p, W) row IS the bucket, probed
+    whole with one vector vote (the TPU analogue of the Compact Parallel
+    Hash Tables paper's cache-line-sized buckets) — but bound to the
+    ``"bucketed"`` probing scheme semantics: every key has exactly two
+    candidate buckets, so probes are bucket-granular and walks are length
+    <= 2 regardless of load factor.
+
+    ``quotient=True`` (layout name ``"bucketedq"``) switches the key plane
+    to remainder storage: instead of the 32-bit key the slot holds
+    ``q*2 + choice`` with ``q = full_hash(key) // p`` — strictly fewer
+    than 32 significant bits whenever p >= 7 (``bits_per_slot``), the
+    compact-hashing trade.  Requires ``key_words == 1``.
+    """
+
+    quotient: bool = False
+    kind = "bucketed"
+
+    def __post_init__(self):
+        if self.quotient and self.key_words != 1:
+            raise ValueError("quotient (bucketedq) requires 1-word keys")
+
+    @property
+    def bits_per_slot(self) -> int:
+        """Significant key bits stored per slot.
+
+        Quotient stores hold words <= 2*ceil(2^32 / p) + 1; plain stores
+        hold raw 32-bit keys.
+        """
+        if not self.quotient:
+            return 32
+        max_word = 2 * (((1 << 32) + self.num_rows - 1) // self.num_rows) + 1
+        return max(1, (max_word - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
 class AosOps(StoreOps):
     kind = "aos"
 
@@ -316,7 +357,8 @@ class PackedOps(AosOps):
             raise ValueError("packed layout requires 1-word keys and values")
 
 
-_KINDS = {"soa": SoaOps, "aos": AosOps, "packed": PackedOps}
+_KINDS = {"soa": SoaOps, "aos": AosOps, "packed": PackedOps,
+          "bucketed": BucketedOps, "bucketedq": BucketedOps}
 
 
 @functools.lru_cache(maxsize=None)
@@ -325,8 +367,11 @@ def make_ops(kind: str, num_rows: int, window: int, key_words: int,
     """Resolve a layout name to its (cached) geometry-bound protocol object."""
     if kind not in _KINDS:
         raise ValueError(f"layout {kind!r} not in {LAYOUTS}")
+    kw = {}
+    if kind == "bucketedq":
+        kw["quotient"] = True
     return _KINDS[kind](num_rows=num_rows, window=window, key_words=key_words,
-                        value_words=value_words)
+                        value_words=value_words, **kw)
 
 
 def create(kind: str, num_rows: int, window: int, key_words: int,

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +108,34 @@ def _host_int(x):
         return None
 
 
+#: one-shot latch for the traced-degradation warning below (warn once per
+#: process; the registry counter keeps the full tally)
+_warned_traced_skip = False
+
+
+def _note_traced_skip() -> None:
+    """Record that the growth policy was silently skipped under tracing.
+
+    ``insert_or_grow`` inside jit degrades to a plain insert (shapes are
+    frozen mid-graph, so no migration can run) — previously this was
+    completely silent and a jitted consumer could see STATUS_FULL while
+    believing auto-growth protected it.  Every skip now increments the
+    ``table.growth_skipped_traced`` registry counter, and the first skip
+    per process raises a host-side warning.  See docs/GROWTH.md.
+    """
+    global _warned_traced_skip
+    REGISTRY.counter("table.growth_skipped_traced").inc(1)
+    if not _warned_traced_skip:
+        _warned_traced_skip = True
+        warnings.warn(
+            "insert_or_grow called under jit/tracing: the auto-growth "
+            "policy is host-side and was skipped, so this call degrades "
+            "to a plain insert and may report STATUS_FULL. Call "
+            "insert_or_grow eagerly (outside jit) to keep growth active; "
+            "see docs/GROWTH.md and the table.growth_skipped_traced "
+            "counter.", RuntimeWarning, stacklevel=3)
+
+
 # ---------------------------------------------------------------------------
 # arena sweeps — (keys, values, live) of every slot, tombstones dropped
 # ---------------------------------------------------------------------------
@@ -121,6 +150,21 @@ def _sweep_oa(table):
     kp = ops.key_planes(table.store).reshape(table.key_words, -1).T
     vp = ops.value_planes(table.store).reshape(table.value_words, -1).T
     live = (kp[:, 0] != EMPTY_KEY) & (kp[:, 0] != TOMBSTONE_KEY)
+    if ops.quotient:
+        # quotient slots hold q*2 + choice, not the key: decode through
+        # the slot's row (h = q*p + b1, key = unmix(h) ^ seed — exact,
+        # the mixer is a bijection).  Decoding here is what makes
+        # migration REHASHABLE: the fresh table may have a different p,
+        # so raw stored words would be meaningless in the new geometry.
+        from repro.core import hashing
+        p = ops.num_rows
+        s = kp[:, 0]
+        rows = jnp.arange(s.shape[0], dtype=_U) // _U(ops.window)
+        q = s >> _U(1)
+        choice = (s & _U(1)) == _U(1)
+        g = hashing.hash_step(q, p, table.seed)
+        b1 = jnp.where(choice, (rows + _U(p) - g) % _U(p), rows)
+        kp = hashing.unfull_hash(q * _U(p) + b1, table.seed)[:, None]
     return (jnp.where(live[:, None], kp, 0),
             jnp.where(live[:, None], vp, 0), live)
 
@@ -312,7 +356,8 @@ def maybe_migrate(table, policy: GrowthPolicy, incoming: int = 0):
     """
     live, tomb, cap = occupancy(table)
     if live is None or tomb is None:
-        return table                      # traced: policy is host-side only
+        _note_traced_skip()               # traced: policy is host-side only
+        return table
     need = live + incoming
     if need > policy.max_load_factor * cap:
         new_cap = _grown_capacity(cap, need, policy)
@@ -383,13 +428,17 @@ def insert_or_grow(table, keys, values=None, mask=None, *,
     for _ in range(max_attempts):
         failed = (status == STATUS_FULL) | (status == STATUS_POOL_FULL)
         n_failed = _host_int(jnp.sum(failed, dtype=_I))
-        if n_failed is None or n_failed == 0:
+        if n_failed is None:
+            _note_traced_skip()            # traced: no host retry possible
+            break
+        if n_failed == 0:
             break
         pool_full = _host_int(
             jnp.sum(status == STATUS_POOL_FULL, dtype=_I)) or 0
         live, tomb, cap = occupancy(table)
         if live is None:
-            break                          # traced: no host retry possible
+            _note_traced_skip()            # traced: no host retry possible
+            break
         if pool_full and isinstance(table, bl.BucketListHashTable):
             new_pool = _grown_capacity(
                 table.pool_capacity,

@@ -88,7 +88,27 @@ class MultiValueHashTable:
 def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
            window: int = DEFAULT_WINDOW, scheme: str = "cops",
            layout: str = "soa", seed: int = DEFAULT_SEED,
-           max_probes: int | None = None, backend: str = "jax") -> MultiValueHashTable:
+           max_probes: int | None = None, backend: str = "jax",
+           kind: str | None = None,
+           quotient: bool = False) -> MultiValueHashTable:
+    """Create an empty multi-value table (capacity rounds to p*W, p prime).
+
+    ``kind="bucketed"`` selects the two-choice bucketed lane (scheme
+    ``"bucketed"`` over the bucketed store geometry), as in
+    ``single_value.create``.  Quotient storage is single-value-only: a
+    multi-value slot's identity is the (key, value) PAIR, and the rescue
+    pass could not tell which of several same-key slots a claimer
+    displaced — so ``quotient=True`` is rejected here.
+    """
+    if quotient:
+        raise ValueError("multi-value tables do not support quotient "
+                         "storage (single_value-only)")
+    if kind is not None:
+        if kind != "bucketed":
+            raise ValueError(f"unknown table kind {kind!r}")
+        scheme = "bucketed"
+    if scheme == "bucketed" and layout == "soa":
+        layout = "bucketed"
     if scheme not in probing.SCHEMES:
         raise ValueError(f"scheme {scheme!r} not in {probing.SCHEMES}")
     num_rows, _ = table_geometry(min_capacity, window)
@@ -144,6 +164,8 @@ def insert(table: MultiValueHashTable, keys, values, mask=None,
     ``"pallas"`` the COPS kernel — all bit-identical.  ``stats`` (static)
     appends an in-graph ``obs.metrics.TableStats`` to the return.
     """
+    if table.scheme == "bucketed":
+        return _insert_bucketed(table, keys, values, mask, stats)
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
         ntable, status = cops_ops.insert_multi(table, keys, values, mask)
@@ -159,6 +181,35 @@ def insert(table: MultiValueHashTable, keys, values, mask=None,
     return ntable, status
 
 
+def _core_insert(table: MultiValueHashTable, keys_n, values_n, mask):
+    """Backend dispatch on pre-normalized batches, WITHOUT the bucketed
+    rescue (what ``core.cuckoo`` composes over and re-enters)."""
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.insert_multi(table, keys_n, values_n, mask)
+    if table.backend != "scan":
+        from repro.core import bulk
+        return bulk.insert_multi(table, keys_n, values_n, mask)
+    return insert_scan(table, keys_n, values_n, mask)
+
+
+def _insert_bucketed(table: MultiValueHashTable, keys, values, mask,
+                     stats: bool):
+    """Bucketed-lane append: two-choice placement + bounded cuckoo rescue
+    (``core.cuckoo``), shared bit-exactly across backends."""
+    keys_n = normalize_key_batch(keys, table.key_words, "keys")
+    values_n = normalize_words(values, table.value_words, "values")
+    ntable, status = _core_insert(table, keys_n, values_n, mask)
+    from repro.core import cuckoo
+    ntable, status = cuckoo.rescue(ntable, keys_n, values_n, mask, status,
+                                   _core_insert)
+    if stats:
+        from repro.obs import metrics
+        return ntable, status, metrics.bolt_on_stats(ntable, keys_n,
+                                                     status=status, mask=mask)
+    return ntable, status
+
+
 def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
                 ) -> tuple[MultiValueHashTable, jax.Array]:
     """Sequential-scan reference append (the bulk engine's parity oracle)."""
@@ -168,7 +219,11 @@ def insert_scan(table: MultiValueHashTable, keys, values, mask=None,
     if mask is None:
         mask = jnp.ones((n,), bool)
     words = key_hash_word(keys)
-    tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
+    # budget clamped to the scheme's distinct-row coverage (the
+    # coverage-clamp bugfix — see probing.effective_probes)
+    tstatic = (table.ops, table.scheme, table.seed,
+               probing.effective_probes(table.scheme, table.max_probes,
+                                        table.num_rows))
 
     def step(carry, inp):
         store, count = carry
@@ -239,11 +294,13 @@ def count_values_scan(table: MultiValueHashTable, keys, mask=None) -> jax.Array:
     word = key_hash_word(keys)
     row0 = probing.initial_row(word, table.num_rows, table.seed)
     step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+    max_probes = probing.effective_probes(table.scheme, table.max_probes,
+                                          table.num_rows)
     done0 = jnp.zeros((n,), bool) if mask is None else ~mask
 
     def cond(st):
         attempt, row, done, cnt = st
-        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+        return jnp.logical_and(attempt < max_probes, ~jnp.all(done))
 
     def body(st):
         attempt, row, done, cnt = st
@@ -306,11 +363,13 @@ def retrieve_all_scan(table: MultiValueHashTable, keys, out_capacity: int,
     row0 = probing.initial_row(word, table.num_rows, table.seed)
     step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
     out = jnp.zeros((out_capacity, table.value_words), _U)
+    max_probes = probing.effective_probes(table.scheme, table.max_probes,
+                                          table.num_rows)
     done0 = jnp.zeros((n,), bool) if mask is None else ~mask
 
     def cond(st):
         attempt, row, done, seen, out = st
-        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+        return jnp.logical_and(attempt < max_probes, ~jnp.all(done))
 
     def body(st):
         attempt, row, done, seen, out = st
@@ -359,11 +418,13 @@ def erase_scan(table: MultiValueHashTable, keys) -> tuple[MultiValueHashTable, j
     word = key_hash_word(keys)
     row0 = probing.initial_row(word, table.num_rows, table.seed)
     step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+    max_probes = probing.effective_probes(table.scheme, table.max_probes,
+                                          table.num_rows)
     store = table.store
 
     def cond(st):
         attempt, row, done, cnt, store = st
-        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+        return jnp.logical_and(attempt < max_probes, ~jnp.all(done))
 
     def body(st):
         attempt, row, done, cnt, store = st

@@ -108,8 +108,28 @@ class SingleValueHashTable:
 def create(min_capacity: int, *, key_words: int = 1, value_words: int = 1,
            window: int = DEFAULT_WINDOW, scheme: str = "cops",
            layout: str = "soa", seed: int = DEFAULT_SEED,
-           max_probes: int | None = None, backend: str = "jax") -> SingleValueHashTable:
-    """Create an empty table with capacity >= min_capacity rounded to p*W, p prime."""
+           max_probes: int | None = None, backend: str = "jax",
+           kind: str | None = None,
+           quotient: bool = False) -> SingleValueHashTable:
+    """Create an empty table with capacity >= min_capacity rounded to p*W, p prime.
+
+    ``kind="bucketed"`` selects the two-choice bucketed lane in one
+    switch: scheme ``"bucketed"`` (two candidate buckets + bounded cuckoo
+    eviction on insert, see ``core.cuckoo``) over the bucketed store
+    geometry.  ``quotient=True`` additionally stores ``q*2 + choice``
+    remainders instead of full key words (< 32 key bits per slot; 1-word
+    keys only — see ``core.probing`` module docstring).
+    """
+    if kind is not None:
+        if kind != "bucketed":
+            raise ValueError(f"unknown table kind {kind!r}")
+        scheme = "bucketed"
+    if scheme == "bucketed" and layout == "soa":
+        layout = "bucketedq" if quotient else "bucketed"
+    if quotient:
+        if scheme != "bucketed":
+            raise ValueError("quotient storage requires scheme='bucketed'")
+        layout = "bucketedq"
     if scheme not in probing.SCHEMES:
         raise ValueError(f"scheme {scheme!r} not in {probing.SCHEMES}")
     num_rows, _ = table_geometry(min_capacity, window)
@@ -204,6 +224,32 @@ def key_hash_word(keys: jax.Array) -> jax.Array:
     return word
 
 
+def probe_words(table, keys: jax.Array) -> jax.Array:
+    """The per-key u32 "probe word" every walk derives rows/steps from.
+
+    Plain stores hash the folded key word downstream; quotient stores
+    carry the FULL mixed hash as the probe word (row = word mod p, match
+    target = attempt-dependent remainder — see ``probing.match_word``),
+    which keeps decode exact.
+    """
+    if table.ops.quotient:
+        return hashing.full_hash(keys[:, 0], table.seed)
+    return key_hash_word(keys)
+
+
+def _tstatic(table):
+    """(ops, scheme, seed, effective_probes) — the scan walks' static tuple.
+
+    Mirrors ``bulk._tstatic``: the probe budget is clamped to the
+    scheme's distinct-row coverage (``probing.effective_probes``) so the
+    sequential walks are revisit-free too — the same coverage-clamp
+    bugfix, applied to the reference paths.
+    """
+    return (table.ops, table.scheme, table.seed,
+            probing.effective_probes(table.scheme, table.max_probes,
+                                     table.num_rows))
+
+
 # ---------------------------------------------------------------------------
 # vectorized probe walk (shared by retrieve / erase / locate)
 # ---------------------------------------------------------------------------
@@ -216,19 +262,27 @@ def _locate(table: SingleValueHashTable, keys: jax.Array):
     (absence proof), or max_probes is exhausted.
     """
     n = keys.shape[0]
-    word = key_hash_word(keys)
-    row0 = probing.initial_row(word, table.num_rows, table.seed)
-    step = probing.row_step(table.scheme, word, table.num_rows, table.seed)
+    quotient = table.ops.quotient
+    word = probe_words(table, keys)
+    row0 = probing.initial_row(word, table.num_rows, table.seed, quotient)
+    step = probing.row_step(table.scheme, word, table.num_rows, table.seed,
+                            quotient)
+    max_probes = probing.effective_probes(table.scheme, table.max_probes,
+                                          table.num_rows)
     w = table.window
 
     def cond(state):
         attempt, row, done, frow, flane, found = state
-        return jnp.logical_and(attempt < table.max_probes, ~jnp.all(done))
+        return jnp.logical_and(attempt < max_probes, ~jnp.all(done))
 
     def body(state):
         attempt, row, done, frow, flane, found = state
         win = table.ops.key_windows(table.store, row)
-        match = jnp.all(win == keys[:, :, None], axis=1)          # (n, W)
+        if quotient:
+            tgt = probing.match_word(word, table.num_rows, attempt, True)
+            match = win[:, 0, :] == tgt[:, None]                  # (n, W)
+        else:
+            match = jnp.all(win == keys[:, :, None], axis=1)      # (n, W)
         has_empty = probing.vote_any(win[:, 0, :] == EMPTY_KEY)   # (n,)
         mlane = probing.vote_lowest(match)                        # (n,) W if none
         hit = (mlane < w) & ~done
@@ -353,8 +407,8 @@ def _probe_for_insert(table_static, store, key_vec, word):
     """
     ops, scheme, seed, max_probes = table_static
     num_rows, w = ops.num_rows, ops.window
-    row0 = probing.initial_row(word, num_rows, seed)
-    step = probing.row_step(scheme, word, num_rows, seed)
+    row0 = probing.initial_row(word, num_rows, seed, ops.quotient)
+    step = probing.row_step(scheme, word, num_rows, seed, ops.quotient)
 
     def cond(st):
         attempt, row, done, *_ = st
@@ -363,7 +417,11 @@ def _probe_for_insert(table_static, store, key_vec, word):
     def body(st):
         attempt, row, done, crow, clane, have_cand, mrow, mlane, matched = st
         win = ops.key_windows(store, row[None])[0]                  # (kw, W)
-        match = jnp.all(win == key_vec[:, None], axis=0)                   # (W,)
+        if ops.quotient:
+            match = win[0] == probing.match_word(word, num_rows, attempt,
+                                                 True)              # (W,)
+        else:
+            match = jnp.all(win == key_vec[:, None], axis=0)               # (W,)
         empty = win[0] == EMPTY_KEY
         tomb = win[0] == TOMBSTONE_KEY
         m_lane = probing.vote_lowest(match[None])[0]
@@ -407,6 +465,8 @@ def insert(table: SingleValueHashTable, keys, values, mask=None,
     the jax backend threads counters through the engine loops; scan and
     pallas run their op unchanged and measure with a bolt-on walk.
     """
+    if table.scheme == "bucketed":
+        return _insert_bucketed(table, keys, values, mask, stats)
     if table.backend == "pallas":
         from repro.kernels.cops import ops as cops_ops
         ntable, status = cops_ops.insert(table, keys, values, mask)
@@ -418,6 +478,37 @@ def insert(table: SingleValueHashTable, keys, values, mask=None,
     if stats:
         from repro.obs import metrics
         return ntable, status, metrics.bolt_on_stats(ntable, keys,
+                                                     status=status, mask=mask)
+    return ntable, status
+
+
+def _core_insert(table: SingleValueHashTable, keys_n, values_n, mask):
+    """Backend dispatch on pre-normalized batches, WITHOUT the bucketed
+    rescue — the plain insert the cuckoo pass composes over (and re-enters
+    for the post-eviction re-insert; it must never recurse into rescue)."""
+    if table.backend == "pallas":
+        from repro.kernels.cops import ops as cops_ops
+        return cops_ops.insert(table, keys_n, values_n, mask)
+    if table.backend != "scan":
+        from repro.core import bulk
+        return bulk.insert_single(table, keys_n, values_n, mask)
+    return insert_scan(table, keys_n, values_n, mask)
+
+
+def _insert_bucketed(table: SingleValueHashTable, keys, values, mask,
+                     stats: bool):
+    """Bucketed-lane insert: plain two-choice placement, then the bounded
+    cuckoo-eviction rescue (``core.cuckoo``) for residual FULL claimers.
+    Identical rescue graph on every backend => parity by construction."""
+    keys_n = normalize_key_batch(keys, table.key_words, "keys")
+    values_n = normalize_words(values, table.value_words, "values")
+    ntable, status = _core_insert(table, keys_n, values_n, mask)
+    from repro.core import cuckoo
+    ntable, status = cuckoo.rescue(ntable, keys_n, values_n, mask, status,
+                                   _core_insert)
+    if stats:
+        from repro.obs import metrics
+        return ntable, status, metrics.bolt_on_stats(ntable, keys_n,
                                                      status=status, mask=mask)
     return ntable, status
 
@@ -435,8 +526,8 @@ def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
     n = keys.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
-    words = key_hash_word(keys)
-    tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
+    words = probe_words(table, keys)
+    tstatic = _tstatic(table)
 
     def step(carry, inp):
         store, count = carry
@@ -454,7 +545,13 @@ def insert_scan(table: SingleValueHashTable, keys, values, mask=None,
         store = table.ops.scatter_values(store, vrow[None], lane[None],
                                          v[None])
         krow = jnp.where(case == 2, row, oor)
-        store = table.ops.scatter_keys(store, krow[None], lane[None], k[None])
+        kvec = k
+        if table.ops.quotient:
+            row0 = probing.initial_row(word, table.num_rows, table.seed, True)
+            kvec = probing.stored_word(word, table.num_rows, row != row0,
+                                       True)[None]
+        store = table.ops.scatter_keys(store, krow[None], lane[None],
+                                       kvec[None])
         count = count + jnp.where(case == 2, _I(1), _I(0))
         status = jnp.where(~m, _I(STATUS_MASKED),
                            jnp.where(mode == 0, _I(STATUS_UPDATED),
@@ -535,8 +632,8 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
         from repro.core import bulk
         return bulk.update_single(table, keys, update_fn, combine, init,
                                   values, mask, stats=stats)
-    words = key_hash_word(keys)
-    tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
+    words = probe_words(table, keys)
+    tstatic = _tstatic(table)
 
     def step(carry, inp):
         store, count = carry
@@ -553,7 +650,13 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
         store = table.ops.scatter_values(store, vrow[None], lane[None],
                                          vnew[None])
         krow = jnp.where(case == 2, row, oor)
-        store = table.ops.scatter_keys(store, krow[None], lane[None], k[None])
+        kvec = k
+        if table.ops.quotient:
+            row0 = probing.initial_row(word, table.num_rows, table.seed, True)
+            kvec = probing.stored_word(word, table.num_rows, row != row0,
+                                       True)[None]
+        store = table.ops.scatter_keys(store, krow[None], lane[None],
+                                       kvec[None])
         count = count + jnp.where(case == 2, _I(1), _I(0))
         status = jnp.where(~m, _I(STATUS_MASKED),
                            jnp.where(mode == 0, _I(STATUS_UPDATED),

@@ -58,7 +58,10 @@ def _win_vote(mask_row):
 
 def _probe_setup(k, num_rows, seed, scheme):
     row0 = hashing.hash_rows(k, num_rows, seed)
-    if scheme == "cops":
+    if scheme in ("cops", "bucketed"):
+        # bucketed IS the cops walk truncated to its two buckets — the
+        # dispatch layer clamps max_probes to 2 (probing.effective_probes),
+        # so the bucket tile reuses the double-hashing step unchanged
         step = hashing.hash_step(k, num_rows, seed)
     else:  # "linear" baseline
         step = _U(1)

@@ -19,11 +19,17 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import probing
 from repro.core.common import EMPTY_KEY, STATUS_INSERTED, STATUS_MASKED
 from repro.kernels.cops import kernel as K
 
 _U = jnp.uint32
 _I = jnp.int32
+
+#: schemes the kernel tiles understand (bucketed = cops truncated to two
+#: rows via the clamped budget; quotient stores change the compare target
+#: per attempt and stay on the jax engines)
+_KERNEL_SCHEMES = ("cops", "linear", "bucketed")
 
 
 def should_interpret() -> bool:
@@ -32,10 +38,19 @@ def should_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _probes(table) -> int:
+    """Coverage-clamped probe budget for the kernel walks (the same
+    ``probing.effective_probes`` clamp the jax/scan engines apply)."""
+    return probing.effective_probes(table.scheme, table.max_probes,
+                                    table.num_rows)
+
+
 def _kernel_ok(table) -> bool:
     # the kernels take bare (p, W) planes: any plane-addressable protocol
     return (table.ops.planar and table.key_words in (1, 2)
-            and table.value_words == 1 and table.scheme in ("cops", "linear"))
+            and table.value_words == 1
+            and table.scheme in _KERNEL_SCHEMES
+            and not table.ops.quotient)
 
 
 def _tile_batch(x, tile, fill):
@@ -84,7 +99,7 @@ def _insert_dispatch(table, keys, values, mask, multi_value):
         tv = table.store["values"][0]
         tk0, tk1, tv, status = _insert64_jit(
             tk0, tk1, tv, keys[:, 0], keys[:, 1], values, mask,
-            seed=table.seed, max_probes=table.max_probes, scheme=table.scheme,
+            seed=table.seed, max_probes=_probes(table), scheme=table.scheme,
             tile=tile, multi_value=multi_value, interpret=interp)
         store = {"keys": jnp.stack([tk0, tk1]), "values": tv[None]}
     else:
@@ -92,7 +107,7 @@ def _insert_dispatch(table, keys, values, mask, multi_value):
         tv = table.store["values"][0]
         tk, tv, status = _insert_jit(
             tk, tv, keys[:, 0], values, mask, seed=table.seed,
-            max_probes=table.max_probes, scheme=table.scheme, tile=tile,
+            max_probes=_probes(table), scheme=table.scheme, tile=tile,
             multi_value=multi_value, interpret=interp)
         store = {"keys": tk[None], "values": tv[None]}
     count = table.count + jnp.sum(status == STATUS_INSERTED, dtype=_I)
@@ -104,8 +119,14 @@ def insert(table, keys, values, mask=None):
     keys — the paper's beyond-32-bit claim on the kernel path)."""
     from repro.core import single_value as sv
     if not _kernel_ok(table):
-        return sv.insert(dataclasses.replace(table, backend="jax"), keys, values,
-                         mask)
+        jx = dataclasses.replace(table, backend="jax")
+        if table.scheme == "bucketed":
+            # bucketed callers wrap THIS function with the cuckoo rescue
+            # (sv._insert_bucketed); the fallback must stay rescue-free
+            # or the jax fallback would rescue twice and break parity
+            from repro.core import bulk
+            return bulk.insert_single(jx, keys, values, mask)
+        return sv.insert(jx, keys, values, mask)
     return _insert_dispatch(table, keys, values, mask, multi_value=False)
 
 
@@ -113,8 +134,12 @@ def insert_multi(table, keys, values, mask=None):
     """MultiValueHashTable append via the Pallas kernel."""
     from repro.core import multi_value as mv
     if not _kernel_ok(table):
-        return mv.insert(dataclasses.replace(table, backend="jax"), keys, values,
-                         mask)
+        jx = dataclasses.replace(table, backend="jax")
+        if table.scheme == "bucketed":
+            # rescue-free fallback — see insert()
+            from repro.core import bulk
+            return bulk.insert_multi(jx, keys, values, mask)
+        return mv.insert(jx, keys, values, mask)
     return _insert_dispatch(table, keys, values, mask, multi_value=True)
 
 
@@ -122,7 +147,9 @@ def _groupby_ok(table) -> bool:
     # composite (key_words >= 2) group-bys fall back to the vectorized jax
     # RMW path — no *64 update tile yet (ROADMAP follow-on)
     return (table.ops.planar and table.key_words == 1
-            and table.value_words == 2 and table.scheme in ("cops", "linear"))
+            and table.value_words == 2
+            and table.scheme in _KERNEL_SCHEMES
+            and not table.ops.quotient)
 
 
 @functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme",
@@ -161,7 +188,7 @@ def update_groupby(table, agg, keys, payload, mask=None):
     tv0, tv1 = table.store["values"][0], table.store["values"][1]
     tk, tv0, tv1, status = _update_jit(
         tk, tv0, tv1, keys, vals, mask, seed=table.seed,
-        max_probes=table.max_probes, scheme=table.scheme, tile=tile, agg=agg,
+        max_probes=_probes(table), scheme=table.scheme, tile=tile, agg=agg,
         interpret=should_interpret())
     store = {"keys": tk[None], "values": jnp.stack([tv0, tv1])}
     count = table.count + jnp.sum(status == STATUS_INSERTED, dtype=_I)
@@ -196,7 +223,8 @@ def _retrieve_ok(table) -> bool:
     # tile; wider composite keys (key_words > 2) fall back to the jax
     # engine, whose general lane handles any plane count
     return (table.ops.planar and table.key_words in (1, 2)
-            and table.scheme in ("cops", "linear"))
+            and table.scheme in _KERNEL_SCHEMES
+            and not table.ops.quotient)
 
 
 @functools.partial(jax.jit, static_argnames=("seed", "max_probes", "scheme",
@@ -251,12 +279,12 @@ def _fused_walk_pallas(table, keys_n, live, collect=True):
         rcnt, qa, ra = _retrieve_walk64_jit(
             table.store["keys"][0], table.store["keys"][1], keys_n[:, 0],
             keys_n[:, 1], is_rep, seed=table.seed,
-            max_probes=table.max_probes, scheme=table.scheme, tile=tile,
+            max_probes=_probes(table), scheme=table.scheme, tile=tile,
             sentinel=n, collect=collect, interpret=should_interpret())
     else:
         rcnt, qa, ra = _retrieve_walk_jit(
             table.store["keys"][0], keys_n[:, 0], is_rep, seed=table.seed,
-            max_probes=table.max_probes, scheme=table.scheme, tile=tile,
+            max_probes=_probes(table), scheme=table.scheme, tile=tile,
             sentinel=n, collect=collect, interpret=should_interpret())
     return is_rep, rep_of, rcnt, qa, ra
 
@@ -359,9 +387,9 @@ def retrieve(table, keys):
         return _lookup64_jit(
             table.store["keys"][0], table.store["keys"][1],
             table.store["values"][0], keys[:, 0], keys[:, 1],
-            seed=table.seed, max_probes=table.max_probes, scheme=table.scheme,
+            seed=table.seed, max_probes=_probes(table), scheme=table.scheme,
             tile=tile, interpret=should_interpret())
     return _lookup_jit(table.store["keys"][0], table.store["values"][0],
                        keys[:, 0], seed=table.seed,
-                       max_probes=table.max_probes, scheme=table.scheme,
+                       max_probes=_probes(table), scheme=table.scheme,
                        tile=tile, interpret=should_interpret())

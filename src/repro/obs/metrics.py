@@ -175,15 +175,18 @@ def merge(a: TableStats, b: TableStats) -> TableStats:
         load_factor=b.load_factor)
 
 
-def measure_probe_lengths(tstatic, store, keys, active) -> jax.Array:
+def measure_probe_lengths(tstatic, store, keys, active,
+                          words=None) -> jax.Array:
     """Bolt-on probe-length measurement: one stats-enabled match walk
     against ``store`` (windows examined to hit the key or its EMPTY
     frontier).  Used by the scan/pallas backends, whose op itself is kept
     untouched — the measurement is an extra read-only walk traced into
-    the same graph."""
+    the same graph.  ``words`` overrides the probe words (quotient tables
+    probe by the full hash, not the raw key word)."""
     from repro.core import bulk
     from repro.core import single_value as sv
-    words = sv.key_hash_word(keys)
+    if words is None:
+        words = sv.key_hash_word(keys)
     _, _, _, plen = bulk.probe_matches(tstatic, store, keys, words, active,
                                        stats=True)
     return plen
@@ -204,7 +207,11 @@ def bolt_on_stats(table, keys, status=None, mask=None) -> TableStats:
         return table_stats(table.ops, table.store, status=status)
     live = jnp.ones((n,), bool) if mask is None else mask
     is_rep, _ = bulk_retrieve.group_queries(keys, live)
-    tstatic = (table.ops, table.scheme, table.seed, table.max_probes)
-    plen = measure_probe_lengths(tstatic, table.store, keys, is_rep)
+    from repro.core import probing
+    tstatic = (table.ops, table.scheme, table.seed,
+               probing.effective_probes(table.scheme, table.max_probes,
+                                        table.num_rows))
+    plen = measure_probe_lengths(tstatic, table.store, keys, is_rep,
+                                 words=sv.probe_words(table, keys))
     return table_stats(table.ops, table.store, status=status, plen=plen,
                        active=is_rep)

@@ -338,6 +338,74 @@ class TestInsertEraseRetrieveRoundTrip:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ka) * 2)
 
 
+class TestBucketedRoundTrip:
+    """The two-choice bucketed lane (plain and quotient storage) against
+    the dict model, across BOTH backends: insert/erase sequences preserve
+    exact map semantics, and quotient decode never produces a false
+    positive (the mixer is a bijection, so q*p + b1 recovers the key
+    exactly)."""
+
+    @SETTINGS
+    @given(ops=ops_st(), backend=st.sampled_from(["jax", "scan"]),
+           quotient=st.booleans())
+    def test_single_value_bucketed_round_trip(self, ops, backend, quotient):
+        t = sv.create(512, window=8, kind="bucketed", quotient=quotient,
+                      backend=backend)
+        model = {}
+        for op, k, v in ops:
+            ka = jnp.asarray([k], jnp.uint32)
+            if op == "insert":
+                t, stt = sv.insert(t, ka, jnp.asarray([v], jnp.uint32))
+                if int(stt[0]) <= STATUS_UPDATED:
+                    assert int(stt[0]) == (STATUS_UPDATED if k in model
+                                           else STATUS_INSERTED)
+                    model[k] = v & 0xFFFFFFFF
+            else:
+                t, er = sv.erase(t, ka)
+                assert bool(er[0]) == (k in model)
+                model.pop(k, None)
+        assert int(t.count) == len(model)
+        q = jnp.arange(1, 41, dtype=jnp.uint32)
+        got, found = sv.retrieve(t, q)
+        for i, k in enumerate(range(1, 41)):
+            assert bool(found[i]) == (k in model)
+            if k in model:
+                assert int(got[i]) == model[k]
+
+    @SETTINGS
+    @given(pairs=st.lists(st.tuples(st.integers(1, 20),
+                                    st.integers(0, 10 ** 6)),
+                          min_size=1, max_size=80),
+           erase_keys=st.lists(st.integers(1, 25), max_size=10),
+           backend=st.sampled_from(["jax", "scan"]))
+    def test_multi_value_bucketed_round_trip(self, pairs, erase_keys,
+                                             backend):
+        t = mv.create(1024, window=16, kind="bucketed", backend=backend)
+        model: dict = {}
+        ks = jnp.asarray([p[0] for p in pairs], jnp.uint32)
+        vs = jnp.asarray([p[1] for p in pairs], jnp.uint32)
+        t, stt = mv.insert(t, ks, vs)
+        for i, (k, v) in enumerate(pairs):
+            if int(stt[i]) == STATUS_INSERTED:
+                model.setdefault(k, []).append(v & 0xFFFFFFFF)
+        if erase_keys:
+            ek = jnp.asarray(erase_keys, jnp.uint32)
+            t, ecnt = mv.erase(t, ek)
+            for i, k in enumerate(erase_keys):
+                assert int(ecnt[i]) == len(model.get(k, []))
+            for k in erase_keys:
+                model.pop(k, None)
+        assert int(t.count) == sum(map(len, model.values()))
+        q = jnp.arange(1, 26, dtype=jnp.uint32)
+        cnt = mv.count_values(t, q)
+        out, off, _ = mv.retrieve_all(t, q, out_capacity=len(pairs) + 1)
+        out, off = np.asarray(out), np.asarray(off)
+        for i, k in enumerate(range(1, 26)):
+            assert int(cnt[i]) == len(model.get(k, []))
+            got = sorted(out[off[i]:off[i + 1]].tolist())
+            assert got == sorted(model.get(k, []))
+
+
 class TestCompositeKeyRoundTrip:
     """Composite (multi-column) keys vs a dict-of-tuples model AND the
     u32-packed single-word rendering of the same columns: insert -> erase
