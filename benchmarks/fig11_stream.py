@@ -1,0 +1,221 @@
+"""Fig. 11 — sustained streaming ingestion: scan engine vs per-batch re-entry.
+
+The streaming engine (``repro.data.stream``) runs the dedup -> watchlist
+join -> aggregate chunk pipeline as ONE compiled ``lax.scan`` with the
+table carry donated and tombstone compaction in-graph.  This figure
+measures what that buys over the per-batch path the repo had before
+(``pipeline.relational_stage`` re-entered from Python per chunk, forget
+and compaction as separate host round-trips):
+
+- ``fig11.stream.scan``   — the engine: whole-stream wall time, rows
+  carry ``steps_per_s``, ``compactions_in_graph``, ``retraces`` (asserted
+  zero after warmup via the jit cache) and the parity gate.
+- ``fig11.stream.eager``  — the per-batch re-entry baseline
+  (``stream.reference_run``), bit-exactness enforced in-run: keep masks,
+  hit counts and EVERY carry leaf (table store included) must match the
+  scan engine, including across the in-graph compaction boundary.
+- ``fig11.stream.step``   — the jitted single-step driver (double
+  buffering, one compilation) with per-chunk latency percentiles
+  (``p50_step_us`` / ``p99_step_us``).
+- ``fig11.serve.table``   — the serving-loop variant: mixed
+  insert/lookup/erase traffic against one donated table
+  (``serving.serve_loop.serve_table_traffic``), per-step latency
+  percentiles, retrace-free by construction (the driver raises).
+- ``fig11.e2e.sketch-build-query`` — the fig8 front half feeding the
+  stream: minhash-sketch synthetic genomes, build the watchlist from the
+  sketch hashes, then stream token chunks through the engine
+  (sketch -> build -> query end to end, tokens/s).
+
+Smoke gates (``REPRO_BENCH_SMOKE=1``): parity everywhere, zero retraces,
+at least one in-graph compaction, and scan >= 1.5x the eager per-batch
+baseline.
+"""
+
+from __future__ import annotations
+
+import os
+import time as _time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import fmt_extras, row
+from repro.core import single_value as sv
+from repro.data import pipeline, stream
+from repro.obs.registry import Registry
+from repro.obs.trace import Tracer
+from repro.serving import serve_loop
+
+_SMOKE = dict(n_chunks=16, chunk_batch=16, seq_len=32, vocab=96,
+              dedup_capacity=4096, forget_after=4, compact_every=4,
+              max_tombstone_density=0.005, serve_steps=8, serve_batch=256)
+_FULL = dict(n_chunks=48, chunk_batch=64, seq_len=64, vocab=512,
+             dedup_capacity=1 << 15, forget_after=8, compact_every=8,
+             max_tombstone_density=0.005, serve_steps=32, serve_batch=2048)
+
+
+def _cfg():
+    return _SMOKE if os.environ.get("REPRO_BENCH_SMOKE") else _FULL
+
+
+def _stream_workload(p):
+    cfg = stream.StreamConfig(
+        seq_len=p["seq_len"], chunk_batch=p["chunk_batch"],
+        dedup_capacity=p["dedup_capacity"], forget_after=p["forget_after"],
+        compact_every=p["compact_every"],
+        max_tombstone_density=p["max_tombstone_density"])
+    rng = np.random.default_rng(0)
+    chunks = rng.integers(
+        0, p["vocab"],
+        (p["n_chunks"], p["chunk_batch"], p["seq_len"])).astype(np.int32)
+    watch = pipeline.build_watchlist(rng.choice(
+        p["vocab"], size=p["vocab"] // 3, replace=False).astype(np.uint32))
+    return cfg, jnp.asarray(chunks), watch
+
+
+def _best_of(fn, iters=5):
+    ts = []
+    for _ in range(iters):
+        a = _time.perf_counter()
+        fn()
+        ts.append(_time.perf_counter() - a)
+    return min(ts)
+
+
+def run(out=print):
+    p = _cfg()
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    cfg, chunks, watch = _stream_workload(p)
+    n_chunks = chunks.shape[0]
+    tokens = int(np.prod(chunks.shape))
+
+    # ---- scan engine: warmup (the one compilation), then time -----------
+    cache0 = stream.stream_scan._cache_size()
+    fin, (keep, hits) = stream.stream_scan(
+        stream.create_state(cfg), watch, chunks)
+    jax.block_until_ready(hits)
+    compiles = stream.stream_scan._cache_size() - cache0
+
+    def scan_once():
+        f, o = stream.stream_scan(stream.create_state(cfg), watch, chunks)
+        jax.block_until_ready(o)
+    sec_scan = _best_of(scan_once)
+    retraces = stream.stream_scan._cache_size() - cache0 - compiles
+    if retraces:
+        raise AssertionError(f"stream scan retraced {retraces}x after "
+                             "warmup — single-compilation contract broken")
+
+    # ---- per-batch eager re-entry baseline + bit-exact parity gate ------
+    np_chunks = np.asarray(chunks)
+    ref_fin, rkeep, rhits = stream.reference_run(
+        stream.create_state(cfg), watch, np_chunks)
+    for name, a, b in (("keep", keep, rkeep), ("hits", hits, rhits)):
+        if not bool(jnp.array_equal(a, b)):
+            raise AssertionError(f"stream/eager mismatch on {name}")
+    for a, b in zip(jax.tree_util.tree_leaves(fin),
+                    jax.tree_util.tree_leaves(ref_fin)):
+        if not bool(jnp.array_equal(a, b)):
+            raise AssertionError("stream/eager mismatch on a carry leaf")
+    compactions = int(fin.counters.compactions)
+    if smoke and compactions < 1:
+        raise AssertionError("in-graph compaction never fired in the "
+                             "smoke churn window")
+
+    def eager_once():
+        _, _, h = stream.reference_run(
+            stream.create_state(cfg), watch, np_chunks)
+        jax.block_until_ready(h)
+    sec_eager = _best_of(eager_once, iters=3 if smoke else 2)
+    speedup = sec_eager / sec_scan
+    if smoke and speedup < 1.5:
+        raise AssertionError(
+            f"stream engine only {speedup:.2f}x over per-batch re-entry "
+            "(>= 1.5x required)")
+
+    out(row("fig11.stream.scan", sec_scan, tokens,
+            extra=fmt_extras(steps_per_s=n_chunks / sec_scan,
+                             compactions_in_graph=compactions,
+                             retraces=0)
+            + f",speedup-vs-eager={speedup:.2f}x,parity=ok"))
+    out(row("fig11.stream.eager", sec_eager, tokens,
+            extra=fmt_extras(steps_per_s=n_chunks / sec_eager)))
+
+    # ---- jitted per-step driver: latency percentiles --------------------
+    tracer = Tracer(registry=Registry())
+    state = stream.create_state(cfg)
+    state, k2, h2 = stream.stream(state, watch, list(np_chunks),
+                                  tracer=tracer)  # warm + traced in one run
+    if not (bool(jnp.array_equal(k2, rkeep))
+            and bool(jnp.array_equal(h2, rhits))):
+        raise AssertionError("step-driver/eager mismatch")
+    # the first driver run above compiled the step; re-run traced so the
+    # latency row excludes the compile span
+    tracer2 = Tracer(registry=Registry())
+    _, _, h3 = stream.stream(stream.create_state(cfg), watch,
+                             list(np_chunks), tracer=tracer2)
+    pct = tracer2.percentiles("stream.step")
+    sec_step = pct["sum_s"]
+    out(row("fig11.stream.step", sec_step, tokens,
+            extra=fmt_extras(steps_per_s=pct["count"] / sec_step,
+                             p50_step_us=pct["p50_s"] * 1e6,
+                             p99_step_us=pct["p99_s"] * 1e6)
+            + f",scan-speedup-vs-step={sec_step / sec_scan:.2f}x"))
+
+    # ---- serving loop: mixed table traffic, donated, retrace-free -------
+    rng = np.random.default_rng(1)
+    nb, ns = p["serve_batch"], p["serve_steps"]
+
+    def traffic():
+        for _ in range(ns):
+            yield (jnp.asarray(rng.integers(1, 1 << 20, nb), jnp.uint32),
+                   jnp.asarray(rng.integers(0, 2**31, nb), jnp.uint32),
+                   jnp.asarray(rng.integers(1, 1 << 20, nb), jnp.uint32),
+                   jnp.asarray(rng.integers(1, 1 << 20, nb // 2),
+                               jnp.uint32))
+
+    table = sv.create(max(8 * nb, 1 << 14))
+    # warmup once (compile), then measure a traced run
+    table, _, _ = serve_loop.serve_table_traffic(
+        table, traffic(), tracer=Tracer(registry=Registry()))
+    tracer3 = Tracer(registry=Registry())
+    table, tracer3, steps = serve_loop.serve_table_traffic(
+        table, traffic(), tracer=tracer3)
+    sp = tracer3.percentiles("serve.table_step")
+    ops = steps * (2 * nb + nb // 2)
+    out(row("fig11.serve.table", sp["sum_s"], ops,
+            extra=fmt_extras(steps_per_s=steps / sp["sum_s"],
+                             p50_step_us=sp["p50_s"] * 1e6,
+                             p99_step_us=sp["p99_s"] * 1e6)
+            + ",retraces=0"))
+
+    # ---- fig8 sketch -> build -> query, end to end ----------------------
+    from repro.kernels.minhash import ops as mh
+    from repro.kernels.minhash.ref import INVALID
+    g_rng = np.random.default_rng(2)
+    genomes = g_rng.integers(0, 4, (2, 4000 if smoke else 20000)) \
+        .astype(np.uint8)
+    t0 = _time.perf_counter()
+    sk = np.asarray(mh.sketch_reads(jnp.asarray(genomes), k=16, s=256))
+    hashes = np.unique(sk[sk != INVALID])
+    tracked = np.unique(hashes % p["vocab"]).astype(np.uint32)
+    e2e_watch = pipeline.build_watchlist(tracked)
+    sec_front = _time.perf_counter() - t0
+    fin4, (k4, h4) = stream.stream_scan(
+        stream.create_state(cfg), e2e_watch, chunks)
+    jax.block_until_ready(h4)
+
+    def e2e_query():
+        _, o = stream.stream_scan(stream.create_state(cfg), e2e_watch,
+                                  chunks)
+        jax.block_until_ready(o)
+    sec_query = _best_of(e2e_query, iters=3)
+    out(row("fig11.e2e.sketch-build-query", sec_front + sec_query, tokens,
+            extra=fmt_extras(sketch_build_s=sec_front,
+                             query_s=sec_query,
+                             watchlist=len(tracked),
+                             hits_total=int(fin4.counters.hits))))
+
+
+if __name__ == "__main__":
+    run()

@@ -188,6 +188,13 @@ def run(out=print):
         if not bool(jnp.array_equal(a, b)):
             raise AssertionError(
                 f"bucket-list fused/scan retrieval mismatch on {name}")
+    if os.environ.get("REPRO_BENCH_SMOKE") and sec_w / sec_f < 1.0:
+        # the BENCH_4 gap regression gate: the fused walk's dense
+        # gather-form emit must at least match the two-pass reference
+        # even at smoke scale (it sat at 0.52x before the fix)
+        raise AssertionError(
+            f"fused retrieval slower than two-pass reference: "
+            f"{sec_w / sec_f:.2f}x")
     out(row(f"fig7.retrieve.wc-bl-1.fused.r{r}", sec_f, total,
             extra=f"speedup-vs-twopass={sec_w / sec_f:.2f}x,parity=ok"))
     out(row(f"fig7.retrieve.wc-bl-1.twopass.r{r}", sec_w, total))

@@ -533,7 +533,8 @@ def _handle_probe(table: BucketListHashTable, keys_n):
     return is_rep, rep_of, found, ptr, rcnt, bidx, counts
 
 
-def chain_arena(table: BucketListHashTable, active, ptr, counts, bidx):
+def chain_arena(table: BucketListHashTable, active, ptr, counts, bidx,
+                rep_base=None, dense_cap: int | None = None):
     """Walk bucket chains tail->head, stamping the pool slot arena.
 
     The bucket-list rendering of ``bulk_retrieve.fused_walk``'s arena: per
@@ -544,60 +545,96 @@ def chain_arena(table: BucketListHashTable, active, ptr, counts, bidx):
     reference emits.  Distinct queries own disjoint chains, so stamps
     never collide — the same invariant the OA walk gets from
     one-key-per-slot.  Returns (qarena, rank_arena) over pool slots.
+
+    **Dense mode** (``rep_base`` given): the walk records only each
+    query's per-bucket data-start pointer — an (n,)-sized scatter per
+    round instead of the (n, chunk) slot stamping — and the
+    representative-dense slot list ``_emit_dense`` consumes is then built
+    by ONE output-scale gather: dense position ``d`` finds its owning
+    representative (``searchsorted`` over the cumulative rep counts), its
+    rank's bucket (``searchsorted`` over the growth schedule), and reads
+    ``slot = dstart[rep, bucket] + (rank - cum[bucket])``.  A gather has
+    no write hazards and its cost tracks the OUTPUT size, not
+    ``n * max_bucket`` — the fix for the fused-retrieve gap, where the
+    lockstep stamping dwarfed the two-pass reference at small batch.
+    Returns that (dense_cap,) slot list alone.
     """
     n = active.shape[0]
     pool_cap = table.pool_capacity
+    dense = rep_base is not None
     sizes = jnp.asarray(table.sizes, _I)
     cum = jnp.asarray(table.cum, _I)
     max_rounds = len(table.sizes)
     chunk = int(min(max(table.sizes), 128))
     lanes_c = jnp.arange(chunk, dtype=_I)
-    qa = jnp.full((pool_cap,), _I(n))
-    ra = jnp.zeros((pool_cap,), _I)
+    if dense:
+        arenas = (jnp.zeros((n * max_rounds,), _I),)    # dstart, (query, bucket)
+    else:
+        arenas = (jnp.full((pool_cap,), _I(n)), jnp.zeros((pool_cap,), _I))
     idx = jnp.arange(n, dtype=_I)
     j0 = jnp.where(active, bidx, -1)
 
     def cond(st):
-        r, j, p, qa, ra = st
+        r, j = st[0], st[1]
         return jnp.logical_and(r < max_rounds, jnp.any(j >= 0))
 
     def body(st):
-        r, j, p, qa, ra = st
+        r, j, p = st[:3]
+        arenas = st[3:]
         act = j >= 0
         jc = jnp.clip(j, 0, sizes.shape[0] - 1)
         bsize = sizes[jc]
         base = cum[jc]                                  # values before bucket j
         has_link = j > 0
         data_start = p.astype(_I) + has_link.astype(_I)
-        valid = jnp.minimum(counts - base, bsize)       # tail partially filled
-        maxv = jnp.max(jnp.where(act, valid, 0))
 
-        def ccond(cst):
-            cpos, qa, ra = cst
-            return cpos * chunk < maxv
+        if dense:
+            dpos = jnp.where(act, idx * max_rounds + jc, n * max_rounds)
+            arenas = (arenas[0].at[dpos].set(data_start, mode="drop"),)
+        else:
+            valid = jnp.minimum(counts - base, bsize)   # tail partially filled
+            maxv = jnp.max(jnp.where(act, valid, 0))
 
-        def cbody(cst):
-            cpos, qa, ra = cst
-            lanes = cpos * chunk + lanes_c              # (chunk,)
-            gidx = data_start[:, None] + lanes[None, :]
-            ok = (lanes[None, :] < valid[:, None]) & act[:, None]
-            slot = jnp.where(ok, gidx, pool_cap).reshape(-1)
-            qv = jnp.broadcast_to(idx[:, None], gidx.shape).reshape(-1)
-            rv = (base[:, None] + lanes[None, :]).reshape(-1)
-            qa = qa.at[slot].set(qv, mode="drop")
-            ra = ra.at[slot].set(rv, mode="drop")
-            return cpos + 1, qa, ra
+            def ccond(cst):
+                return cst[0] * chunk < maxv
 
-        _, qa, ra = jax.lax.while_loop(ccond, cbody,
-                                       (jnp.zeros((), _I), qa, ra))
+            def cbody(cst):
+                cpos = cst[0]
+                lanes = cpos * chunk + lanes_c          # (chunk,)
+                gidx = data_start[:, None] + lanes[None, :]
+                ok = (lanes[None, :] < valid[:, None]) & act[:, None]
+                rv = base[:, None] + lanes[None, :]
+                slot = jnp.where(ok, gidx, pool_cap).reshape(-1)
+                qv = jnp.broadcast_to(idx[:, None], gidx.shape).reshape(-1)
+                qa = cst[1].at[slot].set(qv, mode="drop")
+                ra = cst[2].at[slot].set(rv.reshape(-1), mode="drop")
+                return cpos + 1, qa, ra
+
+            cres = jax.lax.while_loop(ccond, cbody,
+                                      (jnp.zeros((), _I),) + arenas)
+            arenas = cres[1:]
         plink = table.pool[jnp.clip(p.astype(_I), 0, pool_cap - 1)]
         p = jnp.where(act & has_link, plink, p)
         j = jnp.where(act, j - 1, j)
-        return r + 1, j, p, qa, ra
+        return (r + 1, j, p) + arenas
 
-    _, _, _, qa, ra = jax.lax.while_loop(
-        cond, body, (jnp.zeros((), _I), j0, ptr, qa, ra))
-    return qa, ra
+    res = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), _I), j0, ptr) + arenas)
+    if not dense:
+        return res[3], res[4]
+    dstart = res[3]
+    # one gather builds the dense slot list: position -> (rep, rank) ->
+    # (bucket, lane) -> pool slot.  Positions past the live total read
+    # garbage that only the emit-side valid mask ever sees.
+    cc = jnp.cumsum(jnp.where(active, counts, 0))       # rep segment ends
+    d = jnp.arange(dense_cap, dtype=_I)
+    seg = jnp.clip(jnp.searchsorted(cc, d, side="right").astype(_I),
+                   0, max(n - 1, 0))
+    rank = d - rep_base[seg]
+    b = jnp.clip(jnp.searchsorted(cum, rank, side="right").astype(_I) - 1,
+                 0, max_rounds - 1)
+    return dstart[jnp.clip(seg * max_rounds + b, 0, n * max_rounds - 1)] \
+        + (rank - cum[b])
 
 
 def retrieve_all(table: BucketListHashTable, keys, out_capacity: int,
@@ -635,10 +672,13 @@ def _retrieve_fused(table: BucketListHashTable, keys, out_capacity: int,
         return (jnp.zeros((out_capacity,), _U), jnp.zeros((1,), _I),
                 jnp.zeros((0,), _I))
     is_rep, rep_of, found, ptr, rcnt, bidx, counts = _handle_probe(table, keys)
-    qa, ra = chain_arena(table, found, ptr, rcnt, bidx)
-    out, offsets, counts = bulk_retrieve._emit(
+    rep_base = bulk_retrieve.rep_offsets(is_rep, rcnt)
+    dcap = bulk_retrieve.dense_capacity(table.pool_capacity, out_capacity)
+    rd = chain_arena(table, found, ptr, rcnt, bidx,
+                     rep_base=rep_base, dense_cap=dcap)
+    out, offsets, counts = bulk_retrieve._emit_dense(
         lambda s: table.pool[s][:, None], table.pool_capacity, out_capacity,
-        counts, is_rep, rep_of, rcnt, qa, ra)
+        counts, rep_of, rep_base, rd)
     return out[:, 0], offsets, counts
 
 

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compat
 from repro.core import probing
 from repro.core.common import (
     EMPTY_KEY,
@@ -225,11 +226,29 @@ def _sort_batch(keys, mask, payload_cols):
     within a live group elements keep batch order, so "first live
     occurrence" and "last writer" are positional.  Returns the sorted
     (masked_flag, key_words, orig_idx, payload_cols) tuple.
+
+    **Packed u64 lane**: two-word keys (u64 two-plane and composite kw=2)
+    fuse their planes into one ``plane0 << 32 | plane1`` sort word when
+    XLA sorts genuine uint64 on this config (``compat.supports_u64_sort``
+    — requires x64), cutting the comparator from 4 sort keys to 3.  The
+    packed word compares exactly like the (plane0, plane1) lexicographic
+    pair, and the planes are split back out of the sorted word, so the
+    group structure and every downstream output are bit-identical to the
+    two-plane path (asserted by ``tests/test_packed_sort.py``).
     """
     n = mask.shape[0]
     flag = (~mask).astype(_U)
     idx = jnp.arange(n, dtype=_U)
     kw = keys.shape[1]
+    if kw == 2 and compat.supports_u64_sort():
+        u64 = jnp.uint64
+        word = (keys[:, 0].astype(u64) << u64(32)) | keys[:, 1].astype(u64)
+        out = jax.lax.sort(tuple([flag, word, idx] + list(payload_cols)),
+                           num_keys=3)
+        sw = out[1]
+        skeys = jnp.stack([(sw >> u64(32)).astype(_U),
+                           (sw & u64(0xFFFFFFFF)).astype(_U)], axis=1)
+        return out[0], skeys, out[2], out[3:]
     ops = [flag] + [keys[:, w] for w in range(kw)] + [idx] + list(payload_cols)
     out = jax.lax.sort(tuple(ops), num_keys=kw + 2)
     return out[0], jnp.stack(out[1:1 + kw], axis=1), out[1 + kw], out[2 + kw:]

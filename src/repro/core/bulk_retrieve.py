@@ -258,6 +258,27 @@ def _fan_out(rcnt, rep_of, live, n):
     return jnp.where(live, rcnt[safe], 0)
 
 
+def rep_offsets(is_rep, rcnt):
+    """Representative-dense base offsets, in batch order of representatives:
+    ``rep_base[i]`` is where representative i's value segment starts in the
+    dense slot list (garbage for non-representatives, never read)."""
+    repc = jnp.where(is_rep, rcnt, 0)
+    return jnp.cumsum(repc) - repc
+
+
+def dense_capacity(cap, out_capacity) -> int:
+    """Size of the representative-dense slot list.
+
+    ``min(cap, out_capacity)`` suffices: every dense position a valid
+    output element reads satisfies ``gpos <= j < out_capacity`` (each
+    representative counted in ``rep_base`` has its first occurrence — and
+    hence at least one full segment — before any query that reads it), and
+    is also ``< cap`` (one slot per distinct stored value).  Writes past
+    the truncation drop; truncated reads are zeroed by the valid mask.
+    """
+    return min(cap, max(int(out_capacity), 1))
+
+
 def _emit(arena_values, cap, out_capacity, counts, is_rep, rep_of, rcnt,
           qarena, rank_arena):
     """Pack the walk's arena into the prefix-sum output layout.
@@ -268,29 +289,45 @@ def _emit(arena_values, cap, out_capacity, counts, is_rep, rep_of, rcnt,
     past the true total when ``out_capacity`` truncates — stay zero,
     matching the reference's drop-scatter semantics bit for bit.
 
+    The dense list is ``dense_capacity``-sized, NOT arena-sized: the
+    scatter still reads the (cap,) arena once, but its target (and the
+    whole downstream gather chain) shrinks to the output's own scale —
+    the fix for pool-heavy stores whose arena dwarfs the batch.
+
     ``arena_values`` is the store's slot-arena hook (``slots -> (m, vw)``,
     cf. ``layouts.StoreOps.arena_values``) and ``cap`` its capacity: the
     open-addressing tables expose row*W+lane slot ids, the bucket-list
     table its value pool — either store shape rides this one compaction.
     """
     n = rep_of.shape[0]
-    offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
-    # representative-dense base offsets, in batch order of representatives
-    repc = jnp.where(is_rep, rcnt, 0)
-    rep_base = jnp.cumsum(repc) - repc
+    rep_base = rep_offsets(is_rep, rcnt)
+    dcap = dense_capacity(cap, out_capacity)
     okslot = qarena < n
     safe_q = jnp.clip(qarena, 0, max(n - 1, 0))
-    pos = jnp.where(okslot, rep_base[safe_q] + rank_arena, cap)
-    rep_dense = jnp.full((cap,), cap, _I).at[pos].set(
+    pos = jnp.where(okslot, rep_base[safe_q] + rank_arena, dcap)
+    rep_dense = jnp.zeros((dcap,), _I).at[pos].set(
         jnp.arange(cap, dtype=_I), mode="drop")
-    # gather into the query layout
+    return _emit_dense(arena_values, cap, out_capacity, counts, rep_of,
+                       rep_base, rep_dense)
+
+
+def _emit_dense(arena_values, cap, out_capacity, counts, rep_of, rep_base,
+                rep_dense):
+    """Gather half of ``_emit``: fan a representative-dense slot list out
+    into every query's prefix-sum segment.  ``rep_dense`` holds flat slot
+    ids at ``rep_base[rep] + rank`` (walk order) — built either by
+    ``_emit``'s arena scatter or stamped directly by a walk that knows its
+    ranks up front (``bucket_list.chain_arena`` dense mode)."""
+    n = rep_of.shape[0]
+    dcap = rep_dense.shape[0]
+    offsets = jnp.concatenate([jnp.zeros((1,), _I), jnp.cumsum(counts)])
     j = jnp.arange(out_capacity, dtype=_I)
     seg = jnp.searchsorted(offsets[1:], j, side="right").astype(_I)
     segc = jnp.clip(seg, 0, max(n - 1, 0))
     local = j - offsets[segc]
     valid = j < offsets[n]
     gpos = jnp.clip(rep_base[jnp.clip(rep_of[segc], 0, max(n - 1, 0))] + local,
-                    0, cap - 1)
+                    0, dcap - 1)
     slot = jnp.clip(rep_dense[gpos], 0, cap - 1)
     svals = arena_values(slot)                              # (out_capacity, vw)
     out = jnp.where(valid[:, None], svals, 0)

@@ -21,6 +21,26 @@ import inspect
 import jax
 
 
+def supports_u64_sort() -> bool:
+    """True when XLA sorts *genuine* uint64 operands on this config.
+
+    jax's default (x64-disabled) config silently canonicalizes uint64
+    arrays down to uint32, which would corrupt a packed two-plane sort
+    word — so the check is on the **effective** dtype, not the jax
+    version: ``canonicalize_dtype(uint64)`` only survives as uint64 when
+    ``jax_enable_x64`` is on (globally or via the
+    ``jax.experimental.enable_x64`` context).  Evaluated at trace time on
+    every call (it is one dict lookup) because the x64 config can toggle
+    mid-process; jit caches are keyed on that config, so a flip retraces
+    into the matching lane.
+    """
+    import numpy as np
+    try:
+        return jax.dtypes.canonicalize_dtype(np.uint64) == np.dtype("uint64")
+    except Exception:
+        return False
+
+
 def axis_size_compat(axis) -> int:
     """Static mesh-axis size inside shard_map, across jax versions
     (``lax.axis_size`` is recent; ``psum(1, axis)`` constant-folds)."""

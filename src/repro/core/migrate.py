@@ -262,6 +262,33 @@ def _migrate_bucket(table, new_key_capacity, new_pool_capacity):
     return fresh, total
 
 
+def compact_in_graph(table):
+    """Same-shape tombstone compaction, traceable under jit/scan/cond.
+
+    ``_migrate_single`` is pure jnp end-to-end: the sweep reads the slot
+    arena, ``_fresh_like_single`` recreates an *identical geometry* store
+    (``table_geometry`` is idempotent on an existing prime row count) and
+    the bulk insert rebuilds the live set — so input and output pytrees
+    have the same treedef and shapes, which is exactly what ``lax.cond``
+    branches and ``lax.scan`` carries require.  The streaming engine
+    (``repro.data.stream``) invokes it under an in-graph tombstone-density
+    predicate, keeping the whole ingestion loop one compilation.
+
+    Differences from host-side :func:`compact`: no REGISTRY counters (the
+    registry is host state; the stream carry counts compactions in its
+    own ``StreamCounters``), no migration guard (``_check_migration``
+    auto-skips under tracing; the stream parity gates cover it), and
+    single-value/counting tables only — the shapes of a bucket-list pool
+    repack depend on data, so that path stays host-side.
+    """
+    if isinstance(table, (bl.BucketListHashTable, mv.MultiValueHashTable)):
+        raise TypeError("compact_in_graph supports single-value/counting "
+                        "tables only; use host-side compact() for "
+                        "multi-value and bucket-list tables")
+    fresh, _ = _migrate_single(table, table.capacity)
+    return fresh
+
+
 # ---------------------------------------------------------------------------
 # public migration API
 # ---------------------------------------------------------------------------

@@ -21,6 +21,7 @@ uint64.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -466,3 +467,16 @@ def for_each(table: MultiValueHashTable, keys, fn: Callable, max_values: int):
     per_key_vals = vals[idx]                                      # (n, max_values, vw)
     return jax.vmap(lambda k, vs, ms: jax.vmap(lambda v, m: fn(k, v, m))(vs, ms))(
         keys_n, per_key_vals, valid)
+
+
+# ---------------------------------------------------------------------------
+# donation-safe jitted entry point (streaming/serving hot paths)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def insert_donated(table: MultiValueHashTable, keys, values, mask=None):
+    """``insert`` jitted with the table argument DONATED (buffers aliased
+    input->output, no per-call arena copy).  The caller's table is
+    consumed — rebind the result.  See
+    ``single_value.insert_donated``."""
+    return insert(table, keys, values, mask)

@@ -202,5 +202,6 @@ def vote_any(mask: jax.Array) -> jax.Array:
 
 
 def vote_count(mask: jax.Array) -> jax.Array:
-    """Population count over the window lanes (multi-value counting pass)."""
-    return jnp.sum(mask.astype(jnp.int32), axis=-1)
+    """Population count over the window lanes (multi-value counting pass).
+    Pinned to i32 (bare integer sums promote to i64 under x64)."""
+    return jnp.sum(mask, axis=-1, dtype=jnp.int32)

@@ -672,3 +672,25 @@ def update_values(table: SingleValueHashTable, keys, update_fn: Callable,
         return ntable, status, metrics.bolt_on_stats(ntable, keys,
                                                      status=status, mask=mask)
     return ntable, status
+
+
+# ---------------------------------------------------------------------------
+# donation-safe jitted entry points (streaming/serving hot paths)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def insert_donated(table: SingleValueHashTable, keys, values, mask=None):
+    """``insert`` jitted with the table argument DONATED: XLA aliases the
+    store buffers input->output instead of copying a table-sized arena
+    per call.  The caller's ``table`` is consumed — rebind the result
+    (``table, st = sv.insert_donated(table, ...)``), exactly like a scan
+    carry.  One compilation per (geometry, batch shape); used by the
+    sustained-traffic serve loop (``serving.serve_loop``) and audited via
+    ``launch.hlo_census.input_output_aliases``."""
+    return insert(table, keys, values, mask)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def erase_donated(table: SingleValueHashTable, keys, mask=None):
+    """``erase`` with the table donated — see ``insert_donated``."""
+    return erase(table, keys, mask)

@@ -1,0 +1,345 @@
+"""Single-compilation streaming ingestion: donated chunked scan pipeline.
+
+The per-batch pipeline (``pipeline.relational_stage``) re-enters Python
+between batches: every chunk pays dispatch for each stage (dedup insert,
+watchlist join, group-by aggregate), and sliding-window forget plus
+tombstone compaction are extra host round-trips.  This module restructures
+that hot path as ONE compiled program:
+
+- **The carry is the table.**  ``StreamState`` is a pytree carrying the
+  dedup table, the sliding-window fingerprint ring, the chunk cursor and
+  in-graph ``obs.metrics.StreamCounters``; ``stream_scan`` threads it
+  through ``jax.lax.scan`` over a fixed-shape ``(n_chunks, chunk_batch,
+  seq_len)`` token block.  One trace, one compilation, zero per-chunk
+  re-entry.
+- **Donation.**  Both entry points (``stream_scan`` and the single-step
+  ``stream_step``) donate the state argument, so XLA aliases the table
+  buffers input->output instead of copying a table-sized arena per call —
+  ``launch.hlo_census.input_output_aliases`` reads the aliasing back out
+  of the compiled HLO and the stream tests assert it.
+- **In-graph compaction.**  Forget-churn tombstones the dedup table;
+  rather than breaking the stream to call host-side ``migrate.compact``,
+  every ``compact_every``-th chunk evaluates a tombstone-density
+  predicate from ``obs.metrics.slot_stats`` and fires
+  ``migrate.compact_in_graph`` under ``lax.cond`` — a same-shape
+  sweep+rebuild, so the scan carry structure is untouched.
+
+Chunk semantics per step, in order (mirrored 1:1 — same primitive ops,
+same order — by the eager ``reference_run``, so streaming output is
+bit-exact against the per-batch pipeline, including across compaction
+boundaries; compaction only relocates live slots, never changes the live
+set):
+
+1. forget the fingerprints ingested ``forget_after`` chunks ago
+   (``sv.erase`` on the ring slot about to be overwritten);
+2. dedup: fingerprint each sequence, count-insert, keep first
+   occurrences (``STATUS_INSERTED``) — identical to
+   ``pipeline.dedup_filter``;
+3. join the kept token stream against the prebuilt watchlist
+   (``join.probe``, inner) and group-by count hits per sequence —
+   identical to ``pipeline.relational_stage`` stages 2-3;
+4. record the chunk's fingerprints in the ring;
+5. maybe compact (``lax.cond`` on the density predicate);
+6. accumulate counters.
+
+The host driver ``stream`` runs the jitted step with one-chunk
+``device_put`` lookahead (double buffering): while the device executes
+chunk i, chunk i+1's tokens are already being staged, so host transfer
+hides under compute.  See docs/STREAMING.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counting
+from repro.core import migrate
+from repro.core import single_value as sv
+from repro.core.common import STATUS_INSERTED, register_struct, static_field
+from repro.data import pipeline
+from repro.obs import metrics
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# config + carry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static shape/policy knobs of a stream (hashable: rides as the
+    carry's aux data, so two configs compile separately and equal configs
+    share one cache entry).
+
+    - ``chunk_batch`` x ``seq_len``: the fixed chunk shape.  Every chunk
+      must match; the driver pads or rejects ragged tails.
+    - ``dedup_capacity``: slots in the counting dedup table.
+    - ``pair_capacity``: join output bound per chunk (default
+      ``chunk_batch * seq_len`` — safe: the build side is deduplicated,
+      so each stream position matches at most once).
+    - ``forget_after``: sliding dedup window in chunks (0 = never forget;
+      the ring then holds one unused row so carry shapes stay static).
+    - ``compact_every``: evaluate the compaction predicate every K chunks
+      (0 = never).  The predicate itself is in-graph: tombstones >
+      ``max_tombstone_density`` * capacity.
+    """
+    seq_len: int
+    chunk_batch: int
+    dedup_capacity: int
+    pair_capacity: int | None = None
+    forget_after: int = 0
+    compact_every: int = 0
+    max_tombstone_density: float = 0.25
+
+    @property
+    def pairs(self) -> int:
+        return (self.pair_capacity if self.pair_capacity is not None
+                else self.chunk_batch * self.seq_len)
+
+    @property
+    def ring_len(self) -> int:
+        return max(self.forget_after, 1)
+
+
+@register_struct
+@dataclasses.dataclass
+class StreamState:
+    """The scan carry: table + ring + cursor + counters, cfg static."""
+    table: counting.CountingHashTable
+    history: jax.Array               # (ring_len, chunk_batch) u32 fps
+    chunk_idx: jax.Array             # i32 — chunks ingested so far
+    counters: metrics.StreamCounters
+    cfg: StreamConfig = static_field()
+
+
+def create_state(cfg: StreamConfig, *, seed: int | None = None) -> StreamState:
+    """Fresh stream: empty dedup table, zeroed ring and counters."""
+    kw = {} if seed is None else {"seed": seed}
+    return StreamState(
+        table=counting.create(cfg.dedup_capacity, **kw),
+        history=jnp.zeros((cfg.ring_len, cfg.chunk_batch), _U),
+        chunk_idx=jnp.zeros((), _I),
+        counters=metrics.stream_counters_empty(),
+        cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# one chunk, fully traceable
+# ---------------------------------------------------------------------------
+
+def _tombstone_limit(cfg: StreamConfig, table) -> int:
+    return int(cfg.max_tombstone_density * table.capacity)
+
+
+def pipeline_step(state: StreamState, watchlist, chunk: jax.Array):
+    """Ingest one ``(chunk_batch, seq_len)`` token chunk.
+
+    Returns ``(state, (keep, hits))`` — ``keep`` (chunk_batch,) bool,
+    ``hits`` (chunk_batch,) i32 — exactly ``relational_stage``'s per-batch
+    outputs.  Pure jnp/lax end-to-end: scan body and jitted step share
+    this one definition.  ``watchlist`` is a prebuilt
+    ``pipeline.build_watchlist`` table (probe-only on the hot path).
+    """
+    from repro.relational import groupby, join
+
+    cfg = state.cfg
+    table = state.table
+    if cfg.forget_after > 0:
+        cursor = state.chunk_idx % _I(cfg.ring_len)
+        wrapped = state.chunk_idx >= _I(cfg.forget_after)
+    else:
+        cursor, wrapped = _I(0), jnp.zeros((), bool)
+
+    # 1. forget: erase the expired ring row (a no-op mask until the ring
+    # wraps — the zeros it holds before then are never erased)
+    expired = state.history[cursor]
+    forget_mask = jnp.broadcast_to(wrapped, (cfg.chunk_batch,))
+    table, forgotten = sv.erase(table, expired, mask=forget_mask)
+
+    # 2. dedup (== pipeline.dedup_filter: count-insert, keep fresh)
+    fps = pipeline.sequence_fingerprints(chunk)
+    table, status = counting.insert(table, fps)
+    keep = status == STATUS_INSERTED
+
+    # 3. join + aggregate (== relational_stage stages 2-3)
+    flat = chunk.reshape(-1).astype(_U)
+    stream_mask = jnp.broadcast_to(keep[:, None], chunk.shape).reshape(-1)
+    res = join.probe(watchlist, flat, cfg.pairs, "inner", mask=stream_mask)
+    seq_of_pair = jnp.where(res.valid, res.probe_idx // cfg.seq_len, 0)
+    gt = groupby.create(groupby.capacity_for(cfg.chunk_batch))
+    gt, _ = groupby.update(gt, "count", seq_of_pair.astype(_U),
+                           mask=res.valid)
+    hits, _ = groupby.lookup(gt, "count",
+                             jnp.arange(cfg.chunk_batch, dtype=_U))
+    hits = hits.astype(_I)
+
+    # 4. ring update
+    history = state.history.at[cursor].set(fps)
+
+    # 5. in-graph compaction: every compact_every-th chunk, fire iff
+    # tombstone density crossed the threshold — same-shape sweep+rebuild,
+    # so both cond branches carry the identical pytree structure
+    live, tomb, _ = metrics.slot_stats(table.ops, table.store)
+    if cfg.compact_every > 0:
+        due = (state.chunk_idx % _I(cfg.compact_every)
+               == _I(cfg.compact_every - 1))
+        fire = due & (tomb > _I(_tombstone_limit(cfg, table)))
+        table = jax.lax.cond(fire, migrate.compact_in_graph,
+                             lambda t: t, table)
+        live, tomb, _ = metrics.slot_stats(table.ops, table.store)
+    else:
+        fire = jnp.zeros((), bool)
+
+    # 6. counters
+    c = state.counters
+    counters = metrics.StreamCounters(
+        chunks=c.chunks + 1,
+        kept=c.kept + jnp.sum(keep, dtype=_I),
+        hits=c.hits + jnp.sum(hits, dtype=_I),
+        erased=c.erased + jnp.sum(forgotten, dtype=_I),
+        compactions=c.compactions + fire.astype(_I),
+        live_slots=live, tombstone_slots=tomb)
+
+    state = StreamState(table=table, history=history,
+                        chunk_idx=state.chunk_idx + 1,
+                        counters=counters, cfg=cfg)
+    return state, (keep, hits)
+
+
+# ---------------------------------------------------------------------------
+# compiled entry points — ONE compilation each, donated carry
+# ---------------------------------------------------------------------------
+
+def _scan_fun(state, watchlist, chunks):
+    def body(st, chunk):
+        return pipeline_step(st, watchlist, chunk)
+    return jax.lax.scan(body, state, chunks)
+
+
+#: whole-stream entry point: ``stream_scan(state, watchlist, chunks)``
+#: with chunks (n_chunks, chunk_batch, seq_len) — one lax.scan, one
+#: compilation per (cfg, shapes), state donated.  Returns
+#: (final_state, (keep (n, cb) bool, hits (n, cb) i32)).
+stream_scan = jax.jit(_scan_fun, donate_argnums=(0,))
+
+#: single-chunk entry point, same body, same donation — for drivers that
+#: interleave ingestion with other host work (the serve loop) and for
+#: per-step latency measurement.  Compiles once per (cfg, shapes).
+stream_step = jax.jit(pipeline_step, donate_argnums=(0,))
+
+
+def compiled_stream_hlo(state: StreamState, watchlist,
+                        chunks: jax.Array) -> str:
+    """Optimized HLO text of the scan program (for
+    ``launch.hlo_census``: aliasing audit, loop census)."""
+    return stream_scan.lower(state, watchlist, chunks) \
+        .compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# host driver: double-buffered step loop
+# ---------------------------------------------------------------------------
+
+def _staged(chunks: Iterable, expect_shape) -> Iterator[jax.Array]:
+    for c in chunks:
+        c = jnp.asarray(c)
+        if tuple(c.shape) != tuple(expect_shape):
+            raise ValueError(f"chunk shape {tuple(c.shape)} != "
+                             f"{tuple(expect_shape)} (fixed-shape stream)")
+        yield jax.device_put(c)
+
+
+def stream(state: StreamState, watchlist, chunks: Iterable,
+           *, tracer=None):
+    """Drive ``stream_step`` over an iterable of token chunks.
+
+    Double buffering: chunk i+1 is ``device_put`` before chunk i's step
+    is awaited, so host staging overlaps device execution (async
+    dispatch).  ``tracer`` (an ``obs.trace.Tracer``) wraps each step in a
+    ``stream.step`` span — spans block on the step's outputs, so they
+    measure true per-chunk latency.  Returns
+    ``(final_state, keep (n, cb), hits (n, cb))``.
+    """
+    cfg = state.cfg
+    it = _staged(chunks, (cfg.chunk_batch, cfg.seq_len))
+    keeps, hitss = [], []
+    pending = next(it, None)
+    while pending is not None:
+        chunk, pending = pending, next(it, None)   # lookahead staged now
+        if tracer is not None:
+            with tracer.span("stream.step"):
+                state, (keep, hits) = stream_step(state, watchlist, chunk)
+                jax.block_until_ready(hits)
+        else:
+            state, (keep, hits) = stream_step(state, watchlist, chunk)
+        keeps.append(keep)
+        hitss.append(hits)
+    if not keeps:
+        z = jnp.zeros((0, cfg.chunk_batch))
+        return state, z.astype(bool), z.astype(_I)
+    return state, jnp.stack(keeps), jnp.stack(hitss)
+
+
+# ---------------------------------------------------------------------------
+# eager per-batch reference (the parity oracle + re-entry baseline)
+# ---------------------------------------------------------------------------
+
+def reference_run(state: StreamState, watchlist, chunks):
+    """Per-batch eager reference: the SAME chunk semantics, driven through
+    the pre-existing per-batch entry points with host re-entry between
+    every stage — ``sv.erase`` forget, ``pipeline.relational_stage``
+    (dedup -> join -> aggregate), host-side compaction predicate +
+    ``migrate.compact``.  Bit-exact against ``stream_scan``/``stream``
+    on every output and every carry leaf (compaction included: both paths
+    run the identical same-shape sweep at the identical chunk
+    boundaries), and the honest "what the code did before" baseline for
+    the fig11 speedup rows.
+    """
+    cfg = state.cfg
+    table = state.table
+    history = jax.device_get(state.history).copy()
+    chunk_idx = int(state.chunk_idx)
+    counters = state.counters
+    keeps, hitss = [], []
+    for chunk in chunks:
+        chunk = jnp.asarray(chunk)
+        cursor = chunk_idx % cfg.ring_len if cfg.forget_after > 0 else 0
+        forget = cfg.forget_after > 0 and chunk_idx >= cfg.forget_after
+        mask = jnp.broadcast_to(jnp.asarray(forget), (cfg.chunk_batch,))
+        table, forgotten = sv.erase(table, jnp.asarray(history[cursor]),
+                                    mask=mask)
+        fps = pipeline.sequence_fingerprints(chunk)
+        table, keep, hits = pipeline.relational_stage(
+            table, chunk, watchlist, pair_capacity=cfg.pairs)
+        history[cursor] = jax.device_get(fps)
+        live, tomb, _ = metrics.slot_stats(table.ops, table.store)
+        fire = False
+        if cfg.compact_every > 0:
+            due = chunk_idx % cfg.compact_every == cfg.compact_every - 1
+            fire = due and int(tomb) > _tombstone_limit(cfg, table)
+            if fire:
+                table = migrate.compact_in_graph(table)
+                live, tomb, _ = metrics.slot_stats(table.ops, table.store)
+        counters = metrics.StreamCounters(
+            chunks=counters.chunks + 1,
+            kept=counters.kept + jnp.sum(keep, dtype=_I),
+            hits=counters.hits + jnp.sum(hits, dtype=_I),
+            erased=counters.erased + jnp.sum(forgotten, dtype=_I),
+            compactions=counters.compactions + _I(int(fire)),
+            live_slots=live, tombstone_slots=tomb)
+        chunk_idx += 1
+        keeps.append(keep)
+        hitss.append(hits)
+    final = StreamState(table=table, history=jnp.asarray(history),
+                        chunk_idx=_I(chunk_idx), counters=counters,
+                        cfg=cfg)
+    if not keeps:
+        z = jnp.zeros((0, cfg.chunk_batch))
+        return final, z.astype(bool), z.astype(_I)
+    return final, jnp.stack(keeps), jnp.stack(hitss)

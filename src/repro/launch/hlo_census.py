@@ -100,6 +100,46 @@ class Census:
 
 _LINE_START_RE = re.compile(r"^\s*(?:ROOT )?%[\w.\-]+ = ")
 
+# ---------------------------------------------------------------------------
+# input/output aliasing (buffer donation audit)
+# ---------------------------------------------------------------------------
+
+#: one alias entry inside the HloModule header's input_output_alias={...}:
+#:   {out_idx}: (param_number, {param_idx}, may-alias|must-alias)
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d, ]*)\}:\s*\((\d+),\s*\{([\d, ]*)\},\s*(may-alias|must-alias)\)")
+
+
+def _idx_tuple(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x.strip())
+
+
+def input_output_aliases(hlo_text: str) -> list[dict]:
+    """Parse the compiled module's ``input_output_alias`` header.
+
+    Buffer donation (``jit(..., donate_argnums=...)``) materializes as
+    alias entries on the ``HloModule`` line — one per donated leaf buffer:
+    ``{output_index}: (param_number, {param_index}, may-alias)``.  Returns
+    one dict per entry: ``output_index`` / ``param_index`` (shape-index
+    tuples into the tupled output/parameter), ``param_number`` and
+    ``kind``.  Empty list == nothing aliased == every "donated" buffer is
+    actually copied — the streaming engine's tests assert this list is
+    non-empty and covers the table carry.
+    """
+    block = ""
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" in line:
+            block = line.split("input_output_alias=", 1)[1]
+            break
+    return [{"output_index": _idx_tuple(o), "param_number": int(p),
+             "param_index": _idx_tuple(pi), "kind": kind}
+            for o, p, pi, kind in _ALIAS_ENTRY_RE.findall(block)]
+
+
+def donated_param_numbers(hlo_text: str) -> set[int]:
+    """Parameter numbers with at least one aliased (donated) buffer."""
+    return {a["param_number"] for a in input_output_aliases(hlo_text)}
+
 
 def _split_computations(text: str) -> dict[str, list[str]]:
     comps: dict[str, list[str]] = {}

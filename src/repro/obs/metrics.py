@@ -111,6 +111,40 @@ def empty() -> TableStats:
         live_slots=z, tombstone_slots=z, load_factor=jnp.zeros((), _F))
 
 
+@register_struct
+@dataclasses.dataclass
+class StreamCounters:
+    """Streaming-ingestion telemetry carried *inside* a ``lax.scan``.
+
+    The streaming engine (``repro.data.stream``) threads one of these
+    through its scan carry, so a whole stream's counters accumulate in
+    the compiled graph — zero host round-trips mid-stream, read once at
+    the end.  All fields are scalar i32 (same dtype under x64, so the
+    carry is stable across the packed-sort lane toggle).
+    """
+    chunks: jax.Array            # chunks processed
+    kept: jax.Array              # sequences surviving dedup
+    hits: jax.Array              # watchlist join hits (aggregated)
+    erased: jax.Array            # fingerprints forgotten (ring expiry)
+    compactions: jax.Array       # in-graph compactions fired
+    live_slots: jax.Array        # dedup-table census after last chunk
+    tombstone_slots: jax.Array   # ditto
+
+    def as_dict(self) -> dict:
+        return {f.name: int(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+
+def stream_counters_empty() -> StreamCounters:
+    # one zeros() call PER field: the stream carry is donated, and two
+    # pytree leaves sharing one buffer make donation reject the call
+    # ("attempt to donate the same buffer twice")
+    z = lambda: jnp.zeros((), _I)
+    return StreamCounters(chunks=z(), kept=z(), hits=z(), erased=z(),
+                          compactions=z(), live_slots=z(),
+                          tombstone_slots=z())
+
+
 def status_hist(status: jax.Array) -> jax.Array:
     """(n,) STATUS_* codes -> (NUM_STATUS,) counts."""
     idx = jnp.clip(status.astype(_I), 0, NUM_STATUS - 1)

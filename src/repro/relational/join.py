@@ -45,6 +45,13 @@ equivalently-packed single-word keys (the fig9 parity gate).  The
 sharded variant hashes ALL key planes for ownership (``exchange.
 owner_of`` folds the planes before ``hash_owner``), so co-partitioning
 stays uniform for composite keys too.
+
+Two-column (kw=2) joins dedup through the general lane's multi-plane
+sort; on x64-enabled configs that sort runs the **packed-u64 lane**
+(``bulk._sort_batch`` + ``compat.supports_u64_sort``): both key planes
+fuse into one uint64 sort word, one comparator key fewer per element on
+the build-dedup and probe-group sorts, bit-identical output either way
+(``tests/test_packed_sort.py``).
 """
 
 from __future__ import annotations

@@ -112,3 +112,77 @@ def generate_traced(model, params, prompts: jax.Array, max_new: int, *,
         last_logits = lg[:, 0]
         toks.append(tok[:, 0])
     return jnp.stack(toks, axis=1), tracer
+
+
+# ---------------------------------------------------------------------------
+# sustained table traffic: mixed insert/lookup/erase under rate pacing
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_table_serve_step():
+    """One serve step of hash-table traffic, single compilation, donated.
+
+    The step upserts a batch, answers a lookup batch and erases a batch
+    against ONE donated table — the store buffers alias input->output
+    (``donate_argnums``), so a steady-state serve loop never copies the
+    table arena.  Fixed batch shapes => the jit caches exactly one
+    executable per table geometry; ``serve_table_traffic`` asserts this
+    (zero retraces after warmup) in-run.  Returns the jitted
+    ``step(table, ins_keys, ins_vals, get_keys, del_keys) ->
+    (table, (status, values, found, erased))``.  Memoized: every caller
+    shares ONE jitted wrapper, so a warmup pass really does pay the
+    compile for all later traffic runs.
+    """
+    from repro.core import single_value as sv
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def table_serve_step(table, ins_keys, ins_vals, get_keys, del_keys):
+        table, status = sv.insert(table, ins_keys, ins_vals)
+        values, found = sv.retrieve(table, get_keys)
+        table, erased = sv.erase(table, del_keys)
+        return table, (status, values, found, erased)
+
+    return table_serve_step
+
+
+def serve_table_traffic(table, traffic, *, rate_hz: float | None = None,
+                        tracer=None):
+    """Drive ``make_table_serve_step`` over a traffic iterable.
+
+    ``traffic`` yields ``(ins_keys, ins_vals, get_keys, del_keys)``
+    batches of fixed shapes.  ``rate_hz`` paces step *starts* to the
+    target rate (open-loop arrivals, the honest way to measure serving
+    latency: a slow step eats into the next slot instead of silently
+    stretching the clock); ``None`` runs closed-loop/back-to-back.  Each
+    step is wrapped in a ``serve.table_step`` span and blocked to
+    completion so p50/p95/p99 (``tracer.percentiles``) are true per-step
+    latencies.  Returns ``(table, tracer, steps)``; raises if the step
+    retraced after the first chunk (the single-compilation contract).
+    """
+    import time
+
+    from repro.obs.trace import Tracer
+
+    if tracer is None:
+        tracer = Tracer()
+    step = make_table_serve_step()
+    period = 1.0 / rate_hz if rate_hz else 0.0
+    next_t = time.perf_counter()
+    steps = 0
+    for batch in traffic:
+        if period:
+            now = time.perf_counter()
+            if now < next_t:
+                time.sleep(next_t - now)
+            next_t += period
+        with tracer.span("serve.table_step", step=steps):
+            table, outs = step(table, *batch)
+            jax.block_until_ready(outs)
+        steps += 1
+        if steps == 1:
+            compilations = step._cache_size()
+        elif step._cache_size() != compilations:
+            raise AssertionError(
+                f"table serve step retraced mid-stream: cache "
+                f"{compilations} -> {step._cache_size()}")
+    return table, tracer, steps
