@@ -1,0 +1,285 @@
+"""Fig. 12 — elastic sharded serving: QPS, bloom filtering, kill/restore.
+
+The elastic service (``repro.serving.elastic``) is the fig6 distributed
+layout run as a *long-lived* process: P simulated shards behind one
+donated serve step, per-shard bloom filters killing absent-key probes
+before the exchange, and ``core.snapshot`` checkpoints underneath.
+This figure measures the serving story end to end:
+
+- ``fig12.serve.traffic`` — sustained mixed insert/lookup/erase traffic
+  paced open-loop at a target QPS over 8 shards; rows carry
+  ``p50_step_us``/``p99_step_us``, ``qps_target``/``qps_achieved`` and
+  the in-graph bloom counters (``bloom_probes``/``bloom_skips``/
+  ``bloom_false_positives``), retrace-free by construction.
+- ``fig12.lookup.bloom``  — the filter in isolation: an all-absent
+  lookup batch, ``skip_frac_absent`` gated >= 0.5 (a filter miss is
+  proof of absence, so those queries never consume exchange slots).
+- ``fig12.serve.restore`` — the kill -> restore leg: checkpoint through
+  the async ``SnapshotWriter`` mid-run, keep serving (post-checkpoint
+  mutations must not leak), drop the service, ``elastic.load`` — timed,
+  with bit-exact shard-plane parity against the checkpoint-time state.
+- ``fig12.serve.parity``  — resume serving on the restored table; the
+  row records post-restore live count, lookup parity over the live set
+  and the resumed leg's step latency percentiles.
+- ``fig12.serve.reshard`` — restore-time elasticity: the same live set
+  re-partitioned onto 2x the shards, ownership-exact (``owner_of``
+  replayed, ``check_ownership`` asserts).
+- ``fig12.bloom.rebuild`` — the compaction hook: erase churn leaves
+  filters stale (permissive erase), ``compact_all`` rebuilds them from
+  the live set; the row records the advertised-dead fraction before and
+  after.
+
+Smoke gates (``REPRO_BENCH_SMOKE=1``): bloom_skips > 0 under traffic,
+skip_frac_absent >= 0.5, post-restore bit-exact parity + full live-set
+lookup parity, ownership exactness after reshard, staleness drop after
+rebuild, zero retraces, zero exchange overflow.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time as _time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import fmt_extras, row, time_stats, timing_extras
+from repro.core import snapshot
+from repro.obs.registry import Registry
+from repro.obs.trace import Tracer
+from repro.serving import elastic
+
+_SMOKE = dict(num_shards=8, capacity_per_shard=2048, batch=256,
+              serve_steps=6, resume_steps=3, rate_hz=25.0,
+              bloom_bits_per_key=16, slack=2.5)
+_FULL = dict(num_shards=8, capacity_per_shard=1 << 14, batch=1024,
+             serve_steps=16, resume_steps=6, rate_hz=10.0,
+             bloom_bits_per_key=16, slack=2.5)
+
+#: key universes — queries drawn from _ABSENT_BASE are never inserted,
+#: so any admitted one is a bloom false positive by construction
+_PRESENT_SPAN = 1 << 20
+_ABSENT_BASE = 1 << 24
+
+
+def _cfg():
+    return _SMOKE if os.environ.get("REPRO_BENCH_SMOKE") else _FULL
+
+
+class _TrafficGen:
+    """Deterministic mixed traffic with a python-side parity model.
+
+    Each step: insert ``nb`` fresh keys, look up ``nb`` keys (half drawn
+    from the inserted-so-far set, half from the disjoint absent
+    universe), erase ``nb // 4`` previously-inserted keys.  ``live``
+    tracks inserted-minus-erased for the restore-parity legs.
+    """
+
+    def __init__(self, nb: int, seed: int):
+        self.nb = nb
+        self.rng = np.random.default_rng(seed)
+        self.live: set[int] = set()
+
+    def batches(self, steps: int):
+        nb, rng = self.nb, self.rng
+        for _ in range(steps):
+            ins = rng.integers(1, _PRESENT_SPAN, nb).astype(np.uint32)
+            vals = rng.integers(0, 2**31, nb).astype(np.uint32)
+            pool = np.fromiter(self.live, np.uint32) if self.live else ins
+            present = rng.choice(pool, nb // 2)
+            absent = rng.integers(_ABSENT_BASE, _ABSENT_BASE + _PRESENT_SPAN,
+                                  nb - nb // 2).astype(np.uint32)
+            get = np.concatenate([present, absent])
+            dels = rng.choice(pool, nb // 4)
+            self.live.update(int(k) for k in ins)
+            self.live.difference_update(int(k) for k in dels)
+            yield (jnp.asarray(ins), jnp.asarray(vals),
+                   jnp.asarray(get), jnp.asarray(dels))
+
+
+def _live_lookup_parity(st, live: set[int], what: str) -> None:
+    """Every key the python model says is live must be found (chunked)."""
+    keys = np.fromiter(live, np.uint32)
+    jl = jax.jit(elastic.lookup)
+    chunk = 4096
+    # pad by cycling the WHOLE live set: padding with one repeated key
+    # would route every pad slot to a single shard and overflow the
+    # padded exchange (cap assumes roughly uniform owners)
+    n_chunks = max(1, -(-len(keys) // chunk))
+    padded = np.resize(keys, n_chunks * chunk)
+    for lo in range(0, len(padded), chunk):
+        part = padded[lo:lo + chunk]
+        _, found, stats = jl(st, jnp.asarray(part))
+        if int(stats["overflow"]):
+            raise AssertionError(f"{what}: lookup exchange overflowed")
+        if not bool(jnp.all(found)):
+            raise AssertionError(
+                f"{what}: {int(jnp.sum(~found))} live keys missing "
+                "after restore — parity broken")
+
+
+def run(out=print):
+    p = _cfg()
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    nb, ns = p["batch"], p["serve_steps"]
+    ops_per_step = 2 * nb + nb // 4
+    st = elastic.create(p["num_shards"], p["capacity_per_shard"],
+                        bloom_bits_per_key=p["bloom_bits_per_key"],
+                        slack=p["slack"])
+
+    # warmup the one serve-step compile on a throwaway same-geometry table
+    warm = elastic.create(p["num_shards"], p["capacity_per_shard"],
+                          bloom_bits_per_key=p["bloom_bits_per_key"],
+                          slack=p["slack"])
+    gen_w = _TrafficGen(nb, seed=99)
+    warm, _, _, _ = elastic.serve_traffic(warm, gen_w.batches(1))
+    del warm
+
+    # ---- sustained traffic at target QPS --------------------------------
+    gen = _TrafficGen(nb, seed=0)
+    tracer = Tracer(registry=Registry())
+    t0 = _time.perf_counter()
+    st, tracer, steps, totals = elastic.serve_traffic(
+        st, gen.batches(ns), rate_hz=p["rate_hz"], tracer=tracer)
+    wall = _time.perf_counter() - t0
+    pct = tracer.percentiles("elastic.serve_step")
+    if smoke and totals["skips"] <= 0:
+        raise AssertionError("bloom filter never skipped a probe under "
+                             "mixed traffic — front-end not wired")
+    if pct["p99_s"] <= 0:
+        raise AssertionError("no p99 recorded for the serve leg")
+    qps_target = p["rate_hz"] * ops_per_step
+    out(row("fig12.serve.traffic", pct["sum_s"], steps * ops_per_step,
+            extra=fmt_extras(steps_per_s=steps / pct["sum_s"],
+                             p50_step_us=pct["p50_s"] * 1e6,
+                             p99_step_us=pct["p99_s"] * 1e6,
+                             qps_target=qps_target,
+                             qps_achieved=steps * ops_per_step / wall,
+                             bloom_probes=totals["probes"],
+                             bloom_skips=totals["skips"],
+                             bloom_false_positives=totals["false_positives"],
+                             hits=totals["hits"], retraces=0)))
+
+    # ---- the filter in isolation: absent-key batch ----------------------
+    rng = np.random.default_rng(7)
+    absent = jnp.asarray(rng.integers(
+        _ABSENT_BASE, _ABSENT_BASE + _PRESENT_SPAN, nb).astype(np.uint32))
+    jl = jax.jit(elastic.lookup)
+    _, found_a, stats_a = jl(st, absent)          # warm + gate
+    skip_frac = float(stats_a["skips"]) / float(stats_a["probes"])
+    if skip_frac < 0.5:
+        raise AssertionError(
+            f"bloom skipped only {skip_frac:.2%} of absent-key probes "
+            "(>= 50% required) — filters stale or mis-wired")
+    if bool(jnp.any(found_a)):
+        raise AssertionError("absent key reported found")
+    ts = time_stats(lambda: jl(st, absent)[2]["skips"])
+    out(row("fig12.lookup.bloom", ts["seconds"], nb,
+            extra=fmt_extras(skip_frac_absent=skip_frac,
+                             false_positives=int(stats_a["false_positives"]))
+            + "," + timing_extras(ts)))
+
+    # ---- kill -> restore: async checkpoint, mutate, drop, reload --------
+    ckpt = tempfile.mkdtemp(prefix="fig12_ckpt_")
+    try:
+        t0 = _time.perf_counter()
+        with snapshot.SnapshotWriter() as w:
+            elastic.save(st, ckpt, writer=w)
+            w.flush()
+        save_s = _time.perf_counter() - t0
+        live_at_ckpt = set(gen.live)
+        ref_leaves = jax.device_get(jax.tree_util.tree_leaves(st.shards))
+        count_at_ckpt = int(elastic.count(st))
+
+        # keep serving AFTER the checkpoint — these mutations must not
+        # leak into the restored state (the crash-consistency contract)
+        st, _, _, _ = elastic.serve_traffic(st, gen.batches(2))
+        del st  # the kill
+
+        t0 = _time.perf_counter()
+        st2 = elastic.load(ckpt)
+        restore_s = _time.perf_counter() - t0
+        got_leaves = jax.device_get(jax.tree_util.tree_leaves(st2.shards))
+        for a, b in zip(ref_leaves, got_leaves):
+            if a.dtype != b.dtype or a.shape != b.shape \
+                    or not np.array_equal(a, b):
+                raise AssertionError("restored shard plane is not bit-exact "
+                                     "against the checkpoint-time state")
+        if int(elastic.count(st2)) != count_at_ckpt:
+            raise AssertionError("restored live count drifted")
+        out(row("fig12.serve.restore", restore_s, count_at_ckpt,
+                extra=fmt_extras(save_s=save_s, parity=1,
+                                 shards=st2.num_shards,
+                                 live_size=count_at_ckpt)))
+
+        # ---- resume on the restored table + full live-set parity --------
+        _live_lookup_parity(st2, live_at_ckpt, "fig12.serve.parity")
+        gen2 = _TrafficGen(nb, seed=1)
+        gen2.live = set(live_at_ckpt)
+        tracer2 = Tracer(registry=Registry())
+        st2, tracer2, rsteps, rtotals = elastic.serve_traffic(
+            st2, gen2.batches(p["resume_steps"]), rate_hz=p["rate_hz"],
+            tracer=tracer2)
+        rpct = tracer2.percentiles("elastic.serve_step")
+        out(row("fig12.serve.parity", rpct["sum_s"], rsteps * ops_per_step,
+                extra=fmt_extras(parity=1, live_size=count_at_ckpt,
+                                 p50_step_us=rpct["p50_s"] * 1e6,
+                                 p99_step_us=rpct["p99_s"] * 1e6,
+                                 bloom_skips=rtotals["skips"], retraces=0)))
+
+        # ---- elastic restore: 2x the shards, ownership-exact ------------
+        t0 = _time.perf_counter()
+        st4 = elastic.load(ckpt, num_shards=2 * p["num_shards"])
+        reshard_s = _time.perf_counter() - t0
+        elastic.check_ownership(st4)
+        if int(elastic.count(st4)) != count_at_ckpt:
+            raise AssertionError("reshard dropped live entries")
+        out(row("fig12.serve.reshard", reshard_s, count_at_ckpt,
+                extra=fmt_extras(shards_from=p["num_shards"],
+                                 shards_to=2 * p["num_shards"],
+                                 ownership=1, live_size=count_at_ckpt)))
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+    # ---- compaction rebuild: filter staleness recovers ------------------
+    pool = np.fromiter(gen2.live, np.uint32)
+    dead = pool[:min(len(pool) // 2, 4 * nb)]
+    st2, _ = elastic.erase(st2, jnp.asarray(dead))
+    gen2.live.difference_update(int(k) for k in dead)
+
+    def _stale_frac(s):
+        from repro.core import bloom, hashing
+        from repro.core import single_value as sv
+        keys_n = sv.normalize_key_batch(jnp.asarray(dead), s.key_words,
+                                        "keys")
+        words = sv.key_hash_word(keys_n)
+        owners = hashing.hash_owner(words, s.num_shards)
+        admit = bloom.contains_stack(
+            s.filters[0], jnp.stack([f.bits for f in s.filters]),
+            owners, words)
+        return float(jnp.mean(admit.astype(jnp.float32)))
+
+    before = _stale_frac(st2)
+    ts_reb = time_stats(lambda: jax.block_until_ready(
+        jnp.stack([f.bits for f in elastic.compact_all(st2).filters])),
+        warmup=1, iters=2 if smoke else 3)
+    st2 = elastic.compact_all(st2)
+    after = _stale_frac(st2)
+    if smoke and not after < before:
+        raise AssertionError(
+            f"filter staleness did not drop over rebuild "
+            f"({before:.2f} -> {after:.2f})")
+    _live_lookup_parity(st2, gen2.live, "fig12.bloom.rebuild")
+    out(row("fig12.bloom.rebuild", ts_reb["seconds"],
+            int(elastic.count(st2)),
+            extra=fmt_extras(stale_frac_before=before,
+                             stale_frac_after=after,
+                             live_size=int(elastic.count(st2)))
+            + "," + timing_extras(ts_reb)))
+
+
+if __name__ == "__main__":
+    run()

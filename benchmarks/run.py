@@ -65,7 +65,8 @@ def parse_row(line: str):
 def main(argv=None) -> None:
     from benchmarks import (fig5_single_value, fig6_weak_scaling,
                             fig7_multi_value, fig8_metagenomics,
-                            fig9_relational, fig10_churn, fig11_stream)
+                            fig9_relational, fig10_churn, fig11_stream,
+                            fig12_serve)
     figures = {
         "fig5": fig5_single_value.run,
         "fig6": fig6_weak_scaling.run,
@@ -74,6 +75,7 @@ def main(argv=None) -> None:
         "fig9": fig9_relational.run,
         "fig10": fig10_churn.run,
         "fig11": fig11_stream.run,
+        "fig12": fig12_serve.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="*", choices=sorted(figures),

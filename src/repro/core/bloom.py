@@ -11,6 +11,20 @@ The pure-JAX state is one byte per bit, shaped (num_blocks, block_bits) —
 scatter-max implements OR.  ``pack_words``/``unpack_words`` convert to the
 dense u32-word representation used by the Pallas kernel and by size
 accounting.
+
+**Staleness after erase (the filter contract).**  A bloom filter cannot
+delete: bits are shared between keys, so clearing on erase would create
+false *negatives* for the surviving keys that set the same bits.  The
+contract is therefore one-sided: a key inserted into the filter is
+``contains=True`` forever-until-rebuild (no false negatives, ever), and
+erasing from the backing table leaves the filter *permissive* — the dead
+key keeps advertising until :func:`rebuild_from_table` resweeps the live
+set, which the compaction hook (``serving.elastic.compact_all``) and the
+growth path do.  Between rebuilds, fill fraction only grows and stale
+positives only cost a wasted probe, never a wrong answer.  The sharded
+lookup front-end (``serving/elastic.py``, ``core/distributed.py``)
+depends on exactly this: a filter miss is *proof of absence* and the
+cross-shard probe can be skipped; a filter hit is merely a hint.
 """
 
 from __future__ import annotations
@@ -80,6 +94,46 @@ def contains(f: BloomFilter, keys) -> jax.Array:
     rows = jnp.broadcast_to(block[:, None], bitpos.shape)
     got = f.bits[rows, bitpos]
     return jnp.all(got == 1, axis=-1)
+
+
+def contains_stack(proto: BloomFilter, bits_stack: jax.Array,
+                   owners: jax.Array, keys) -> jax.Array:
+    """Membership of each key in its *owner's* filter, over stacked bits.
+
+    ``bits_stack`` is ``(P, num_blocks, block_bits)`` — one filter plane
+    per shard, all sharing ``proto``'s geometry (k/seed/block_bits) —
+    and ``owners (n,)`` names which plane answers each key.  This is the
+    sharded-lookup admission test: one gather per key against the
+    all-gathered (or host-stacked) filter planes, no all_to_all needed
+    to decide.  Same one-sided guarantee as :func:`contains`.
+    """
+    keys = jnp.asarray(keys)
+    block, bitpos = _positions(proto, keys)
+    rows = jnp.broadcast_to(block[:, None], bitpos.shape)
+    plane = jnp.broadcast_to(jnp.asarray(owners)[:, None], bitpos.shape)
+    got = bits_stack[plane, rows, bitpos]
+    return jnp.all(got == 1, axis=-1)
+
+
+def rebuild_from_table(f: BloomFilter, table) -> BloomFilter:
+    """Fresh filter (same geometry as ``f``) advertising exactly the
+    table's live keys.
+
+    This is the compaction/growth hook closing the staleness loop (see
+    the module docstring): the incremental filter only ever gains bits,
+    so after heavy erase churn it advertises long-dead keys; a rebuild
+    sweeps the live set (``migrate.live_entries`` — quotient geometries
+    decode through the same path migration uses) and re-inserts the
+    *folded key word* (``sv.key_hash_word``), which is also what the
+    incremental insert path feeds the filter — so a rebuilt filter is a
+    subset of the incremental one, never missing a live key.
+    """
+    from repro.core import migrate
+    from repro.core import single_value as sv
+    keys, _, live = migrate.live_entries(table)
+    words = sv.key_hash_word(keys)
+    fresh = dataclasses.replace(f, bits=jnp.zeros_like(f.bits))
+    return insert(fresh, words, mask=live)
 
 
 def fill_fraction(f: BloomFilter) -> jax.Array:

@@ -89,6 +89,38 @@ def retrieve_distributed(table: sv.SingleValueHashTable, keys, axis: str,
     return out_vals, out_found, plan.overflow
 
 
+def retrieve_distributed_filtered(table: sv.SingleValueHashTable, filt,
+                                  keys, axis: str, slack: float = 2.0):
+    """Bloom-filtered distributed retrieve: absent keys die locally.
+
+    ``filt`` is this shard's :class:`~repro.core.bloom.BloomFilter` over
+    its table's live keys (folded key word — see ``bloom.rebuild_from_
+    table``).  The filter planes are all-gathered once (they are tiny
+    next to the table), each query is admission-tested against its
+    *owner's* plane, and only admitted keys enter the all_to_all —
+    masked-out keys answer ``found=False`` locally, which is exact
+    because a bloom miss is proof of absence.  Returns ``(values, found,
+    skips, overflow)`` aligned with the local query batch; ``skips``
+    counts the queries this shard never sent (the saved traffic).
+    """
+    from repro.core import bloom
+    num = axis_size_compat(axis)
+    keys = sv.normalize_key_batch(keys, table.key_words, "keys")
+    owners = owner_of(keys, num, table.key_words)
+    words = sv.key_hash_word(keys)
+    bits_all = jax.lax.all_gather(filt.bits, axis)   # (P, blocks, block_bits)
+    admit = bloom.contains_stack(filt, bits_all, owners, words)
+    recv_keys, _, _, plan = ownership_exchange(
+        keys, (), axis, key_words=table.key_words, slack=slack, mask=admit)
+    vals, found = sv.retrieve(table, recv_keys)
+    vals = sv.normalize_words(vals, table.value_words, "values")
+    out_vals = ownership_return(plan, vals, axis)
+    out_found = ownership_return(plan, found, axis, fill=False)
+    if table.value_words == 1:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_found, jnp.sum(~admit, dtype=_I), plan.overflow
+
+
 def erase_distributed(table: sv.SingleValueHashTable, keys, axis: str,
                       slack: float = 2.0):
     recv_keys, _, recv_mask, plan = ownership_exchange(

@@ -79,19 +79,35 @@ class ExchangePlan:
     cap: int
 
 
-def make_plan(owners: jax.Array, num_parts: int, cap: int) -> ExchangePlan:
+def make_plan(owners: jax.Array, num_parts: int, cap: int,
+              mask: jax.Array | None = None) -> ExchangePlan:
+    """Slot assignment for the padded exchange.
+
+    ``mask`` (optional, (n,) bool) drops elements from the exchange
+    entirely: a masked-out element routes to a virtual overflow segment,
+    so it consumes NO slot in any real segment (a bloom-filtered lookup
+    admitting 10% of a batch really does send 10% of the traffic), its
+    ``slot`` is out-of-range (scatter drops it, the return gather fills),
+    and it never counts as overflow.
+    """
     n = owners.shape[0]
-    counts = jnp.bincount(owners, length=num_parts)
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    # masked-out elements rank inside a virtual segment `num_parts` that
+    # gets no slots; with an all-True mask the math is the unmasked plan
+    owners_eff = jnp.where(mask, owners, num_parts)
+    counts = jnp.bincount(owners_eff, length=num_parts + 1)
     start = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])[:-1]
     # stable rank of each element within its segment
-    order = jnp.argsort(owners, stable=True)
-    rank_sorted = jnp.arange(n) - start[owners[order]]
+    order = jnp.argsort(owners_eff, stable=True)
+    rank_sorted = jnp.arange(n) - start[owners_eff[order]]
     rank = jnp.zeros((n,), rank_sorted.dtype).at[order].set(rank_sorted)
-    ok = rank < cap
+    ok = mask & (rank < cap)
     slot = jnp.where(ok, owners.astype(_I) * cap + rank.astype(_I), num_parts * cap)
     valid = jnp.zeros((num_parts * cap,), bool).at[slot].set(True, mode="drop")
     return ExchangePlan(slot=slot, valid_send=valid,
-                        overflow=jnp.sum(~ok, dtype=_I), cap=cap)
+                        overflow=jnp.sum(mask & (rank >= cap), dtype=_I),
+                        cap=cap)
 
 
 def scatter_to_buffer(plan: ExchangePlan, x: jax.Array, num_parts: int,
@@ -118,7 +134,7 @@ def exchange(buf: jax.Array, axis: str) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def ownership_exchange(keys, payload, axis: str, *, key_words: int = 1,
-                       slack: float = 2.0, fill_key=None):
+                       slack: float = 2.0, fill_key=None, mask=None):
     """Route (key, payload) batches to their owner shard over mesh ``axis``.
 
     Call inside shard_map.  Returns ``(recv_keys, recv_payload, recv_mask,
@@ -129,6 +145,9 @@ def ownership_exchange(keys, payload, axis: str, *, key_words: int = 1,
     results travel the reverse path (all_to_all is its own inverse here)
     via ``ownership_return``.  One shard is the sole writer for every key
     it receives — ownership partitioning as in DESIGN.md §2 / paper §IV-E.
+    ``mask`` pre-filters the batch: masked-out elements never enter the
+    all_to_all (their return-path result is the gather fill) — this is
+    how the bloom front-end kills absent-key traffic locally.
     """
     from repro.core import single_value as sv
     num = axis_size_compat(axis)
@@ -136,7 +155,7 @@ def ownership_exchange(keys, payload, axis: str, *, key_words: int = 1,
     n = keys.shape[0]
     cap = int(np.ceil(n / num * slack))
     owners = owner_of(keys, num, key_words)
-    plan = make_plan(owners, num, cap)
+    plan = make_plan(owners, num, cap, mask=mask)
     kbuf = scatter_to_buffer(
         plan, keys, num, fill=EMPTY_KEY if fill_key is None else fill_key)
     recv_keys = exchange(kbuf, axis)

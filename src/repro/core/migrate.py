@@ -169,6 +169,25 @@ def _sweep_oa(table):
             jnp.where(live[:, None], vp, 0), live)
 
 
+def live_entries(table):
+    """Public live-set sweep: ``(keys (c, kw), values (c, vw), live (c,))``.
+
+    The one arena walk every consumer of "what does this table hold"
+    shares: migration rebuilds from it, ``bloom.rebuild_from_table``
+    re-advertises it, and elastic resharding (``serving.elastic``)
+    re-routes it onto a resized mesh.  Open-addressing stores sweep the
+    slot arena (quotient geometries decode the stored word back to the
+    key — exact, the mixer is a bijection); bucket-list tables linearize
+    every chain into a per-key-contiguous stream in original insertion
+    order (values are ``(c, 1)``).  Masked-out rows are zeroed, so the
+    result is sentinel-free and safe to feed straight into bulk inserts.
+    """
+    if isinstance(table, bl.BucketListHashTable):
+        keys, vals, live = _bucket_stream(table)
+        return keys, vals[:, None], live
+    return _sweep_oa(table)
+
+
 def _replace_max_probes(table):
     """max_probes for the migrated table: a full-table default follows the
     new geometry; an explicit tighter bound is preserved."""
@@ -218,16 +237,14 @@ def _migrate_multi(table, new_capacity):
     return fresh, jnp.sum(live, dtype=_I)
 
 
-def _migrate_bucket(table, new_key_capacity, new_pool_capacity):
-    """Bucket-list migration: chain walk -> ordered (key, value) stream.
+def _bucket_stream(table):
+    """Bucket-list chain walk -> ordered (key, value) stream.
 
     The key store's slot arena yields every live key and its handle; one
     ``chain_arena`` walk stamps each pool slot with (owning key-slot,
     head-first value rank).  A single scatter linearizes the pool into a
-    per-key-contiguous stream in original insertion order, and the bulk
-    insert rebuilds the table — re-bucketing every chain from the growth
-    schedule's first size, so the fresh pool is dense (tail slack and
-    links of the old layout are reclaimed).
+    per-key-contiguous stream in original insertion order.  Returns
+    ``(stream_keys (pool_cap, kw), stream_vals (pool_cap,), stream_mask)``.
     """
     ks = table.key_store
     kp = ks.ops.key_planes(ks.store).reshape(ks.key_words, -1).T
@@ -249,6 +266,17 @@ def _migrate_bucket(table, new_key_capacity, new_pool_capacity):
     stream_keys = jnp.zeros((pool_cap, ks.key_words), _U).at[pos].set(
         jnp.where((qa < kcap)[:, None], kp[owner], 0), mode="drop")
     stream_mask = jnp.arange(pool_cap) < total
+    return stream_keys, stream_vals, stream_mask
+
+
+def _migrate_bucket(table, new_key_capacity, new_pool_capacity):
+    """Bucket-list migration: the ``_bucket_stream`` walk feeds the bulk
+    insert, which rebuilds the table — re-bucketing every chain from the
+    growth schedule's first size, so the fresh pool is dense (tail slack
+    and links of the old layout are reclaimed)."""
+    ks = table.key_store
+    stream_keys, stream_vals, stream_mask = _bucket_stream(table)
+    total = jnp.sum(stream_mask, dtype=_I)
 
     fresh = bl.create(new_key_capacity, new_pool_capacity, s0=table.s0,
                       growth=table.growth, window=ks.window,

@@ -1,0 +1,449 @@
+"""Elastic sharded serving: the table as a service.
+
+The paper's weak-scaling story (fig6) puts the interesting regime for a
+heavily-trafficked hash table in the distributed layout: every key owned
+by exactly one shard, batches routed by owner, one writer per key.  This
+module is that layout as a *long-lived service*: a :class:`ShardedTable`
+of P same-geometry single-value shards that
+
+- **routes** inserts/lookups/erases through the same multisplit ->
+  padded-buffer plan the mesh path uses (``core.exchange``), here over
+  *simulated* shards in one process — the data movement and ownership
+  math are identical to the shard_map path in ``core.distributed``, so
+  properties proven here transfer;
+- **filters** cross-shard lookups through per-shard blocked bloom
+  filters (``core.bloom``): each query is admission-tested against its
+  owner's filter *before* routing, so absent-key probes die locally and
+  never consume exchange slots (the NUMA-scaling layout from PAPERS.md).
+  Filters are maintained incrementally on insert and rebuilt from the
+  live set on compaction (erase leaves them permissive — see the bloom
+  module docstring for the staleness contract);
+- **checkpoints** via ``core.snapshot``: ``save``/``load`` write one
+  versioned, checksummed snapshot per shard plus a manifest, and
+  ``load`` onto a *different* shard count reshards — every live entry
+  re-routed by ``owner_of`` over the resized mesh, each shard ending
+  with exactly its owned keys (``check_ownership`` asserts this).
+
+The serve step (insert batch + filtered lookup batch + erase batch) is
+one jitted, donated graph — the shard stores alias input->output, so
+steady-state serving never copies an arena — with the same
+zero-retrace contract as ``serving.serve_loop``.
+
+Registry counters: ``elastic.bloom_probes`` / ``elastic.bloom_skips`` /
+``elastic.bloom_false_positives`` / ``elastic.hits`` /
+``elastic.reshards``.  See docs/ELASTIC.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom, exchange, hashing, migrate, snapshot
+from repro.core import single_value as sv
+from repro.core.common import (
+    EMPTY_KEY,
+    STATUS_MASKED,
+    register_struct,
+    static_field,
+)
+from repro.obs.registry import REGISTRY
+
+_U = jnp.uint32
+_I = jnp.int32
+
+#: manifest version for ``save``/``load`` directories
+ELASTIC_VERSION = 1
+_MANIFEST = "manifest.json"
+
+
+@register_struct
+@dataclasses.dataclass
+class ShardedTable:
+    """P same-geometry single-value shards + their bloom filters.
+
+    ``shards``/``filters`` are pytree children (tuples), so the whole
+    service state jits, donates and snapshots as one value.  ``slack``
+    is the exchange capacity factor (static: it fixes buffer shapes).
+    """
+    shards: tuple          # P x sv.SingleValueHashTable
+    filters: tuple         # P x bloom.BloomFilter
+    num_shards: int = static_field()
+    slack: float = static_field()
+
+    @property
+    def key_words(self) -> int:
+        return self.shards[0].key_words
+
+    @property
+    def value_words(self) -> int:
+        return self.shards[0].value_words
+
+
+def create(num_shards: int, capacity_per_shard: int, *,
+           bloom_bits_per_key: int = 16, slack: float = 2.0,
+           **table_kwargs) -> ShardedTable:
+    """A fresh sharded service; ``table_kwargs`` pass to ``sv.create``."""
+    shards = tuple(sv.create(capacity_per_shard, **table_kwargs)
+                   for _ in range(num_shards))
+    filters = tuple(
+        bloom.create(bloom_bits_per_key * shards[0].capacity)
+        for _ in range(num_shards))
+    return ShardedTable(shards=shards, filters=filters,
+                        num_shards=num_shards, slack=slack)
+
+
+def count(st: ShardedTable) -> jax.Array:
+    """Total live entries across shards."""
+    return sum(t.count for t in st.shards)
+
+
+# ---------------------------------------------------------------------------
+# owner routing over simulated shards
+# ---------------------------------------------------------------------------
+
+def _route(st: ShardedTable, keys, mask=None):
+    """keys -> (plan, (P, cap, kw) key buffer, (P, cap) valid, owners, words).
+
+    The exact ``owner_of -> make_plan -> scatter`` block the mesh path
+    runs inside shard_map; with simulated shards the (P*cap) buffer *is*
+    the post-all_to_all layout, reshaped so axis 0 is the shard.
+    """
+    keys = sv.normalize_key_batch(keys, st.key_words, "keys")
+    words = sv.key_hash_word(keys)
+    owners = hashing.hash_owner(words, st.num_shards)
+    n = keys.shape[0]
+    p = st.num_shards
+    cap = int(math.ceil(n / p * st.slack))
+    plan = exchange.make_plan(owners, p, cap, mask=mask)
+    kbuf = exchange.scatter_to_buffer(plan, keys, p, fill=EMPTY_KEY)
+    return (plan, kbuf.reshape(p, cap, st.key_words),
+            plan.valid_send.reshape(p, cap), owners, words)
+
+
+def insert(st: ShardedTable, keys, values, mask=None):
+    """Route (key, value) pairs to their owners, insert, update filters.
+
+    Returns ``(st, status)`` with ``status`` aligned to the input batch
+    (``STATUS_MASKED`` for masked-out or overflowed elements).  Each
+    owner's bloom filter learns the folded key word incrementally — the
+    same word ``rebuild_from_table`` re-inserts, so incremental and
+    rebuilt filters agree on every live key.
+    """
+    values = sv.normalize_words(values, st.value_words, "values")
+    plan, kbuf, mbuf, owners, words = _route(st, keys, mask=mask)
+    p, cap = st.num_shards, plan.cap
+    vbuf = exchange.scatter_to_buffer(plan, values, p) \
+        .reshape(p, cap, st.value_words)
+    new_shards, statuses = [], []
+    for i, t in enumerate(st.shards):
+        t, s = sv.insert(t, kbuf[i], vbuf[i], mask=mbuf[i])
+        new_shards.append(t)
+        statuses.append(s)
+    base = jnp.ones(words.shape, bool) if mask is None else mask
+    new_filters = tuple(
+        bloom.insert(f, words, mask=base & (owners == _U(i)))
+        for i, f in enumerate(st.filters))
+    status = exchange.gather_from_buffer(
+        plan, jnp.concatenate(statuses), fill=STATUS_MASKED)
+    return dataclasses.replace(st, shards=tuple(new_shards),
+                               filters=new_filters), status
+
+
+def lookup(st: ShardedTable, keys):
+    """Bloom-filtered sharded lookup.
+
+    Each query is admission-tested against its owner shard's filter
+    BEFORE routing; a filter miss is proof of absence, so the query is
+    answered ``found=False`` locally and consumes no exchange slot.
+    Returns ``(values, found, stats)`` where ``stats`` carries in-graph
+    counters: ``probes`` (batch size), ``skips`` (queries killed by the
+    filter), ``hits`` (found), ``false_positives`` (admitted but not
+    found — filter FP plus erase-staleness), ``overflow``.
+    """
+    keys_n = sv.normalize_key_batch(keys, st.key_words, "keys")
+    words = sv.key_hash_word(keys_n)
+    owners = hashing.hash_owner(words, st.num_shards)
+    bits_stack = jnp.stack([f.bits for f in st.filters])
+    admit = bloom.contains_stack(st.filters[0], bits_stack, owners, words)
+    plan = exchange.make_plan(owners, st.num_shards, _lookup_cap(st, keys_n),
+                              mask=admit)
+    p, cap = st.num_shards, plan.cap
+    kbuf = exchange.scatter_to_buffer(plan, keys_n, p, fill=EMPTY_KEY) \
+        .reshape(p, cap, st.key_words)
+    vals, founds = [], []
+    for i, t in enumerate(st.shards):
+        v, fnd = sv.retrieve(t, kbuf[i])
+        vals.append(sv.normalize_words(v, st.value_words, "values"))
+        founds.append(fnd)
+    # skipped/unmapped queries take the gather fill: found=False, value 0
+    out_vals = exchange.gather_from_buffer(plan, jnp.concatenate(vals))
+    out_found = exchange.gather_from_buffer(
+        plan, jnp.concatenate(founds), fill=False)
+    if st.value_words == 1:
+        out_vals = out_vals[:, 0]
+    stats = {"probes": jnp.asarray(keys_n.shape[0], _I),
+             "skips": jnp.sum(~admit, dtype=_I),
+             "hits": jnp.sum(out_found, dtype=_I),
+             "false_positives": jnp.sum(admit & ~out_found, dtype=_I),
+             "overflow": plan.overflow}
+    return out_vals, out_found, stats
+
+
+def _lookup_cap(st: ShardedTable, keys_n) -> int:
+    return int(math.ceil(keys_n.shape[0] / st.num_shards * st.slack))
+
+
+def erase(st: ShardedTable, keys):
+    """Route erases to owners.  Filters are deliberately NOT touched —
+    a bloom filter cannot delete (shared bits); the dead key keeps
+    advertising until ``compact_all`` rebuilds from the live set.
+    Returns ``(st, erased)`` aligned with the input batch.
+    """
+    plan, kbuf, mbuf, _, _ = _route(st, keys)
+    new_shards, eras = [], []
+    for i, t in enumerate(st.shards):
+        t, e = sv.erase(t, kbuf[i], mask=mbuf[i])
+        new_shards.append(t)
+        eras.append(e)
+    erased = exchange.gather_from_buffer(
+        plan, jnp.concatenate(eras), fill=False)
+    return dataclasses.replace(st, shards=tuple(new_shards)), erased
+
+
+# ---------------------------------------------------------------------------
+# maintenance: compaction (+ filter rebuild), resharding
+# ---------------------------------------------------------------------------
+
+def compact_all(st: ShardedTable) -> ShardedTable:
+    """Compact every shard and rebuild its filter from the live set.
+
+    This is the hook that closes the bloom staleness loop: after the
+    rebuild a shard's filter stops advertising erased keys, so the
+    false-positive rate recovers to the live-set baseline.
+    """
+    shards = tuple(migrate.compact(t) for t in st.shards)
+    filters = tuple(bloom.rebuild_from_table(f, t)
+                    for f, t in zip(st.filters, shards))
+    return dataclasses.replace(st, shards=shards, filters=filters)
+
+
+def check_ownership(st: ShardedTable) -> None:
+    """Assert every shard holds exactly the keys it owns (host-side)."""
+    for i, t in enumerate(st.shards):
+        keys, _, live = migrate.live_entries(t)
+        owners = hashing.hash_owner(sv.key_hash_word(keys), st.num_shards)
+        stray = int(jnp.sum(live & (owners != _U(i)), dtype=_I))
+        if stray:
+            raise AssertionError(
+                f"shard {i} holds {stray} keys owned elsewhere — "
+                "ownership partition violated")
+
+
+def reshard(st: ShardedTable, new_num_shards: int, *,
+            capacity_per_shard: int | None = None,
+            bloom_bits_per_key: int = 16) -> ShardedTable:
+    """Re-partition every live entry onto ``new_num_shards`` shards.
+
+    The elastic move: sweep each shard's live set, concatenate, and
+    replay the ownership exchange over the resized mesh — ``owner_of``
+    is a pure function of (key, P), so the new partition is exactly the
+    one a fresh cluster of P' shards would build.  Filters are derived
+    state and are rebuilt tight.  Raises if any live entry fails to
+    land (capacity too small for the skew).
+    """
+    sweeps = [migrate.live_entries(t) for t in st.shards]
+    keys = jnp.concatenate([s[0] for s in sweeps])
+    vals = jnp.concatenate([s[1] for s in sweeps])
+    live = jnp.concatenate([s[2] for s in sweeps])
+    total = int(jnp.sum(live, dtype=_I))
+    cap = capacity_per_shard or st.shards[0].capacity
+    kw = {f: getattr(st.shards[0], f)
+          for f in ("key_words", "value_words", "window", "scheme",
+                    "layout", "seed", "backend")}
+    # a whole-table sweep routed at once needs slack >= the skew ratio;
+    # exact per-segment sizing keeps the reshard overflow-free
+    n = keys.shape[0]
+    owners = hashing.hash_owner(sv.key_hash_word(keys), new_num_shards)
+    seg = int(jnp.max(jnp.bincount(
+        jnp.where(live, owners, _U(new_num_shards)).astype(_I),
+        length=new_num_shards + 1)[:new_num_shards]))
+    reslack = max(st.slack, new_num_shards * max(seg, 1) / max(n, 1) * 1.01)
+    fresh = create(new_num_shards, cap, bloom_bits_per_key=bloom_bits_per_key,
+                   slack=reslack, **kw)
+    fresh, _ = insert(fresh, keys, vals, mask=live)
+    fresh = dataclasses.replace(fresh, slack=st.slack)
+    landed = int(count(fresh))
+    if landed != total:
+        raise ValueError(
+            f"reshard({st.num_shards}->{new_num_shards}) landed {landed} of "
+            f"{total} live entries — raise capacity_per_shard")
+    REGISTRY.counter("elastic.reshards").inc(1)
+    return fresh
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/restore (one snapshot per shard + manifest)
+# ---------------------------------------------------------------------------
+
+def save(st: ShardedTable, path: str, *,
+         writer: snapshot.SnapshotWriter | None = None) -> None:
+    """Checkpoint the service to directory ``path``.
+
+    One ``core.snapshot`` file per shard (versioned, checksummed,
+    bit-exact) plus ``manifest.json`` recording the mesh and filter
+    geometry.  With ``writer`` the per-shard writes go through the async
+    double-buffered path (call ``writer.flush()`` for durability);
+    filters are derived state and are rebuilt on load, not serialized.
+    """
+    os.makedirs(path, exist_ok=True)
+    f0 = st.filters[0]
+    manifest = {"version": ELASTIC_VERSION, "num_shards": st.num_shards,
+                "slack": st.slack,
+                "bloom": {"num_blocks": f0.num_blocks,
+                          "block_bits": f0.block_bits,
+                          "k": f0.k, "seed": f0.seed}}
+    tmp = os.path.join(path, f"{_MANIFEST}.tmp")
+    with open(tmp, "w") as fh:
+        json.dump(manifest, fh)
+    os.replace(tmp, os.path.join(path, _MANIFEST))
+    for i, t in enumerate(st.shards):
+        dst = os.path.join(path, f"shard_{i}.snap")
+        if writer is None:
+            snapshot.save(t, dst)
+        else:
+            writer.save(t, dst)
+
+
+def load(path: str, *, num_shards: int | None = None,
+         capacity_per_shard: int | None = None) -> ShardedTable:
+    """Restore a service from ``save`` output.
+
+    With ``num_shards=None`` (or equal to the saved count) every shard
+    restores bit-exactly (``core.snapshot`` guarantees) and filters are
+    rebuilt from the live sets.  A *different* ``num_shards`` restores
+    the saved shards and then :func:`reshard`\\ s onto the new mesh.
+    Raises :class:`~repro.core.snapshot.SnapshotError` on torn or
+    corrupted state — never a silently wrong service.
+    """
+    mf = os.path.join(path, _MANIFEST)
+    if not os.path.exists(mf):
+        raise snapshot.SnapshotError(f"no {_MANIFEST} in {path!r}")
+    with open(mf) as fh:
+        try:
+            manifest = json.load(fh)
+        except json.JSONDecodeError as e:
+            raise snapshot.SnapshotError(
+                f"corrupted {_MANIFEST} in {path!r}: {e}") from e
+    if manifest.get("version") != ELASTIC_VERSION:
+        raise snapshot.SnapshotError(
+            f"unsupported elastic manifest version "
+            f"{manifest.get('version')!r}")
+    saved_p = manifest["num_shards"]
+    shards = tuple(snapshot.load(os.path.join(path, f"shard_{i}.snap"))
+                   for i in range(saved_p))
+    b = manifest["bloom"]
+    filters = tuple(
+        bloom.rebuild_from_table(
+            bloom.BloomFilter(
+                bits=jnp.zeros((b["num_blocks"], b["block_bits"]), jnp.uint8),
+                num_blocks=b["num_blocks"], block_bits=b["block_bits"],
+                k=b["k"], seed=b["seed"]),
+            t)
+        for t in shards)
+    st = ShardedTable(shards=shards, filters=filters, num_shards=saved_p,
+                      slack=manifest["slack"])
+    if num_shards is not None and num_shards != saved_p:
+        bits_per_key = (b["num_blocks"] * b["block_bits"]
+                        // max(shards[0].capacity, 1))
+        st = reshard(st, num_shards,
+                     capacity_per_shard=capacity_per_shard,
+                     bloom_bits_per_key=max(bits_per_key, 1))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# the serve step: one donated graph, zero retraces after warmup
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_serve_step():
+    """Jitted mixed-traffic step over a donated :class:`ShardedTable`.
+
+    Upsert a batch, answer a bloom-filtered lookup batch, erase a batch.
+    Donation aliases every shard store input->output; fixed batch shapes
+    mean one executable per service geometry.  Memoized so all callers
+    share one jitted wrapper (the warmup compile pays for every run).
+    """
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def serve_step(st, ins_keys, ins_vals, get_keys, del_keys):
+        st, status = insert(st, ins_keys, ins_vals)
+        vals, found, stats = lookup(st, get_keys)
+        st, erased = erase(st, del_keys)
+        return st, (status, vals, found, erased, stats)
+
+    return serve_step
+
+
+def serve_traffic(st: ShardedTable, traffic, *, rate_hz: float | None = None,
+                  tracer=None):
+    """Drive the donated serve step over a traffic iterable.
+
+    ``traffic`` yields ``(ins_keys, ins_vals, get_keys, del_keys)``
+    fixed-shape batches.  ``rate_hz`` paces step *starts* open-loop (a
+    slow step eats into the next slot — honest serving latency);
+    ``None`` runs closed-loop.  Every step is spanned
+    (``elastic.serve_step``) and blocked, so ``tracer.percentiles``
+    gives true p50/p95/p99.  Bloom counters accumulate into the global
+    REGISTRY (``elastic.bloom_probes/skips/false_positives``,
+    ``elastic.hits``).  Returns ``(st, tracer, steps, totals)`` where
+    ``totals`` is the summed stats dict; raises on retrace after warmup
+    or on exchange overflow (undersized ``slack``).
+    """
+    import time
+
+    from repro.obs.trace import Tracer
+
+    if tracer is None:
+        tracer = Tracer()
+    step = make_serve_step()
+    period = 1.0 / rate_hz if rate_hz else 0.0
+    next_t = time.perf_counter()
+    steps = 0
+    totals = {k: 0 for k in ("probes", "skips", "hits", "false_positives",
+                             "overflow")}
+    for batch in traffic:
+        if period:
+            now = time.perf_counter()
+            if now < next_t:
+                time.sleep(next_t - now)
+            next_t += period
+        with tracer.span("elastic.serve_step", step=steps):
+            st, outs = step(st, *batch)
+            jax.block_until_ready(outs)
+        stats = outs[-1]
+        for k in totals:
+            totals[k] += int(stats[k])
+        if totals["overflow"]:
+            raise AssertionError(
+                "elastic exchange overflowed — raise ShardedTable.slack")
+        steps += 1
+        if steps == 1:
+            compilations = step._cache_size()
+        elif step._cache_size() != compilations:
+            raise AssertionError(
+                f"elastic serve step retraced mid-stream: cache "
+                f"{compilations} -> {step._cache_size()}")
+    REGISTRY.counter("elastic.bloom_probes").inc(totals["probes"])
+    REGISTRY.counter("elastic.bloom_skips").inc(totals["skips"])
+    REGISTRY.counter("elastic.bloom_false_positives").inc(
+        totals["false_positives"])
+    REGISTRY.counter("elastic.hits").inc(totals["hits"])
+    return st, tracer, steps, totals

@@ -591,3 +591,115 @@ class TestLayoutEquivalence:
         for layout in ("aos", "packed"):
             assert (results[layout][0] == a[0]).all()
             assert (results[layout][1] == a[1]).all()
+
+
+class TestSnapshotProperties:
+    """Checkpoint/restore round-trips under arbitrary op interleavings."""
+
+    @SETTINGS
+    @given(ops=ops_st(), layout=st.sampled_from(["soa", "aos", "packed"]))
+    def test_insert_snapshot_erase_restore_retrieve(self, ops, layout):
+        """Snapshot mid-sequence, keep mutating, restore: the restored
+        table answers exactly as the table did at snapshot time."""
+        from repro.core import snapshot
+        t = sv.create(512, window=16, layout=layout)
+        model = {}
+        for op, k, v in ops:
+            ka = jnp.asarray([k], jnp.uint32)
+            if op == "insert":
+                t, _ = sv.insert(t, ka, jnp.asarray([v], jnp.uint32))
+                model[k] = v & 0xFFFFFFFF
+            else:
+                t, _ = sv.erase(t, ka)
+                model.pop(k, None)
+        blob = snapshot.snapshot_bytes(t)
+        frozen = dict(model)
+        # post-snapshot mutations that must NOT leak into the restore
+        for k in list(model)[: len(model) // 2]:
+            t, _ = sv.erase(t, jnp.asarray([k], jnp.uint32))
+        t, _ = sv.insert(t, jnp.asarray([41], jnp.uint32),
+                         jnp.asarray([0], jnp.uint32))
+        restored = snapshot.restore_bytes(blob)
+        assert int(restored.count) == len(frozen)
+        universe = jnp.arange(1, 42, dtype=jnp.uint32)
+        got, found = sv.retrieve(restored, universe)
+        for i, k in enumerate(range(1, 42)):
+            assert bool(found[i]) == (k in frozen)
+            if k in frozen:
+                assert int(got[i]) == frozen[k]
+
+    @SETTINGS
+    @given(ops=ops_st())
+    def test_snapshot_bytes_deterministic(self, ops):
+        """Same table state => byte-identical snapshot (stable manifest
+        ordering), so checksums are meaningful across processes."""
+        from repro.core import snapshot
+        t = sv.create(256, window=8)
+        for op, k, v in ops:
+            ka = jnp.asarray([k], jnp.uint32)
+            if op == "insert":
+                t, _ = sv.insert(t, ka, jnp.asarray([v], jnp.uint32))
+            else:
+                t, _ = sv.erase(t, ka)
+        assert snapshot.snapshot_bytes(t) == snapshot.snapshot_bytes(t)
+
+
+class TestShardedBloomInvariant:
+    """The elastic front-end's one-sided filter contract: every key live
+    in a shard's table is contains=True in that shard's filter, across
+    arbitrary insert/erase/compaction sequences."""
+
+    @SETTINGS
+    @given(ops=ops_st(), num_shards=st.sampled_from([2, 4]))
+    def test_live_keys_always_advertised(self, ops, num_shards):
+        from repro.serving import elastic
+        st_ = elastic.create(num_shards, 512, window=16)
+        model = {}
+        compact_every = 7
+        for i, (op, k, v) in enumerate(ops):
+            ka = jnp.asarray([k], jnp.uint32)
+            if op == "insert":
+                st_, _ = elastic.insert(st_, ka,
+                                        jnp.asarray([v], jnp.uint32))
+                model[k] = v & 0xFFFFFFFF
+            else:
+                st_, _ = elastic.erase(st_, ka)
+                model.pop(k, None)
+            if i % compact_every == compact_every - 1:
+                st_ = elastic.compact_all(st_)   # filter rebuild point
+            if not model:
+                continue
+            live = jnp.asarray(sorted(model), jnp.uint32)
+            words = sv.key_hash_word(
+                sv.normalize_key_batch(live, 1, "keys"))
+            owners = hashing.hash_owner(words, num_shards)
+            bits = jnp.stack([f.bits for f in st_.filters])
+            admitted = bf.contains_stack(st_.filters[0], bits, owners,
+                                         words)
+            assert bool(jnp.all(admitted)), \
+                "live key not advertised by its owner's filter"
+        # and the lookup path agrees with the dict model end-to-end
+        universe = jnp.arange(1, 41, dtype=jnp.uint32)
+        got, found, stats = elastic.lookup(st_, universe)
+        assert int(stats["overflow"]) == 0
+        for i, k in enumerate(range(1, 41)):
+            assert bool(found[i]) == (k in model)
+            if k in model:
+                assert int(got[i]) == model[k]
+
+    @SETTINGS
+    @given(keys=keys_st)
+    def test_rebuild_is_subset_of_incremental(self, keys):
+        """rebuild_from_table never advertises MORE than the incremental
+        filter: rebuilt bits are a subset (erase-staleness only shrinks)."""
+        t = sv.create(512, window=16)
+        ka = jnp.asarray(np.unique(np.asarray(keys, np.uint32)))
+        t, _ = sv.insert(t, ka, ka)
+        f_inc = bf.insert(bf.create(1 << 12), sv.key_hash_word(
+            sv.normalize_key_batch(ka, 1, "keys")))
+        half = ka[: ka.shape[0] // 2]
+        if half.shape[0]:
+            t, _ = sv.erase(t, half)
+        f_reb = bf.rebuild_from_table(f_inc, t)
+        assert bool(jnp.all(f_inc.bits >= f_reb.bits)), \
+            "rebuilt filter set a bit the incremental filter never did"
